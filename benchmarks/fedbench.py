@@ -1,0 +1,202 @@
+"""Shared harness for the paper-table benchmarks.
+
+Runs a complete federated experiment (threaded clients sharing an in-memory
+weight store — the paper's own simulation setup) at reduced scale and reports
+final global-test accuracy + wall time. All knobs mirror the paper's §4:
+dataset, skew, node count, strategy, sync/async.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from repro.core import (
+    AsyncFederatedNode,
+    FederatedCallback,
+    InMemoryFolder,
+    SyncFederatedNode,
+    run_threaded,
+)
+from repro.core.partition import partition_dataset, partition_sequence_dataset
+from repro.core.strategies import get_strategy
+from repro.data import (
+    batch_iterator,
+    lm_batch_iterator,
+    make_synthetic_cifar,
+    make_synthetic_mnist,
+    make_synthetic_wikitext,
+)
+from repro.models.cnn import MnistCNN, ResNet
+from repro.models import build_model
+from repro.configs import get_config
+from repro.optim import adam, adamw
+from repro.training import Trainer
+
+
+@dataclass
+class FedResult:
+    name: str
+    accuracy_mean: float
+    accuracy_std: float
+    wall_seconds: float
+    per_node_accuracy: list
+
+
+def _make_image_model(dataset_name: str):
+    if dataset_name == "mnist":
+        return MnistCNN()
+    return ResNet(blocks_per_stage=1)  # reduced ResNet for CPU budget
+
+
+def _image_dataset(dataset_name: str, seed: int, num_train: int, num_test: int):
+    if dataset_name == "mnist":
+        return make_synthetic_mnist(num_train, num_test, seed=seed)
+    return make_synthetic_cifar(num_train, num_test, seed=seed)
+
+
+def run_image_experiment(
+    *,
+    dataset: str = "mnist",
+    mode: str = "async",
+    strategy: str = "fedavg",
+    num_nodes: int = 2,
+    skew: float = 0.9,
+    epochs: int = 3,
+    steps_per_epoch: int = 25,
+    batch_size: int = 32,
+    lr: float = 1e-3,
+    seed: int = 0,
+    num_train: int = 4000,
+    num_test: int = 800,
+    slowdowns: list | None = None,
+) -> FedResult:
+    data = _image_dataset(dataset, seed, num_train, num_test)
+    shards = partition_dataset(data.x_train, data.y_train, num_nodes, skew, seed=seed)
+    folder = InMemoryFolder()
+    accs: dict[str, float] = {}
+
+    def client(i: int):
+        model = _make_image_model(dataset)
+        # common initialization across clients (FedAvg requirement);
+        # per-node seeds only drive data order
+        params = model.init(jax.random.PRNGKey(seed * 101))
+        trainer = Trainer(
+            loss_fn=lambda p, b, r: model.loss(p, b),
+            optimizer=adam(lr),
+            init_params=params,
+            seed=seed * 101 + i,
+            name=f"n{i}",
+            slowdown=(slowdowns or [0.0] * num_nodes)[i],
+        )
+        strat = get_strategy(strategy)
+        if mode == "sync":
+            node = SyncFederatedNode(strategy=strat, shared_folder=folder, node_id=f"n{i}",
+                                     num_nodes=num_nodes, timeout=600)
+        else:
+            node = AsyncFederatedNode(strategy=strat, shared_folder=folder, node_id=f"n{i}")
+        cb = FederatedCallback(node, num_examples_per_epoch=steps_per_epoch * batch_size)
+        x, y = shards[i]
+        data_fn = lambda epoch: batch_iterator(x, y, batch_size=batch_size, seed=i, epoch=epoch)
+        trainer.fit(data_fn, epochs=epochs, steps_per_epoch=steps_per_epoch, callbacks=[cb])
+        logits = model.apply(trainer.params, data.x_test)
+        accs[f"n{i}"] = float((np.argmax(np.asarray(logits), -1) == data.y_test).mean())
+
+    t0 = time.time()
+    results = run_threaded([lambda i=i: client(i) for i in range(num_nodes)])
+    wall = time.time() - t0
+    errors = [r for r in results if r.error]
+    if errors:
+        raise RuntimeError(f"client failed: {errors[0].traceback}")
+    vals = [accs[f"n{i}"] for i in range(num_nodes)]
+    return FedResult(
+        name=f"{dataset}/{mode}/{strategy}/n{num_nodes}/skew{skew}",
+        accuracy_mean=float(np.mean(vals)),
+        accuracy_std=float(np.std(vals)),
+        wall_seconds=wall,
+        per_node_accuracy=vals,
+    )
+
+
+def run_centralized_image(*, dataset="mnist", epochs=3, steps_per_epoch=50,
+                          batch_size=32, lr=1e-3, seed=0,
+                          num_train=4000, num_test=800) -> float:
+    data = _image_dataset(dataset, seed, num_train, num_test)
+    model = _make_image_model(dataset)
+    trainer = Trainer(loss_fn=lambda p, b, r: model.loss(p, b), optimizer=adam(lr),
+                      init_params=model.init(jax.random.PRNGKey(seed)), seed=seed)
+    data_fn = lambda epoch: batch_iterator(data.x_train, data.y_train,
+                                           batch_size=batch_size, seed=seed, epoch=epoch)
+    trainer.fit(data_fn, epochs=epochs, steps_per_epoch=steps_per_epoch)
+    logits = model.apply(trainer.params, data.x_test)
+    return float((np.argmax(np.asarray(logits), -1) == data.y_test).mean())
+
+
+def run_lm_experiment(
+    *,
+    mode: str = "async",
+    strategy: str = "fedavg",
+    num_nodes: int = 2,
+    epochs: int = 3,
+    steps_per_epoch: int = 20,
+    batch_size: int = 8,
+    seq_len: int = 64,
+    vocab: int = 256,
+    lr: float = 1e-3,
+    seed: int = 0,
+) -> FedResult:
+    cfg = get_config("pythia-14m").replace(vocab_size=vocab)
+    data = make_synthetic_wikitext(vocab_size=vocab, train_tokens=80_000,
+                                  test_tokens=8_000, seed=seed)
+    shards = partition_sequence_dataset(data.train_tokens, num_nodes)
+    folder = InMemoryFolder()
+    accs: dict[str, float] = {}
+
+    def evaluate(params):
+        model = build_model(cfg)
+        batch_accs = []
+        for i, batch in enumerate(lm_batch_iterator(data.test_tokens, batch_size=8,
+                                                    seq_len=seq_len, seed=7)):
+            if i >= 4:
+                break
+            _, metrics = model.loss(params, batch)
+            batch_accs.append(float(metrics["accuracy"]))
+        return float(np.mean(batch_accs))
+
+    def client(i: int):
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(seed * 77))  # common init
+        trainer = Trainer(loss_fn=lambda p, b, r: model.loss(p, b), optimizer=adamw(lr),
+                          init_params=params, seed=seed * 77 + i, name=f"n{i}")
+        strat = get_strategy(strategy)
+        if mode == "sync":
+            node = SyncFederatedNode(strategy=strat, shared_folder=folder, node_id=f"n{i}",
+                                     num_nodes=num_nodes, timeout=600)
+        else:
+            node = AsyncFederatedNode(strategy=strat, shared_folder=folder, node_id=f"n{i}")
+        cb = FederatedCallback(node, num_examples_per_epoch=steps_per_epoch * batch_size)
+        data_fn = lambda epoch: lm_batch_iterator(shards[i], batch_size=batch_size,
+                                                  seq_len=seq_len, seed=i, epoch=epoch)
+        trainer.fit(data_fn, epochs=epochs, steps_per_epoch=steps_per_epoch, callbacks=[cb])
+        accs[f"n{i}"] = evaluate(trainer.params)
+
+    t0 = time.time()
+    results = run_threaded([lambda i=i: client(i) for i in range(num_nodes)])
+    wall = time.time() - t0
+    errors = [r for r in results if r.error]
+    if errors:
+        raise RuntimeError(f"client failed: {errors[0].traceback}")
+    vals = [accs[f"n{i}"] for i in range(num_nodes)]
+    return FedResult(
+        name=f"lm/{mode}/{strategy}/n{num_nodes}",
+        accuracy_mean=float(np.mean(vals)),
+        accuracy_std=float(np.std(vals)),
+        wall_seconds=wall,
+        per_node_accuracy=vals,
+    )
+
+
+def csv_row(name: str, us_per_call: float, derived) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,112 @@
+"""Roofline report generator: reads dry-run JSONL records and renders the
+§Dry-run and §Roofline tables for EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m benchmarks.roofline results/dryrun_*.jsonl
+    PYTHONPATH=src python -m benchmarks.roofline --markdown ... > tables.md
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import sys
+
+
+def load(paths):
+    records = {}
+    for pattern in paths:
+        for path in sorted(glob.glob(pattern)):
+            with open(path) as f:
+                for line in f:
+                    r = json.loads(line)
+                    records[(r["arch"], r["shape"], r["mesh"])] = r  # last wins
+    return records
+
+
+def fmt_bytes(b):
+    if b >= 2**30:
+        return f"{b / 2**30:.1f}G"
+    if b >= 2**20:
+        return f"{b / 2**20:.1f}M"
+    return f"{b / 2**10:.0f}K"
+
+
+def fmt_s(s):
+    if s >= 1:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.1f}ms"
+    return f"{s * 1e6:.0f}us"
+
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def render(records, markdown=False):
+    sep = " | " if markdown else "  "
+    rows = []
+    header = ["arch", "shape", "mesh", "ok", "compute", "memory", "collective",
+              "bound", "useful", "temp/chip", "args/chip"]
+    rows.append(header)
+    archs = sorted({k[0] for k in records})
+    for arch in archs:
+        for shape in SHAPE_ORDER:
+            for mesh in ("16x16", "2x16x16"):
+                r = records.get((arch, shape, mesh))
+                if r is None:
+                    continue
+                if not r.get("ok"):
+                    rows.append([arch, shape, mesh, "FAIL", "", "", "", "", "", "", ""])
+                    continue
+                m = r["memory_analysis"]
+                rows.append([
+                    arch, shape, mesh, "ok",
+                    fmt_s(r["compute_s"]), fmt_s(r["memory_s"]), fmt_s(r["collective_s"]),
+                    r["bottleneck"], f"{r['useful_flop_ratio']:.2f}",
+                    fmt_bytes(m["temp_bytes"]), fmt_bytes(m["argument_bytes"]),
+                ])
+    widths = [max(len(str(row[i])) for row in rows) for i in range(len(rows[0]))]
+    out = []
+    for i, row in enumerate(rows):
+        line = sep.join(str(c).ljust(w) for c, w in zip(row, widths))
+        if markdown:
+            line = "| " + line + " |"
+        out.append(line)
+        if markdown and i == 0:
+            out.append("|" + "|".join("-" * (w + 2) for w in widths) + "|")
+    return "\n".join(out)
+
+
+def summarize(records):
+    ok = [r for r in records.values() if r.get("ok")]
+    fail = [r for r in records.values() if not r.get("ok")]
+    lines = [f"{len(ok)} ok / {len(fail)} failed of {len(records)} combos"]
+    if ok:
+        by_bound = {}
+        for r in ok:
+            by_bound.setdefault(r["bottleneck"], []).append(r)
+        for b, rs in sorted(by_bound.items()):
+            lines.append(f"  {b}-bound: {len(rs)}")
+        worst = sorted(
+            (r for r in ok if r["shape"] == "train_4k" and r["mesh"] == "16x16"),
+            key=lambda r: r["useful_flop_ratio"],
+        )
+        if worst:
+            lines.append("  worst useful-flop ratio (train_4k 16x16): "
+                         + ", ".join(f"{r['arch']}={r['useful_flop_ratio']:.2f}" for r in worst[:3]))
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="+")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args(argv)
+    records = load(args.paths)
+    print(render(records, markdown=args.markdown))
+    print()
+    print(summarize(records))
+
+
+if __name__ == "__main__":
+    main()

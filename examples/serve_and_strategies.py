@@ -1,0 +1,46 @@
+"""Serving + per-client strategy heterogeneity demo.
+
+1. Serve a (reduced) Mamba2 model with batched greedy decode — the SSM decode
+   path whose O(1) state makes long_500k feasible.
+2. The serverless design lets EVERY CLIENT RUN A DIFFERENT AGGREGATION
+   STRATEGY (a property the paper calls out): one FedAvg node, one
+   staleness-aware FedAsync node, one FedAvgM node, all sharing a store.
+
+    PYTHONPATH=src python examples/serve_and_strategies.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import AsyncFederatedNode, InMemoryFolder
+from repro.core.strategies import FedAsync, FedAvg, FedAvgM
+from repro.launch.serve import serve_batch
+from repro.models import build_model
+
+print("== batched serving (mamba2, reduced) ==")
+cfg = get_config("mamba2-130m").reduced()
+model = build_model(cfg)
+rng = jax.random.PRNGKey(0)
+params = model.init(rng)
+prompts = jax.random.randint(rng, (4, 12), 0, cfg.vocab_size, jnp.int32)
+out = serve_batch(cfg, params, prompts, new_tokens=12)
+print(f"  served batch of {out.shape[0]}, {out.shape[1]} new tokens each")
+print(f"  sample continuation: {np.asarray(out)[0].tolist()}")
+
+print("== heterogeneous per-client strategies ==")
+folder = InMemoryFolder()
+weights = {"w": np.zeros((4,), np.float32)}
+nodes = {
+    "avg": AsyncFederatedNode(strategy=FedAvg(), shared_folder=folder, node_id="avg"),
+    "asy": AsyncFederatedNode(strategy=FedAsync(alpha=0.5), shared_folder=folder, node_id="asy"),
+    "mom": AsyncFederatedNode(strategy=FedAvgM(momentum=0.5), shared_folder=folder, node_id="mom"),
+}
+vals = {"avg": 0.0, "asy": 3.0, "mom": 6.0}
+for round_ in range(3):
+    for name, node in nodes.items():
+        new = node.update_parameters({"w": np.full((4,), vals[name], np.float32)}, 100)
+        if new is not None:
+            vals[name] = float(new["w"][0])
+    print(f"  round {round_}: " + "  ".join(f"{n}={vals[n]:.3f}" for n in nodes))
+print("  (three different aggregation rules, one store, zero servers)")

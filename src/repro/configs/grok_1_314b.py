@@ -1,0 +1,25 @@
+"""grok-1-314b [moe] — 8 experts top-2 [hf:xai-org/grok-1].
+
+64L d_model=6144 48H (GQA kv=8) d_ff=32768 vocab=131072, MoE 8e top-2.
+The largest assigned model: 314B total / ~86B active params.
+"""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    arch_type="moe",
+    source="hf:xai-org/grok-1",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab_size=131072,
+    activation="gelu",
+    num_experts=8,
+    experts_per_token=2,
+    layer_pattern=("moe_attn",),
+    attn_logit_softcap=30.0,
+    tie_embeddings=True,
+)

@@ -1,0 +1,24 @@
+"""internvl2-1b [vlm] — InternViT + InternLM2 backbone [arXiv:2404.16821].
+
+24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151655. The InternViT vision
+encoder + MLP projector are STUBBED (assignment carve-out): input_specs feeds
+256 precomputed patch embeddings per example; the LM backbone is what trains.
+"""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b",
+    arch_type="vlm",
+    source="arXiv:2404.16821 (InternVL2); hf:OpenGVLab/InternVL2-1B (Qwen2-0.5B LM)",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=4864,
+    vocab_size=151655,
+    activation="swiglu",
+    frontend="vision",
+    frontend_tokens=256,
+    tie_embeddings=True,
+)

@@ -1,0 +1,27 @@
+"""llama4-scout-17b-a16e [moe] — 16 experts top-1, early fusion
+[hf:meta-llama/Llama-4-Scout-17B-16E].
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048, MoE 16e top-1 with a
+shared expert (Llama-4 routes top-1 + always-on shared expert).
+"""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    arch_type="moe",
+    source="hf:meta-llama/Llama-4-Scout-17B-16E",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    activation="swiglu",
+    num_experts=16,
+    experts_per_token=1,
+    num_shared_experts=1,
+    layer_pattern=("moe_attn",),
+    qk_norm=True,
+    tie_embeddings=True,
+)

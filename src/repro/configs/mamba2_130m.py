@@ -1,0 +1,25 @@
+"""mamba2-130m [ssm] — SSD (state-space duality) [arXiv:2405.21060].
+
+24L d_model=768, attention-free, d_ff=0, vocab=50280, ssm_state=128.
+"""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    arch_type="ssm",
+    source="arXiv:2405.21060 (Mamba2); hf:state-spaces/mamba2-130m",
+    n_layers=24,
+    d_model=768,
+    n_heads=24,            # d_inner / ssm_head_dim = 1536/64
+    n_kv_heads=24,
+    d_ff=0,                # attention-free, no MLP stack
+    vocab_size=50280,
+    attention="none",
+    ssm_state=128,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    layer_pattern=("ssm",),
+    tie_embeddings=True,
+)

@@ -1,0 +1,26 @@
+"""minicpm3-4b [dense] — MLA (multi-head latent attention) [hf:openbmb/MiniCPM3-4B].
+
+62L d_model=2560 40H (GQA kv=40) d_ff=6400 vocab=73448. MLA dims from the
+model card: q_lora_rank=768, kv_lora_rank=256, qk_nope=64, qk_rope=32, v=64.
+"""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b",
+    arch_type="dense",
+    source="hf:openbmb/MiniCPM3-4B (MLA per DeepSeek-V2, arXiv:2405.04434)",
+    n_layers=62,
+    d_model=2560,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=6400,
+    vocab_size=73448,
+    attention="mla",
+    q_lora_rank=768,
+    kv_lora_rank=256,
+    qk_nope_dim=64,
+    qk_rope_dim=32,
+    v_head_dim=64,
+    activation="swiglu",
+    tie_embeddings=True,
+)

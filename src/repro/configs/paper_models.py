@@ -1,0 +1,23 @@
+"""The paper's own experiment models (§4.2-4.4).
+
+* MNIST CNN — two conv + pool + ReLU layers (§4.2); built via models.cnn.
+* CIFAR ResNet-18 — GroupNorm variant (§4.3); built via models.cnn.
+* pythia-14m — the WikiText LM (§4.4) [arXiv:2304.01373 Pythia suite]:
+  6L d_model=128 4H d_ff=512, vocab 50304, gelu, rotary.
+"""
+from repro.models import ModelConfig
+
+PYTHIA_14M = ModelConfig(
+    name="pythia-14m",
+    arch_type="dense",
+    source="arXiv:2304.01373 (Pythia); hf:EleutherAI/pythia-14m",
+    n_layers=6,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=32,
+    d_ff=512,
+    vocab_size=50304,
+    activation="gelu",
+    tie_embeddings=True,
+)

@@ -1,0 +1,25 @@
+"""recurrentgemma-9b [hybrid] — RG-LRU + local attention, 1:2 [arXiv:2402.19427].
+
+38L d_model=4096 16H (GQA kv=1) d_ff=12288 vocab=256000. Pattern: two RG-LRU
+recurrent blocks per local-attention block (window 2048). 38 = 12×(R,R,A)+2R.
+"""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    arch_type="hybrid",
+    source="arXiv:2402.19427 (Griffin/RecurrentGemma); hf:google/recurrentgemma-9b",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,          # MQA on the local-attention blocks
+    head_dim=256,
+    d_ff=12288,
+    vocab_size=256000,
+    activation="geglu",
+    sliding_window=2048,   # local attention window
+    layer_pattern=("rglru", "rglru", "attn"),
+    rglru_c=8.0,
+    conv1d_width=4,
+    tie_embeddings=True,
+)

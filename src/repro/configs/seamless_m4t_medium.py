@@ -1,0 +1,26 @@
+"""seamless-m4t-medium [audio] — enc-dec, multimodal [arXiv:2308.11596].
+
+12L d_model=1024 16H (kv=16) d_ff=4096 vocab=256206. Interpreted as 12 encoder
++ 12 decoder layers (UnitY medium). The speech frontend (mel-spectrogram +
+conv feature extractor) is STUBBED: the encoder consumes precomputed frame
+embeddings of shape (B, frames, d_model).
+"""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    arch_type="audio",
+    source="arXiv:2308.11596 (SeamlessM4T); hf:facebook/seamless-m4t-medium",
+    n_layers=12,           # decoder layers
+    encoder_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=256206,
+    activation="gelu",
+    frontend="audio",
+    frontend_tokens=1024,  # default frames per utterance for smoke/examples
+    tie_embeddings=True,
+)

@@ -1,0 +1,64 @@
+"""repro.core — the paper's contribution: serverless (a)sync federated learning.
+
+Public API mirrors the paper's usage snippet:
+
+    from repro.core import AsyncFederatedNode, FederatedCallback, make_folder
+    from repro.core.strategies import FedAvg
+
+    node = AsyncFederatedNode(strategy=FedAvg(), shared_folder=make_folder("/mnt/shared/exp1"))
+    callback = FederatedCallback(node, num_examples_per_epoch=...)
+    trainer.fit(..., callbacks=[callback])
+"""
+from .callback import Callback, FederatedCallback
+from .node import AsyncFederatedNode, FederationTimeout, SyncFederatedNode
+from .partition import partition_dataset, partition_sequence_dataset, skewed_assignment
+from .serialize import NodeUpdate, deserialize_update, serialize_update
+from .simulation import run_threaded, simulate_timeline, straggler_speedup
+from .store import DiskFolder, InMemoryFolder, S3Folder, SharedFolder, WeightStore, make_folder
+from .strategies import (
+    STRATEGIES,
+    FedAdagrad,
+    FedAdam,
+    FedAsync,
+    FedAvg,
+    FedAvgM,
+    FedBuff,
+    FedYogi,
+    PartialFedAvg,
+    Strategy,
+    get_strategy,
+)
+
+__all__ = [
+    "AsyncFederatedNode",
+    "SyncFederatedNode",
+    "FederationTimeout",
+    "Callback",
+    "FederatedCallback",
+    "NodeUpdate",
+    "serialize_update",
+    "deserialize_update",
+    "SharedFolder",
+    "InMemoryFolder",
+    "DiskFolder",
+    "S3Folder",
+    "WeightStore",
+    "make_folder",
+    "Strategy",
+    "FedAvg",
+    "FedAvgM",
+    "FedAdam",
+    "FedYogi",
+    "FedAdagrad",
+    "FedAsync",
+    "FedBuff",
+    "PartialFedAvg",
+    "STRATEGIES",
+    "get_strategy",
+    "skewed_assignment",
+    "partition_dataset",
+    "partition_sequence_dataset",
+    "run_threaded",
+    "simulate_timeline",
+    "straggler_speedup",
+]

@@ -1,0 +1,134 @@
+"""Federated nodes: the paper's client-side federation objects.
+
+``AsyncFederatedNode`` implements Algorithm 1 (FedAvgAsync) generalized over
+strategies: push own weights → state-hash check → pull peers' latest →
+client-side aggregate → continue training. If the store is unchanged or empty
+(no peers yet), the client keeps its own weights — no waiting, ever.
+
+``SyncFederatedNode`` implements the paper's synchronous *serverless* mode:
+after pushing round-t weights the client blocks until all K participants have
+deposited round-t weights, then everybody aggregates the identical set
+locally. A ``timeout`` makes single-node failure observable instead of a
+deadlock (the paper's operational criticism of synchronous FL).
+"""
+from __future__ import annotations
+
+import time
+import uuid
+from typing import Callable
+
+from .serialize import NodeUpdate
+from .store import SharedFolder, WeightStore
+from .strategies import FedAvg, Strategy
+from .tree import PyTree, tree_to_numpy
+
+
+class FederationTimeout(RuntimeError):
+    """Raised by SyncFederatedNode when peers never arrive (straggler/crash)."""
+
+
+class _BaseNode:
+    def __init__(
+        self,
+        *,
+        strategy: Strategy | None = None,
+        shared_folder: SharedFolder | None = None,
+        store: WeightStore | None = None,
+        node_id: str | None = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        if store is None:
+            if shared_folder is None:
+                raise ValueError("need shared_folder or store")
+            store = WeightStore(shared_folder)
+        self.store = store
+        self.strategy = strategy or FedAvg()
+        self.node_id = node_id or uuid.uuid4().hex[:8]
+        self.clock = clock
+        self.counter = 0  # local epoch counter; there is no global round
+        self._last_state_hash: str | None = None
+        # instrumentation
+        self.num_pushes = 0
+        self.num_pulls = 0
+        self.num_skipped_pulls = 0
+        self.num_aggregations = 0
+
+    def _push(self, params: PyTree, num_examples: int, metrics: dict | None = None) -> NodeUpdate:
+        update = NodeUpdate(
+            params=tree_to_numpy(params),
+            num_examples=num_examples,
+            node_id=self.node_id,
+            counter=self.counter,
+            timestamp=self.clock(),
+            metrics=metrics or {},
+        )
+        self.store.push(update)
+        self.num_pushes += 1
+        return update
+
+
+class AsyncFederatedNode(_BaseNode):
+    """Asynchronous serverless federation (paper Figure 2 / Algorithm 1)."""
+
+    def update_parameters(
+        self, params: PyTree, num_examples: int, metrics: dict | None = None
+    ) -> PyTree | None:
+        """Push-then-pull federation step; returns aggregated params, or
+        ``None`` when no peer weights are available / store unchanged (the
+        caller keeps training on its current weights — Algorithm 1's 'resume
+        training' branch)."""
+        own = self._push(params, num_examples, metrics)
+        self.counter += 1
+
+        state = self.store.state_hash(exclude_node=self.node_id)
+        if state == self._last_state_hash:
+            # Only our own deposit changed nothing relative to what we already
+            # aggregated → skip the download entirely (paper's hash check).
+            self.num_skipped_pulls += 1
+            return None
+        peers = self.store.pull(exclude=self.node_id)
+        self.num_pulls += 1
+        self._last_state_hash = self.store.state_hash(exclude_node=self.node_id)
+        if not peers:
+            return None
+        aggregated = self.strategy.aggregate(own, peers)
+        self.num_aggregations += 1
+        return aggregated
+
+
+class SyncFederatedNode(_BaseNode):
+    """Synchronous serverless federation: barrier on the weight store."""
+
+    def __init__(self, *, num_nodes: int, timeout: float = 60.0, poll_interval: float = 0.02, **kwargs):
+        super().__init__(**kwargs)
+        # Round-exact blobs are required so every client aggregates the same
+        # set even when a fast peer has already deposited round t+1.
+        self.store.keep_history = True
+        self.num_nodes = num_nodes
+        self.timeout = timeout
+        self.poll_interval = poll_interval
+
+    def update_parameters(
+        self, params: PyTree, num_examples: int, metrics: dict | None = None
+    ) -> PyTree:
+        own = self._push(params, num_examples, metrics)
+        round_id = self.counter
+        self.counter += 1
+
+        deadline = time.monotonic() + self.timeout
+        while True:
+            peers = self.store.pull_round(round_id, exclude=self.node_id)
+            self.num_pulls += 1
+            if len(peers) >= self.num_nodes - 1:
+                break
+            if time.monotonic() > deadline:
+                raise FederationTimeout(
+                    f"node {self.node_id}: only {len(peers) + 1}/{self.num_nodes} "
+                    f"nodes reached round {round_id} within {self.timeout}s"
+                )
+            time.sleep(self.poll_interval)
+        # Deterministic aggregation order across clients → identical results.
+        peers.sort(key=lambda u: u.node_id)
+        aggregated = self.strategy.aggregate(own, peers)
+        self.num_aggregations += 1
+        return aggregated

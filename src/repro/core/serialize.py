@@ -1,0 +1,154 @@
+"""Wire format for the weight store.
+
+A deposited update is a pytree of numpy arrays plus scalar metadata
+(num_examples, local epoch counter, node id, wall time). We serialize to a
+single npz blob: leaves stored under their key-path strings, metadata under a
+reserved ``__meta__`` JSON entry. Key-path keyed storage (instead of pickling
+a treedef) keeps the format language- and process-agnostic — the store really
+could be an S3 bucket written by heterogeneous clients.
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import numpy as np
+
+from .tree import PyTree, path_str
+
+_META_KEY = "__meta__"
+_SEP = "|"  # npz keys cannot contain '/' reliably across tools; use '|'
+
+
+@dataclass
+class NodeUpdate:
+    """One client's deposit in the weight store."""
+
+    params: PyTree
+    num_examples: int
+    node_id: str
+    counter: int = 0  # client-local epoch counter (no global round exists)
+    timestamp: float = 0.0  # virtual or wall time, for staleness strategies
+    metrics: dict = field(default_factory=dict)
+
+
+def serialize_params(params: PyTree, meta: dict[str, Any] | None = None) -> bytes:
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    arrays: dict[str, np.ndarray] = {}
+    order: list[str] = []
+    dtypes: dict[str, str] = {}
+    for path, leaf in leaves_with_paths:
+        key = path_str(path).replace("/", _SEP)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or arr.dtype.name in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
+            # numpy cannot round-trip ml_dtypes through npz; ship f32 on the
+            # wire (aggregation is f32 anyway) and restore dtype on load.
+            dtypes[key] = arr.dtype.name
+            arr = arr.astype(np.float32)
+        arrays[key] = arr
+        order.append(key)
+    meta_blob = dict(meta or {})
+    meta_blob["__order__"] = order
+    meta_blob["__dtypes__"] = dtypes
+    arrays[_META_KEY] = np.frombuffer(json.dumps(meta_blob).encode(), dtype=np.uint8)
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    return buf.getvalue()
+
+
+def deserialize_params(blob: bytes) -> tuple[PyTree, dict[str, Any]]:
+    """Returns (nested-dict params, meta). Key paths 'a|b|c' rebuild nesting."""
+    with np.load(io.BytesIO(blob)) as data:
+        meta = json.loads(bytes(data[_META_KEY].tobytes()).decode())
+        order = meta.pop("__order__")
+        dtypes = meta.pop("__dtypes__", {})
+        tree: dict = {}
+        for key in order:
+            parts = key.split(_SEP)
+            node = tree
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            leaf = data[key]
+            if key in dtypes:
+                import ml_dtypes
+
+                leaf = leaf.astype(np.dtype(getattr(ml_dtypes, dtypes[key])))
+            node[parts[-1]] = leaf
+    return tree, meta
+
+
+def serialize_update(update: NodeUpdate) -> bytes:
+    return serialize_params(
+        update.params,
+        meta={
+            "num_examples": int(update.num_examples),
+            "node_id": update.node_id,
+            "counter": int(update.counter),
+            "timestamp": float(update.timestamp),
+            "metrics": update.metrics,
+        },
+    )
+
+
+def deserialize_update(blob: bytes) -> NodeUpdate:
+    params, meta = deserialize_params(blob)
+    return NodeUpdate(
+        params=params,
+        num_examples=int(meta["num_examples"]),
+        node_id=str(meta["node_id"]),
+        counter=int(meta["counter"]),
+        timestamp=float(meta["timestamp"]),
+        metrics=meta.get("metrics", {}),
+    )
+
+
+def content_hash(blob: bytes) -> str:
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+# --- int8 compressed payloads (beyond-paper extension #4) -------------------
+
+
+def quantize_leaf(x: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Symmetric per-tensor int8 quantization: returns (q, scale)."""
+    x = np.asarray(x, np.float32)
+    scale = np.maximum(np.abs(x).max(), 1e-12) / 127.0
+    q = np.clip(np.round(x / scale), -127, 127).astype(np.int8)
+    return q, np.float32(scale)
+
+
+def dequantize_leaf(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    return q.astype(np.float32) * np.float32(scale)
+
+
+def serialize_update_quantized(update: NodeUpdate) -> bytes:
+    qtree = jax.tree.map(lambda x: quantize_leaf(np.asarray(x))[0], update.params)
+    stree = jax.tree.map(lambda x: quantize_leaf(np.asarray(x))[1], update.params)
+    return serialize_params(
+        {"q": qtree, "s": stree},
+        meta={
+            "num_examples": int(update.num_examples),
+            "node_id": update.node_id,
+            "counter": int(update.counter),
+            "timestamp": float(update.timestamp),
+            "metrics": update.metrics,
+            "quantized": True,
+        },
+    )
+
+
+def deserialize_update_quantized(blob: bytes) -> NodeUpdate:
+    packed, meta = deserialize_params(blob)
+    params = jax.tree.map(dequantize_leaf, packed["q"], packed["s"])
+    return NodeUpdate(
+        params=params,
+        num_examples=int(meta["num_examples"]),
+        node_id=str(meta["node_id"]),
+        counter=int(meta["counter"]),
+        timestamp=float(meta["timestamp"]),
+        metrics=meta.get("metrics", {}),
+    )

@@ -1,0 +1,303 @@
+"""The serverless weight store.
+
+The paper's central abstraction: "any remote folder accessible by the client
+machine" (S3 bucket, blob container, NFS mount). A client *pushes* its update
+blob under its node-id key, reads the folder *state hash* to detect change,
+and *pulls* the latest blob per peer.
+
+Backends:
+  * ``InMemoryFolder`` — thread-safe shared dict; mirrors the paper's
+    python-multithreading simulation setup.
+  * ``DiskFolder``    — a filesystem directory with atomic writes; this is the
+    production backend (point it at an NFS/gcsfuse/s3fs mount).
+  * ``S3Folder``      — thin boto3 adapter, import-guarded (the container is
+    offline; the class exists so the public API matches the paper's usage
+    snippet `S3Folder(directory="mybucket/experiment1")`).
+
+All backends implement the tiny ``SharedFolder`` byte-blob protocol; the
+``WeightStore`` wrapper above them speaks ``NodeUpdate`` pytrees, keeps one
+*latest* blob per node (plus optional history), and exposes the state-hash
+fast path from Algorithm 1.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import tempfile
+import threading
+import time
+from abc import ABC, abstractmethod
+from typing import Iterable
+
+from .serialize import (
+    NodeUpdate,
+    deserialize_update,
+    deserialize_update_quantized,
+    serialize_update,
+    serialize_update_quantized,
+)
+
+
+class SharedFolder(ABC):
+    """Byte-blob folder: the minimal contract a 'remote folder' must satisfy."""
+
+    @abstractmethod
+    def put(self, key: str, blob: bytes) -> None: ...
+
+    @abstractmethod
+    def get(self, key: str) -> bytes | None: ...
+
+    @abstractmethod
+    def keys(self) -> list[str]: ...
+
+    @abstractmethod
+    def delete(self, key: str) -> None: ...
+
+    def state_hash(self, exclude: str | None = None) -> str:
+        """Hash of (key, version) pairs — cheap change detection. ``exclude``
+        drops one key (the caller's own deposit) so a client's push does not
+        defeat its own skip check (Algorithm 1's hash comparison).
+
+        Default derives versions from blob hashes; backends override with
+        cheaper metadata (mtime, etag) when available.
+        """
+        h = hashlib.sha256()
+        for key in sorted(self.keys()):
+            if key == exclude:
+                continue
+            blob = self.get(key)
+            if blob is not None:
+                h.update(key.encode())
+                h.update(hashlib.sha256(blob).digest())
+        return h.hexdigest()[:16]
+
+
+class InMemoryFolder(SharedFolder):
+    """Thread-safe in-process folder (the paper's simulation backend)."""
+
+    def __init__(self):
+        self._blobs: dict[str, bytes] = {}
+        self._versions: dict[str, int] = {}
+        self._vclock = 0
+        self._lock = threading.RLock()
+
+    def put(self, key: str, blob: bytes) -> None:
+        with self._lock:
+            self._vclock += 1
+            self._blobs[key] = blob
+            self._versions[key] = self._vclock
+
+    def get(self, key: str) -> bytes | None:
+        with self._lock:
+            return self._blobs.get(key)
+
+    def keys(self) -> list[str]:
+        with self._lock:
+            return list(self._blobs.keys())
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            self._blobs.pop(key, None)
+            self._versions.pop(key, None)
+
+    def state_hash(self, exclude: str | None = None) -> str:
+        with self._lock:
+            items = sorted((k, v) for k, v in self._versions.items() if k != exclude)
+        h = hashlib.sha256(repr(items).encode())
+        return h.hexdigest()[:16]
+
+
+class DiskFolder(SharedFolder):
+    """Filesystem-backed folder with atomic writes (tmp + rename).
+
+    Safe for multiple processes on a shared mount: readers never observe a
+    torn write because rename is atomic on POSIX.
+    """
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        safe = key.replace("/", "__")
+        return os.path.join(self.directory, safe + ".npz")
+
+    def put(self, key: str, blob: bytes) -> None:
+        fd, tmp = tempfile.mkstemp(dir=self.directory, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(blob)
+            os.replace(tmp, self._path(key))
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+    def get(self, key: str) -> bytes | None:
+        path = self._path(key)
+        for _ in range(3):  # retry: concurrent replace() can race open()
+            try:
+                with open(path, "rb") as f:
+                    return f.read()
+            except FileNotFoundError:
+                return None
+            except OSError:
+                time.sleep(0.01)
+        return None
+
+    def keys(self) -> list[str]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.endswith(".npz"):
+                out.append(name[: -len(".npz")].replace("__", "/"))
+        return out
+
+    def delete(self, key: str) -> None:
+        try:
+            os.unlink(self._path(key))
+        except FileNotFoundError:
+            pass
+
+    def state_hash(self, exclude: str | None = None) -> str:
+        items = []
+        skip = exclude.replace("/", "__") + ".npz" if exclude else None
+        for name in sorted(os.listdir(self.directory)):
+            if not name.endswith(".npz") or name == skip:
+                continue
+            path = os.path.join(self.directory, name)
+            try:
+                st = os.stat(path)
+            except FileNotFoundError:
+                continue
+            items.append((name, st.st_mtime_ns, st.st_size))
+        return hashlib.sha256(repr(items).encode()).hexdigest()[:16]
+
+
+class S3Folder(SharedFolder):
+    """S3-backed folder (paper's production backend). Requires boto3.
+
+    Offline containers can still import this module; instantiation raises if
+    boto3 is unavailable.
+    """
+
+    def __init__(self, directory: str):
+        try:
+            import boto3  # type: ignore
+        except ImportError as e:  # pragma: no cover - offline container
+            raise ImportError("S3Folder requires boto3") from e
+        bucket, _, prefix = directory.partition("/")
+        self._s3 = boto3.client("s3")
+        self.bucket, self.prefix = bucket, prefix.rstrip("/")
+
+    def _key(self, key: str) -> str:
+        return f"{self.prefix}/{key}.npz" if self.prefix else f"{key}.npz"
+
+    def put(self, key: str, blob: bytes) -> None:  # pragma: no cover
+        self._s3.put_object(Bucket=self.bucket, Key=self._key(key), Body=blob)
+
+    def get(self, key: str) -> bytes | None:  # pragma: no cover
+        try:
+            resp = self._s3.get_object(Bucket=self.bucket, Key=self._key(key))
+            return resp["Body"].read()
+        except self._s3.exceptions.NoSuchKey:
+            return None
+
+    def keys(self) -> list[str]:  # pragma: no cover
+        prefix = f"{self.prefix}/" if self.prefix else ""
+        resp = self._s3.list_objects_v2(Bucket=self.bucket, Prefix=prefix)
+        out = []
+        for obj in resp.get("Contents", []):
+            name = obj["Key"][len(prefix):]
+            if name.endswith(".npz"):
+                out.append(name[: -len(".npz")])
+        return out
+
+    def delete(self, key: str) -> None:  # pragma: no cover
+        self._s3.delete_object(Bucket=self.bucket, Key=self._key(key))
+
+    def state_hash(self, exclude: str | None = None) -> str:  # pragma: no cover
+        prefix = f"{self.prefix}/" if self.prefix else ""
+        skip = self._key(exclude) if exclude else None
+        resp = self._s3.list_objects_v2(Bucket=self.bucket, Prefix=prefix)
+        items = sorted(
+            (o["Key"], o["ETag"]) for o in resp.get("Contents", []) if o["Key"] != skip
+        )
+        return hashlib.sha256(repr(items).encode()).hexdigest()[:16]
+
+
+class WeightStore:
+    """Typed view over a SharedFolder: one latest NodeUpdate per node.
+
+    Implements the push / state-hash-check / pull triad from Algorithm 1.
+    ``keep_history`` additionally retains per-counter blobs so experiments can
+    audit the full federation trace.
+    """
+
+    def __init__(self, folder: SharedFolder, *, quantized: bool = False, keep_history: bool = False):
+        self.folder = folder
+        self.quantized = quantized
+        self.keep_history = keep_history
+        self._ser = serialize_update_quantized if quantized else serialize_update
+        self._de = deserialize_update_quantized if quantized else deserialize_update
+
+    # -- push ---------------------------------------------------------------
+    def push(self, update: NodeUpdate) -> None:
+        blob = self._ser(update)
+        self.folder.put(f"latest/{update.node_id}", blob)
+        if self.keep_history:
+            self.folder.put(f"history/{update.node_id}/{update.counter:06d}", blob)
+
+    # -- state hash fast path -------------------------------------------------
+    def state_hash(self, exclude_node: str | None = None) -> str:
+        exclude = f"latest/{exclude_node}" if exclude_node else None
+        return self.folder.state_hash(exclude=exclude)
+
+    # -- pull ---------------------------------------------------------------
+    def node_ids(self) -> list[str]:
+        return sorted(
+            key[len("latest/"):] for key in self.folder.keys() if key.startswith("latest/")
+        )
+
+    def pull(self, exclude: str | None = None) -> list[NodeUpdate]:
+        """Latest update per node (optionally excluding the caller's own)."""
+        out = []
+        for node_id in self.node_ids():
+            if node_id == exclude:
+                continue
+            blob = self.folder.get(f"latest/{node_id}")
+            if blob is not None:
+                out.append(self._de(blob))
+        return out
+
+    def pull_node(self, node_id: str) -> NodeUpdate | None:
+        blob = self.folder.get(f"latest/{node_id}")
+        return self._de(blob) if blob is not None else None
+
+    def pull_round(self, counter: int, exclude: str | None = None) -> list[NodeUpdate]:
+        """Exact-round blobs (requires keep_history=True) — used by the
+        synchronous barrier so every client aggregates the identical set even
+        if a fast peer has already deposited round t+1."""
+        prefix = "history/"
+        out = []
+        for key in sorted(self.folder.keys()):
+            if not key.startswith(prefix):
+                continue
+            _, node_id, ctr = key.split("/")
+            if int(ctr) != counter or node_id == exclude:
+                continue
+            blob = self.folder.get(key)
+            if blob is not None:
+                out.append(self._de(blob))
+        return out
+
+    def clear(self) -> None:
+        for key in self.folder.keys():
+            self.folder.delete(key)
+
+
+def make_folder(uri: str) -> SharedFolder:
+    """Folder factory: 'memory://', 's3://bucket/prefix', or a local path."""
+    if uri.startswith("memory://"):
+        return InMemoryFolder()
+    if uri.startswith("s3://"):
+        return S3Folder(uri[len("s3://"):])
+    return DiskFolder(uri)

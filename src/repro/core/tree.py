@@ -1,0 +1,136 @@
+"""Pytree utilities used across the federated core.
+
+All federated aggregation ultimately reduces to weighted sums over pytrees of
+arrays. These helpers keep that logic in one place and let the Pallas
+``fed_agg`` kernel slot in as the hot path for the flattened representation.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def tree_zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree.map(np.zeros_like, tree)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(lambda x, y: x - y, a, b)
+
+
+def tree_scale(tree: PyTree, s: float) -> PyTree:
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_weighted_sum(trees: Sequence[PyTree], weights: Sequence[float]) -> PyTree:
+    """sum_i weights[i] * trees[i], leafwise. Host-side (numpy) friendly."""
+    if len(trees) != len(weights):
+        raise ValueError(f"{len(trees)} trees vs {len(weights)} weights")
+    if not trees:
+        raise ValueError("empty aggregation")
+
+    def _leaf(*leaves):
+        acc = leaves[0] * weights[0]
+        for leaf, w in zip(leaves[1:], weights[1:]):
+            acc = acc + leaf * w
+        return acc
+
+    return jax.tree.map(_leaf, *trees)
+
+
+def tree_mean(trees: Sequence[PyTree]) -> PyTree:
+    n = len(trees)
+    return tree_weighted_sum(trees, [1.0 / n] * n)
+
+
+def tree_weighted_mean(trees: Sequence[PyTree], weights: Sequence[float]) -> PyTree:
+    """Weighted mean with weights normalized to sum to 1 (FedAvg, eq. 1)."""
+    total = float(sum(weights))
+    if total <= 0:
+        raise ValueError(f"non-positive total weight {total}")
+    return tree_weighted_sum(trees, [float(w) / total for w in weights])
+
+
+def tree_map_with_path(fn: Callable, tree: PyTree) -> PyTree:
+    """Map fn(path_str, leaf) over the tree."""
+
+    def _fn(path, leaf):
+        return fn(path_str(path), leaf)
+
+    return jax.tree_util.tree_map_with_path(_fn, tree)
+
+
+def path_str(path) -> str:
+    """Render a jax key path as 'a/b/0/c'."""
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def tree_paths(tree: PyTree) -> list[str]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [path_str(p) for p, _ in leaves]
+
+
+def tree_to_numpy(tree: PyTree) -> PyTree:
+    """Device→host copy; aggregation and the weight store live on host."""
+    return jax.tree.map(lambda x: np.asarray(x), tree)
+
+
+def tree_size_bytes(tree: PyTree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_num_params(tree: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_allclose(a: PyTree, b: PyTree, rtol: float = 1e-5, atol: float = 1e-6) -> bool:
+    flat_a, treedef_a = jax.tree.flatten(a)
+    flat_b, treedef_b = jax.tree.flatten(b)
+    if treedef_a != treedef_b:
+        return False
+    return all(np.allclose(x, y, rtol=rtol, atol=atol) for x, y in zip(flat_a, flat_b))
+
+
+def tree_l2_distance(a: PyTree, b: PyTree) -> float:
+    sq = jax.tree.map(lambda x, y: float(np.sum((np.asarray(x, np.float64) - np.asarray(y, np.float64)) ** 2)), a, b)
+    return float(np.sqrt(sum(jax.tree.leaves(sq))))
+
+
+def tree_flatten_to_vector(tree: PyTree) -> tuple[np.ndarray, Callable[[np.ndarray], PyTree]]:
+    """Flatten a pytree to a single 1-D float vector + an unflatten closure.
+
+    Used to hand aggregation to the Pallas fed_agg kernel, which operates on
+    (num_clients, num_params) stacked flats.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = [np.shape(l) for l in leaves]
+    dtypes = [np.asarray(l).dtype for l in leaves]
+    sizes = [int(np.prod(s)) for s in shapes]
+    flat = np.concatenate([np.asarray(l, np.float32).reshape(-1) for l in leaves]) if leaves else np.zeros((0,), np.float32)
+
+    def unflatten(vec: np.ndarray) -> PyTree:
+        out, off = [], 0
+        for shape, dtype, size in zip(shapes, dtypes, sizes):
+            out.append(np.asarray(vec[off : off + size], dtype=dtype).reshape(shape))
+            off += size
+        return jax.tree.unflatten(treedef, out)
+
+    return flat, unflatten

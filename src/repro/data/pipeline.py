@@ -1,0 +1,66 @@
+"""Batching / sharding pipeline.
+
+Host-side numpy batching (the federated experiments are CPU-local), plus
+``shard_batch`` to place a global batch onto a Mesh for the distributed-silo
+path (used by repro.launch.train).
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_iterator(
+    x: np.ndarray,
+    y: np.ndarray,
+    *,
+    batch_size: int,
+    seed: int = 0,
+    epoch: int = 0,
+    drop_remainder: bool = True,
+) -> Iterator[dict]:
+    """Shuffled minibatches; reshuffles deterministically per epoch."""
+    n = x.shape[0]
+    rng = np.random.default_rng(seed * 100003 + epoch)
+    perm = rng.permutation(n)
+    end = (n // batch_size) * batch_size if drop_remainder else n
+    for i in range(0, end, batch_size):
+        idx = perm[i : i + batch_size]
+        yield {"x": x[idx], "y": y[idx]}
+
+
+def lm_batch_iterator(
+    tokens: np.ndarray,
+    *,
+    batch_size: int,
+    seq_len: int,
+    seed: int = 0,
+    epoch: int = 0,
+) -> Iterator[dict]:
+    """Random contiguous windows; targets are inputs shifted by one."""
+    n = tokens.shape[0] - seq_len - 1
+    if n <= 0:
+        raise ValueError(f"token stream too short: {tokens.shape[0]} for seq_len {seq_len}")
+    rng = np.random.default_rng(seed * 100003 + epoch + 17)
+    num_batches = max(1, n // (batch_size * seq_len))
+    for _ in range(num_batches):
+        starts = rng.integers(0, n, size=batch_size)
+        xs = np.stack([tokens[s : s + seq_len] for s in starts])
+        ys = np.stack([tokens[s + 1 : s + seq_len + 1] for s in starts])
+        yield {"tokens": xs.astype(np.int32), "labels": ys.astype(np.int32)}
+
+
+def shard_batch(batch: dict, mesh: Mesh, *, batch_axes: tuple[str, ...] = ("data",)) -> dict:
+    """Place a host batch onto the mesh, batch dim sharded over batch_axes
+    (falls back to replication when not divisible)."""
+
+    def _place(arr):
+        arr = np.asarray(arr)
+        axis_size = int(np.prod([mesh.shape[a] for a in batch_axes]))
+        spec = P(batch_axes) if arr.shape[0] % axis_size == 0 else P()
+        return jax.device_put(arr, NamedSharding(mesh, spec))
+
+    return jax.tree.map(_place, batch)

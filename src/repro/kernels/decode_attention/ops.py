@@ -1,0 +1,23 @@
+"""Public decode-attention op with platform dispatch.
+
+Called from repro.models.attention.attn_decode(use_kernel=True) with the
+(B,1,KV,G,hd)-shaped q of a single decode step.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import on_tpu
+
+from .kernel import decode_attention as decode_kernel
+from .ref import decode_attention_ref
+
+
+def decode_attention(qg, k, v, valid, *, softcap: float = 0.0, force_kernel: bool = False):
+    """qg: (B,1,KV,G,hd) (model layout) → (B,1,KV,G,hd)."""
+    q = qg[:, 0]
+    if softcap == 0.0 and (on_tpu() or force_kernel):
+        out = decode_kernel(q, k, v, valid, interpret=not on_tpu())
+    else:
+        out = decode_attention_ref(q, k, v, valid)
+    return out[:, None]

@@ -1,0 +1,17 @@
+"""Oracle for decode_attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, valid) -> jnp.ndarray:
+    """q:(B,KV,G,hd) k/v:(B,C,KV,hd) valid:(C,) → (B,KV,G,hd)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bkgh,bckh->bkgc", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgc,bckh->bkgh", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

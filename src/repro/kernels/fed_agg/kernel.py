@@ -1,0 +1,53 @@
+"""fed_agg — fused weighted aggregation over stacked client parameters.
+
+The paper's hot loop: FedAvg's Σ_k (n_k/n)·w_k over K client parameter
+vectors (eq. 1). On a serving/training silo this runs over the *entire*
+flattened model (up to 10^11 elements) each federation round, so it is a
+pure memory-bandwidth kernel: tile the flat parameter axis into VMEM-sized
+columns and compute each output tile as a (1,K)×(K,BN) matmul — one pass over
+HBM, no intermediate (K,N) temporaries like the naive jnp formulation.
+
+Layout: stacked (K, N) f32, weights (K,) f32 (pre-normalized), out (N,) f32.
+Block: (K, BN) with BN = 64·128 lanes → K·BN·4 B ≤ 2 MiB VMEM for K ≤ 64.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN = 8192  # flat-axis tile (64 × 128 lanes)
+
+
+def _fed_agg_kernel(w_ref, x_ref, o_ref):
+    # x: (K, BN) f32 block; w: (K, 1) f32 (full); o: (1, BN)
+    x = x_ref[...]
+    w = w_ref[...]
+    # (1, K) @ (K, BN) — lands on the MXU; f32 accumulation
+    o_ref[...] = jax.lax.dot_general(
+        w.T, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fed_agg(stacked: jnp.ndarray, weights: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """stacked: (K, N) f32; weights: (K,) f32 → (N,) f32 = weightsᵀ·stacked."""
+    K, N = stacked.shape
+    pad = (-N) % BN
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+    Np = N + pad
+    out = pl.pallas_call(
+        _fed_agg_kernel,
+        grid=(Np // BN,),
+        in_specs=[
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),       # weights, every tile
+            pl.BlockSpec((K, BN), lambda i: (0, i)),      # one column stripe
+        ],
+        out_specs=pl.BlockSpec((1, BN), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, Np), jnp.float32),
+        interpret=interpret,
+    )(weights.astype(jnp.float32)[:, None], stacked.astype(jnp.float32))
+    return out[0, :N]

@@ -1,0 +1,41 @@
+"""Public fed_agg ops: pytree-level weighted aggregation.
+
+``aggregate_pytrees`` is what ``FedAvg(use_kernel=True)`` calls: flatten every
+client's params to one f32 vector, stack, run the kernel, unflatten. On CPU
+the jnp reference is used unless ``force_kernel`` (tests) — interpret-mode
+Pallas over 10^8 elements would be pointlessly slow.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from repro.core.tree import PyTree, tree_flatten_to_vector
+from repro.kernels import on_tpu
+
+from .kernel import fed_agg
+from .ref import fed_agg_ref
+
+
+def aggregate_flat(stacked, weights, *, force_kernel: bool = False):
+    if on_tpu():
+        return fed_agg(stacked, weights, interpret=False)
+    if force_kernel:
+        return fed_agg(stacked, weights, interpret=True)
+    return fed_agg_ref(stacked, weights)
+
+
+def aggregate_pytrees(trees: Sequence[PyTree], weights: Sequence[float], *,
+                      force_kernel: bool = False) -> PyTree:
+    """Example-count-weighted mean of K parameter pytrees (FedAvg eq. 1)."""
+    total = float(sum(weights))
+    norm = np.asarray([float(w) / total for w in weights], np.float32)
+    flats, unflatten = [], None
+    for tree in trees:
+        flat, unflatten = tree_flatten_to_vector(tree)
+        flats.append(flat)
+    stacked = np.stack(flats)
+    out = aggregate_flat(stacked, norm, force_kernel=force_kernel)
+    return unflatten(np.asarray(out))

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for fed_agg."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fed_agg_ref(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """(K,N) × (K,) → (N,): Σ_k w_k · x_k in f32."""
+    return jnp.einsum("k,kn->n", weights.astype(jnp.float32), stacked.astype(jnp.float32))

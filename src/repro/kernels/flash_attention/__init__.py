@@ -1,0 +1,2 @@
+from . import ops, ref
+from .kernel import flash_attention

@@ -1,0 +1,20 @@
+"""Public flash attention op with platform dispatch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import on_tpu
+
+from .kernel import flash_attention as flash_kernel
+from .ref import flash_attention_ref
+
+
+def flash_attention(q, k, v, *, window: int = 0, force_kernel: bool = False) -> jnp.ndarray:
+    """(B,S,KV,G,hd)×(B,S,KV,hd)² → (B,S,KV,G,hd) causal attention."""
+    S = q.shape[1]
+    if on_tpu():
+        return flash_kernel(q, k, v, window=window, interpret=False)
+    if force_kernel:
+        bq = bk = min(128, S)
+        return flash_kernel(q, k, v, window=window, block_q=bq, block_k=bk, interpret=True)
+    return flash_attention_ref(q, k, v, window=window)

@@ -1,0 +1,24 @@
+"""Public ssd op in model layout (B,S,H,P) with platform dispatch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import on_tpu
+from repro.models.ssm import ssd_chunked
+
+from .kernel import ssd_scan
+
+
+def ssd(x, dA, Bm, Cm, *, chunk: int = 256, force_kernel: bool = False):
+    """x:(B,S,H,P) dA:(B,S,H) Bm/Cm:(B,S,H,N) → y:(B,S,H,P)."""
+    if on_tpu() or force_kernel:
+        B, S, H, P = x.shape
+        N = Bm.shape[-1]
+        fold = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, S, a.shape[-1])
+        y = ssd_scan(
+            fold(x), dA.transpose(0, 2, 1).reshape(B * H, S), fold(Bm), fold(Cm),
+            chunk=chunk, interpret=not on_tpu(),
+        )
+        return y.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    y, _ = ssd_chunked(x, dA, Bm, Cm, chunk)
+    return y

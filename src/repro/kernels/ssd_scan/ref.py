@@ -1,0 +1,22 @@
+"""Oracles for ssd_scan: the model's chunked dual form and the O(S)
+sequential recurrence (both in repro.models.ssm)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked, ssd_sequential
+
+
+def ssd_scan_ref(x, dA, Bm, Cm, *, chunk: int = 256) -> jnp.ndarray:
+    """(BH,S,P)-layout wrapper over ssd_chunked (adds a singleton head dim)."""
+    y, _ = ssd_chunked(
+        x[:, :, None, :], dA[:, :, None], Bm[:, :, None, :], Cm[:, :, None, :], chunk
+    )
+    return y[:, :, 0, :]
+
+
+def ssd_scan_sequential(x, dA, Bm, Cm) -> jnp.ndarray:
+    y, _ = ssd_sequential(
+        x[:, :, None, :], dA[:, :, None], Bm[:, :, None, :], Cm[:, :, None, :]
+    )
+    return y[:, :, 0, :]

@@ -1,0 +1,244 @@
+"""Roofline cost accounting.
+
+XLA's ``compiled.cost_analysis()`` visits ``while`` bodies ONCE — a 64-layer
+scanned model reports 1 layer of FLOPs (verified empirically). The roofline
+therefore uses a **jaxpr walker** that recurses through scan/pjit/remat and
+multiplies scan-body costs by trip count: exact, trip-aware, *global* (whole
+program, all chips) counts.
+
+  * flops — dot_general / conv_general_dilated (2·M·N·K model); elementwise
+    ignored (matmul-dominated workloads).
+  * bytes — an HBM-traffic model: operands+results of matmul-class ops, plus
+    results of gather/scatter/dynamic-slice/update ops (cache read/write) and
+    all scan-carried state. Pre-fusion, so an upper-ish bound; documented in
+    EXPERIMENTS.md §Roofline.
+
+Collective bytes come from the partitioned HLO text (``collective_bytes``):
+result-shape bytes of all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute ops, with non-ENTRY computations (loop bodies) multiplied
+by the layer-scan trip count.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import numpy as np
+from jax.extend import core as jcore
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walker
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    by_prim: dict = field(default_factory=dict)
+
+    def add(self, prim: str, flops: float, bytes_: float, mult: float) -> None:
+        self.flops += flops * mult
+        self.bytes += bytes_ * mult
+        agg = self.by_prim.setdefault(prim, [0.0, 0.0])
+        agg[0] += flops * mult
+        agg[1] += bytes_ * mult
+
+
+def _size_bytes(aval) -> float:
+    if not hasattr(aval, "shape"):
+        return 0.0
+    return float(np.prod(aval.shape, dtype=np.float64)) * aval.dtype.itemsize
+
+
+def _dot_flops(eqn) -> float:
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    dnums = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dnums
+    batch = np.prod([lhs.shape[i] for i in lb], dtype=np.float64)
+    contract = np.prod([lhs.shape[i] for i in lc], dtype=np.float64)
+    lhs_free = np.prod(
+        [d for i, d in enumerate(lhs.shape) if i not in lc and i not in lb], dtype=np.float64
+    )
+    rhs_free = np.prod(
+        [d for i, d in enumerate(rhs.shape) if i not in rc and i not in rb], dtype=np.float64
+    )
+    return 2.0 * batch * contract * lhs_free * rhs_free
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval  # kernel
+    # flops = 2 · out_elems · (kernel elems per output channel)
+    kernel_per_out = np.prod(rhs.shape, dtype=np.float64) / rhs.shape[-1]
+    return 2.0 * np.prod(out.shape, dtype=np.float64) * kernel_per_out
+
+
+# Ops whose OUTPUTS are genuine HBM writes. broadcast/iota/select are always
+# fusion-resident on XLA:TPU and are deliberately NOT counted.
+_MEMORY_PRIMS = {
+    "gather", "scatter", "scatter-add", "dynamic_slice", "dynamic_update_slice",
+    "take", "concatenate",
+}
+
+
+def _sub_jaxprs(eqn):
+    """All jaxprs referenced by an eqn's params (generic: covers pjit/jit,
+    remat2, closed_call, custom_*_call — any call-like primitive)."""
+    out = []
+    for v in eqn.params.values():
+        if isinstance(v, jcore.ClosedJaxpr):
+            out.append(v.jaxpr)
+        elif isinstance(v, jcore.Jaxpr):
+            out.append(v)
+        elif isinstance(v, (tuple, list)):
+            for item in v:
+                if isinstance(item, jcore.ClosedJaxpr):
+                    out.append(item.jaxpr)
+                elif isinstance(item, jcore.Jaxpr):
+                    out.append(item)
+    return out
+
+
+def _walk(jaxpr, costs: Costs, mult: float) -> None:
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "scan":
+            length = eqn.params["length"]
+            inner = eqn.params["jaxpr"].jaxpr
+            # carried state traffic: read+write once per iteration
+            carry_bytes = sum(_size_bytes(v.aval) for v in eqn.outvars)
+            costs.add("scan_carry", 0.0, carry_bytes, mult)
+            _walk(inner, costs, mult * length)
+        elif name == "while":
+            # bounded decode loops: treat body once (not used in hot paths)
+            _walk(eqn.params["body_jaxpr"].jaxpr, costs, mult)
+        elif name == "cond":
+            branches = eqn.params["branches"]
+            sub = Costs()
+            _walk(branches[0].jaxpr, sub, 1.0)
+            costs.add("cond", sub.flops, sub.bytes, mult)
+        elif name == "dot_general":
+            io_bytes = sum(_size_bytes(v.aval) for v in (*eqn.invars, *eqn.outvars))
+            costs.add(name, _dot_flops(eqn), io_bytes, mult)
+        elif name == "conv_general_dilated":
+            io_bytes = sum(_size_bytes(v.aval) for v in (*eqn.invars, *eqn.outvars))
+            costs.add(name, _conv_flops(eqn), io_bytes, mult)
+        elif name in _MEMORY_PRIMS:
+            costs.add(name, 0.0, sum(_size_bytes(v.aval) for v in eqn.outvars), mult)
+        elif name == "pallas_call":
+            # kernel-aware: HBM traffic = the call's operands/results (tiles
+            # stream through VMEM); flops = kernel body × grid size.
+            io_bytes = sum(_size_bytes(v.aval) for v in (*eqn.invars, *eqn.outvars))
+            grid = 1.0
+            gm = eqn.params.get("grid_mapping")
+            if gm is not None and getattr(gm, "grid", None):
+                grid = float(np.prod([g for g in gm.grid if isinstance(g, int)]))
+            sub = Costs()
+            inner = eqn.params.get("jaxpr")
+            if inner is not None:
+                _walk(inner.jaxpr if hasattr(inner, "jaxpr") else inner, sub, 1.0)
+            costs.add(name, sub.flops * grid, io_bytes, mult)
+        else:
+            for sub in _sub_jaxprs(eqn):
+                _walk(sub, costs, mult)
+
+
+def jaxpr_costs(fn, *args, **kwargs) -> Costs:
+    closed = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    costs = Costs()
+    _walk(closed.jaxpr, costs, 1.0)
+    # program inputs/outputs cross HBM once
+    io = sum(_size_bytes(v.aval) for v in (*closed.jaxpr.invars, *closed.jaxpr.outvars))
+    costs.add("program_io", 0.0, io, 1.0)
+    return costs
+
+
+# ---------------------------------------------------------------------------
+# collective bytes from partitioned HLO
+# ---------------------------------------------------------------------------
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _result_bytes(line: str, op: str) -> float:
+    """Result-shape bytes of an HLO instruction: the shape tokens between
+    '=' and the op name (handles tuple-shaped results, e.g. all-to-all)."""
+    if "=" not in line:
+        return 0.0
+    rhs = line.split("=", 1)[1]
+    cut = rhs.find(f" {op}(")
+    if cut == -1:
+        cut = rhs.find(f"{op}(")
+    region = rhs[:cut] if cut != -1 else rhs
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(region):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = np.prod([int(d) for d in dims.split(",") if d], dtype=np.float64) if dims else 1.0
+        total += float(n) * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str, loop_trip_count: float = 1.0) -> dict:
+    """Per-collective result bytes; non-ENTRY computations (fusion regions /
+    loop bodies) are multiplied by ``loop_trip_count`` (the layer-scan trips).
+    """
+    out = {c: 0.0 for c in _COLLECTIVES}
+    out["total"] = 0.0
+    in_entry = False
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        if raw.startswith("ENTRY"):
+            in_entry = True
+            continue
+        if raw and not raw[0].isspace() and raw.rstrip().endswith("{"):
+            in_entry = False
+            continue
+        for coll in _COLLECTIVES:
+            op = coll if f" {coll}(" in line else (f"{coll}-start" if f" {coll}-start(" in line else None)
+            if op:
+                mult = 1.0 if in_entry else loop_trip_count
+                b = _result_bytes(line, op) * mult
+                out[coll] += b
+                out["total"] += b
+                break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# roofline terms (TPU v5e)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link
+
+
+def roofline_terms(
+    *, total_flops: float, total_bytes: float, coll_bytes: float, chips: int
+) -> dict:
+    compute_s = total_flops / (chips * PEAK_FLOPS_BF16)
+    memory_s = total_bytes / (chips * HBM_BW)
+    collective_s = coll_bytes / (chips * ICI_BW)
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k] if k.endswith("_s") else -1)
+    return terms
+
+
+def model_flops_train(n_params: int, n_tokens: int, active_fraction: float = 1.0) -> float:
+    """6·N·D (fwd+bwd); MoE uses active params."""
+    return 6.0 * n_params * active_fraction * n_tokens
+
+
+def model_flops_infer(n_params: int, n_tokens: int, active_fraction: float = 1.0) -> float:
+    return 2.0 * n_params * active_fraction * n_tokens

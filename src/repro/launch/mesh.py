@@ -1,0 +1,28 @@
+"""Production mesh construction (TPU v5e pods).
+
+A FUNCTION (not module-level constant) so importing never touches jax device
+state. Single pod: 16×16 = 256 chips ("data", "model"). Multi-pod: 2×16×16 =
+512 chips ("pod", "data", "model") — the pod axis is an outer data-parallel
+axis whose gradient all-reduce crosses the inter-pod DCN once per step.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1) -> jax.sharding.Mesh:
+    """Tiny mesh over whatever devices exist (tests / examples on CPU)."""
+    n = len(jax.devices())
+    model_axis = min(model_axis, n)
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def data_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """The (pure) data-parallel axes of a mesh: everything except "model"."""
+    return tuple(a for a in mesh.axis_names if a != "model")

@@ -1,0 +1,142 @@
+"""Parameter / batch / cache sharding rules with a divisibility resolver.
+
+Rules are *path-based* and aligned to the **trailing** dims of each leaf, so
+they apply uniformly to plain params, layer-stacked params (leading group
+axis), optimizer moments (m/… and v/… mirror param paths), and ring caches.
+
+JAX requires jit input shardings to divide dims evenly; ``resolve`` drops any
+mesh axis that does not divide its dim (documented fallback: replicate).
+Vocab is padded to a multiple of 256 at model level, so embeddings always
+shard on "model" (16 | padded_vocab).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.tree import path_str
+from .mesh import data_axes
+
+# column-parallel matmuls: shard OUTPUT (last) dim on "model";
+# FSDP additionally shards the input (second-to-last) dim on the data axes.
+_COL = re.compile(
+    r"(wq|wk|wv|wi|wg|wq_a|wq_b|wkv_a|wk_rope|wk_b|wv_b|w_gate|w_rec|w_z|w_x|w_B|w_C|w_dt|w_a)/w$"
+)
+# row-parallel matmuls: shard INPUT (second-to-last) dim on "model".
+_ROW = re.compile(r"(wo|out_proj|w_out)/w$")
+_EMBED = re.compile(r"(embed|unembed)/table$")
+_ROUTER = re.compile(r"router/w$")
+
+# cache leaves (trailing-dims layout)
+_CACHE_KV = {"k": 4, "v": 4}          # (..., B, C, KV, hd)
+_CACHE_LATENT = {"c_kv": 3, "k_rope": 3}  # (..., B, C, R)
+_CACHE_STATE = {"conv": 3, "ssm": 4, "h": 2}  # (..., B, rest...)
+
+
+def _pad_spec(ndim: int, trailing: list) -> P:
+    return P(*([None] * (ndim - len(trailing)) + trailing))
+
+
+def param_spec(path: str, ndim: int, *, fsdp: bool, dp) -> P:
+    """Trailing-dim aligned PartitionSpec for a parameter leaf."""
+    if ndim < 2:
+        return P()
+    if _EMBED.search(path):
+        return _pad_spec(ndim, ["model", dp if fsdp else None])
+    if _ROUTER.search(path):
+        return P()
+    if _COL.search(path):
+        return _pad_spec(ndim, [dp if fsdp else None, "model"])
+    if _ROW.search(path):
+        return _pad_spec(ndim, ["model", dp if fsdp else None])
+    return P()
+
+
+def cache_spec(path: str, ndim: int, *, dp) -> P:
+    """KV caches: batch on data axes, ring/seq dim on "model" (sequence-
+    parallel cache → per-chip cache memory /16; XLA inserts the partial-
+    softmax collectives). States: batch on data axes only."""
+    leaf = path.rsplit("/", 1)[-1]
+    if leaf in _CACHE_KV:
+        return _pad_spec(ndim, [dp, "model", None, None])
+    if leaf in _CACHE_LATENT:
+        return _pad_spec(ndim, [dp, "model", None])
+    if leaf in ("cross_k", "cross_v"):
+        return _pad_spec(ndim, [dp, None, None, None])
+    if leaf in _CACHE_STATE:
+        n_rest = {"conv": 2, "ssm": 3, "h": 1}[leaf]
+        return _pad_spec(ndim, [dp] + [None] * n_rest)
+    return P()  # slot_pos etc.
+
+
+def batch_spec(ndim: int, *, dp) -> P:
+    return _pad_spec(ndim, [dp] + [None] * (ndim - 1))
+
+
+def resolve(spec: P, shape: tuple, mesh: Mesh) -> NamedSharding:
+    """Drop axes that don't divide their dim; returns a NamedSharding."""
+    out = []
+    for dim, axis in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axis is None:
+            out.append(None)
+            continue
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if dim % size == 0:
+            out.append(axis)
+        else:
+            # fallback 1: a single data axis; fallback 2: replicate
+            if isinstance(axis, tuple) and len(axis) > 1 and dim % mesh.shape[axis[-1]] == 0:
+                out.append(axis[-1])
+            else:
+                out.append(None)
+    return NamedSharding(mesh, P(*out))
+
+
+def _dp(mesh: Mesh):
+    axes = data_axes(mesh)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def tree_shardings(tree: Any, mesh: Mesh, spec_fn) -> Any:
+    """Map (path, leaf) → resolved NamedSharding over a pytree of
+    ShapeDtypeStructs or arrays."""
+
+    def _one(path, leaf):
+        spec = spec_fn(path_str(path), len(leaf.shape))
+        return resolve(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(_one, tree)
+
+
+def param_shardings(params: Any, mesh: Mesh, *, fsdp: bool = False) -> Any:
+    dp = _dp(mesh)
+    return tree_shardings(params, mesh, lambda p, nd: param_spec(p, nd, fsdp=fsdp, dp=dp))
+
+
+def opt_state_shardings(opt_state: Any, mesh: Mesh, *, fsdp: bool = False) -> Any:
+    # optimizer moment paths embed the param path ("m/blocks/.../wq/w"),
+    # so the same rules apply; scalars and factored moments replicate.
+    dp = _dp(mesh)
+    return tree_shardings(opt_state, mesh, lambda p, nd: param_spec(p, nd, fsdp=fsdp, dp=dp))
+
+
+def cache_shardings(cache: Any, mesh: Mesh) -> Any:
+    dp = _dp(mesh)
+    return tree_shardings(cache, mesh, lambda p, nd: cache_spec(p, nd, dp=dp))
+
+
+def batch_shardings(batch: Any, mesh: Mesh) -> Any:
+    dp = _dp(mesh)
+    return tree_shardings(batch, mesh, lambda p, nd: batch_spec(nd, dp=dp))
+
+
+def with_shardings(tree: Any, shardings: Any) -> Any:
+    """Attach shardings to ShapeDtypeStructs (for .lower())."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh), tree, shardings
+    )

@@ -1,0 +1,109 @@
+"""Assigned input shapes + ShapeDtypeStruct builders for every step kind.
+
+Shapes (assigned):
+    train_4k     seq=4096    global_batch=256   (training     → train_step)
+    prefill_32k  seq=32768   global_batch=32    (inference    → prefill_step)
+    decode_32k   seq=32768   global_batch=128   (decode       → serve_step)
+    long_500k    seq=524288  global_batch=1     (long decode  → serve_step)
+
+Carve-outs (DESIGN.md §4):
+  * vlm: 256 stub patch embeddings count against the token budget
+    (text = seq − 256); decode shapes are pure text continuation.
+  * audio enc-dec: seq budget split 50/50 encoder frames / decoder tokens;
+    decode caches a fixed 4096-frame encoder memory.
+  * long_500k: SSM/hybrid run natively; all attention archs decode with the
+    sliding-window variant (window = cfg.long_context_window) — the
+    full-quadratic variant is what gets skipped, not the arch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, build_model
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+AUDIO_DECODE_FRAMES = 4096  # bounded encoder memory for decode shapes
+
+
+def decode_window_override(cfg: ModelConfig, shape: InputShape) -> int | None:
+    """Sliding-window override for long-context decode on attention archs."""
+    if shape.name != "long_500k":
+        return None
+    if cfg.arch_type == "ssm" or cfg.sliding_window:
+        return None  # natively sub-quadratic / already windowed
+    if cfg.attention == "none":
+        return None
+    return cfg.long_context_window
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, *, batch_override: int | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for the step's data inputs (no params)."""
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    i32 = jnp.int32
+    f = jnp.dtype(cfg.dtype)
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.is_encdec:
+            s2 = S // 2
+            specs = {
+                "frames": jax.ShapeDtypeStruct((B, s2, cfg.d_model), f),
+                "tokens": jax.ShapeDtypeStruct((B, s2), i32),
+            }
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((B, s2), i32)
+            return specs
+        specs = {}
+        s_text = S
+        if cfg.frontend == "vision":
+            s_text = S - cfg.frontend_tokens
+            specs["embeds"] = jax.ShapeDtypeStruct((B, cfg.frontend_tokens, cfg.d_model), f)
+        specs["tokens"] = jax.ShapeDtypeStruct((B, s_text), i32)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, s_text), i32)
+        return specs
+
+    # decode: one token against a seq_len-deep cache
+    return {
+        "token": jax.ShapeDtypeStruct((B,), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape, params_shapes=None, *, batch_override: int | None = None) -> dict:
+    """Abstract cache pytree for decode shapes (eval_shape — no allocation)."""
+    B = batch_override or shape.global_batch
+    model = build_model(cfg)
+    wo = decode_window_override(cfg, shape)
+    if cfg.is_encdec:
+        frames = jax.ShapeDtypeStruct((B, AUDIO_DECODE_FRAMES, cfg.d_model), jnp.dtype(cfg.dtype))
+        return jax.eval_shape(
+            lambda p, fr: model.init_cache(p, fr, capacity=shape.seq_len, window_override=wo),
+            params_shapes, frames,
+        )
+    return jax.eval_shape(
+        lambda: model.init_cache(B, capacity=shape.seq_len, window_override=wo)
+    )
+
+
+def params_specs(cfg: ModelConfig) -> dict:
+    model = build_model(cfg)
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))

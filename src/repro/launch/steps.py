@@ -1,0 +1,94 @@
+"""Step builders: train_step / prefill_step / serve_step per architecture.
+
+These are the functions the dry-run lowers and the launchers jit. All three
+are pure (params, state, batch) functions suitable for pjit/GSPMD.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, build_model
+from repro.optim import Optimizer, adafactor, adamw, apply_updates
+
+# Models whose optimizer-moment memory would not fit with full Adam on the
+# production mesh use factored moments (Adafactor) — standard practice for
+# 100B+ training.
+ADAFACTOR_THRESHOLD = 50_000_000_000
+
+
+def default_optimizer(cfg: ModelConfig, approx_params: int | None = None) -> Optimizer:
+    if approx_params is not None and approx_params >= ADAFACTOR_THRESHOLD:
+        return adafactor(1e-4)
+    if cfg.name.startswith("grok-1"):
+        return adafactor(1e-4)
+    return adamw(2e-5)
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, *, remat: bool = True,
+                    microbatches: int = 1) -> Callable:
+    """One optimizer step. ``microbatches`` > 1 scans the global batch in
+    micro-slices, accumulating grads in f32 — activation memory drops by the
+    microbatch factor at the cost of re-reading weights per micro-step (the
+    standard trade for fitting long-sequence training on 16 GB chips).
+    """
+    model = build_model(cfg)
+
+    def grad_fn(params, batch):
+        def loss_fn(p):
+            return model.loss(p, batch, remat=remat)
+
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:]),
+                batch,
+            )
+
+            def body(acc, mb):
+                (l, m), g = grad_fn(params, mb)
+                acc = jax.tree.map(lambda a, gi: a + gi.astype(jnp.float32) / microbatches, acc, g)
+                return acc, (l, m)
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, metricses) = jax.lax.scan(body, zeros, micro)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda v: v.mean(axis=0), metricses)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        out_metrics = {"loss": loss, **metrics}
+        return params, opt_state, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    model = build_model(cfg)
+
+    def prefill_step(params, batch):
+        if cfg.is_encdec:
+            logits, _ = model.apply(params, batch["tokens"], batch["frames"])
+        else:
+            logits, _ = model.apply(params, batch["tokens"], batch.get("embeds"))
+        # next-token ids for the last position (what a serving stack returns)
+        next_token = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+        return next_token, logits[:, -1]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, window_override: int | None = None) -> Callable:
+    model = build_model(cfg)
+
+    def serve_step(params, token, cache, pos):
+        logits, cache = model.decode_step(params, token, cache, pos, window_override=window_override)
+        next_token = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+        return next_token, cache
+
+    return serve_step

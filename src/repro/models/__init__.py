@@ -1,0 +1,14 @@
+from .common import ModelConfig
+from .cnn import MnistCNN, ResNet
+from .encdec import EncDecLM
+from .transformer import DecoderLM
+
+
+def build_model(cfg: ModelConfig):
+    """Config → model object with init/apply/loss (+decode for LMs)."""
+    if cfg.is_encdec:
+        return EncDecLM(cfg)
+    return DecoderLM(cfg)
+
+
+__all__ = ["ModelConfig", "DecoderLM", "EncDecLM", "MnistCNN", "ResNet", "build_model"]

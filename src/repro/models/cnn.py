@@ -1,0 +1,170 @@
+"""Paper-experiment vision models: the MNIST CNN (§4.2) and a ResNet for
+CIFAR (§4.3), pure-functional JAX.
+
+The paper's MNIST net: two conv layers with max pooling + ReLU, then dense.
+The CIFAR net is ResNet-18-style; we use GroupNorm instead of BatchNorm so the
+model stays purely functional (no mutable running stats) — running-stat
+averaging is orthogonal to the federation mechanism under study, and GN-ResNets
+are the standard choice in FL research for exactly this reason (noted in
+DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _conv_init(rng, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    w = jax.random.normal(rng, (kh, kw, cin, cout), jnp.float32) * math.sqrt(2.0 / fan_in)
+    return {"w": w, "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def _conv(p, x, stride=1):
+    out = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + p["b"]
+
+
+def _dense_init(rng, d_in, d_out):
+    w = jax.random.normal(rng, (d_in, d_out), jnp.float32) * math.sqrt(1.0 / d_in)
+    return {"w": w, "b": jnp.zeros((d_out,), jnp.float32)}
+
+
+def _dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def _groupnorm_init(c):
+    return {"scale": jnp.ones((c,), jnp.float32), "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def _groupnorm(p, x, groups=8):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    xg = x.reshape(B, H, W, g, C // g)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + 1e-5)
+    return xg.reshape(B, H, W, C) * p["scale"] + p["bias"]
+
+
+def _maxpool(x, k=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1), "VALID"
+    )
+
+
+# ---------------------------------------------------------------------------
+# MNIST CNN (paper §4.2)
+# ---------------------------------------------------------------------------
+
+
+class MnistCNN:
+    """conv(32)→pool→relu → conv(64)→pool→relu → dense(128) → dense(10)."""
+
+    def __init__(self, num_classes: int = 10, in_channels: int = 1, hw: int = 28):
+        self.num_classes = num_classes
+        self.in_channels = in_channels
+        self.flat = (hw // 4) ** 2 * 64
+
+    def init(self, rng) -> dict:
+        ks = jax.random.split(rng, 4)
+        return {
+            "conv1": _conv_init(ks[0], 3, 3, self.in_channels, 32),
+            "conv2": _conv_init(ks[1], 3, 3, 32, 64),
+            "fc1": _dense_init(ks[2], self.flat, 128),
+            "fc2": _dense_init(ks[3], 128, self.num_classes),
+        }
+
+    def apply(self, params, x):
+        x = jax.nn.relu(_maxpool(_conv(params["conv1"], x)))
+        x = jax.nn.relu(_maxpool(_conv(params["conv2"], x)))
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(_dense(params["fc1"], x))
+        return _dense(params["fc2"], x)
+
+    def loss(self, params, batch, rng=None):
+        logits = self.apply(params, batch["x"])
+        labels = batch["y"]
+        logp = jax.nn.log_softmax(logits)
+        ce = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        return ce, {"accuracy": acc}
+
+
+# ---------------------------------------------------------------------------
+# ResNet (paper §4.3 uses ResNet-18 on CIFAR-10)
+# ---------------------------------------------------------------------------
+
+
+def _block_init(rng, cin, cout, stride):
+    ks = jax.random.split(rng, 3)
+    p = {
+        "conv1": _conv_init(ks[0], 3, 3, cin, cout),
+        "gn1": _groupnorm_init(cout),
+        "conv2": _conv_init(ks[1], 3, 3, cout, cout),
+        "gn2": _groupnorm_init(cout),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = _conv_init(ks[2], 1, 1, cin, cout)
+    return p
+
+
+def _block(p, x, stride):
+    h = jax.nn.relu(_groupnorm(p["gn1"], _conv(p["conv1"], x, stride)))
+    h = _groupnorm(p["gn2"], _conv(p["conv2"], h))
+    shortcut = _conv(p["proj"], x, stride) if "proj" in p else x
+    return jax.nn.relu(h + shortcut)
+
+
+class ResNet:
+    """ResNet-18 topology (2-2-2-2 basic blocks), GroupNorm, CIFAR stem."""
+
+    STAGES = [(64, 1), (128, 2), (256, 2), (512, 2)]
+
+    def __init__(self, num_classes: int = 10, in_channels: int = 3, width: int = 1,
+                 blocks_per_stage: int = 2):
+        self.num_classes = num_classes
+        self.in_channels = in_channels
+        self.width = width
+        self.bps = blocks_per_stage
+
+    def init(self, rng) -> dict:
+        ks = jax.random.split(rng, 2 + len(self.STAGES) * self.bps)
+        params = {
+            "stem": _conv_init(ks[0], 3, 3, self.in_channels, 64 * self.width // 1),
+            "gn0": _groupnorm_init(64 * self.width // 1),
+        }
+        cin = 64 * self.width // 1
+        idx = 1
+        for s, (cout_base, stride) in enumerate(self.STAGES):
+            cout = cout_base * self.width // 1
+            for b in range(self.bps):
+                params[f"s{s}b{b}"] = _block_init(ks[idx], cin, cout, stride if b == 0 else 1)
+                cin = cout
+                idx += 1
+        params["fc"] = _dense_init(ks[idx], cin, self.num_classes)
+        return params
+
+    def apply(self, params, x):
+        x = jax.nn.relu(_groupnorm(params["gn0"], _conv(params["stem"], x)))
+        for s, (_, stride) in enumerate(self.STAGES):
+            for b in range(self.bps):
+                x = _block(params[f"s{s}b{b}"], x, stride if b == 0 else 1)
+        x = x.mean(axis=(1, 2))
+        return _dense(params["fc"], x)
+
+    def loss(self, params, batch, rng=None):
+        logits = self.apply(params, batch["x"])
+        labels = batch["y"]
+        logp = jax.nn.log_softmax(logits)
+        ce = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        return ce, {"accuracy": acc}

@@ -1,0 +1,192 @@
+"""Encoder-decoder transformer (seamless-m4t-medium backbone, arXiv:2308.11596).
+
+The speech frontend (mel-spectrogram + conv feature extractor) is a STUB per
+the assignment carve-out: the encoder consumes precomputed frame embeddings
+(B, S_src, d_model). The decoder is a standard causal transformer with
+cross-attention over the encoder memory; ``decode_step`` carries a
+self-attention ring cache plus a precomputed cross-attention K/V memory.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from .common import (
+    ModelConfig,
+    dense_apply,
+    dense_init,
+    embedding_apply,
+    embedding_init,
+    mlp_apply,
+    mlp_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+    softmax_cross_entropy,
+    token_accuracy,
+    unembed_apply,
+)
+
+
+def _init_cross_attn(rng, cfg: ModelConfig) -> dict:
+    hd = cfg.head_dim_
+    dt = cfg.jdtype
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(k1, cfg.d_model, cfg.n_heads * hd, dt),
+        "wk": dense_init(k2, cfg.d_model, cfg.n_kv_heads * hd, dt),
+        "wv": dense_init(k3, cfg.d_model, cfg.n_kv_heads * hd, dt),
+        "wo": dense_init(k4, cfg.n_heads * hd, cfg.d_model, dt),
+    }
+
+
+def _cross_kv(p, cfg: ModelConfig, memory):
+    B, T, _ = memory.shape
+    hd = cfg.head_dim_
+    k = dense_apply(p["wk"], memory).reshape(B, T, cfg.n_kv_heads, hd)
+    v = dense_apply(p["wv"], memory).reshape(B, T, cfg.n_kv_heads, hd)
+    return k, v
+
+
+def _cross_attend(p, cfg: ModelConfig, x, k, v):
+    B, S, _ = x.shape
+    hd = cfg.head_dim_
+    q = dense_apply(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    G = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, S, cfg.n_kv_heads, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32)).astype(x.dtype)
+    return dense_apply(p["wo"], out.reshape(B, S, cfg.n_heads * hd))
+
+
+def _init_enc_layer(rng, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "norm1": rmsnorm_init(cfg.d_model, cfg.jdtype),
+        "attn": attn_mod.init_attention(k1, cfg),
+        "norm2": rmsnorm_init(cfg.d_model, cfg.jdtype),
+        "mlp": mlp_init(k2, cfg),
+    }
+
+
+def _init_dec_layer(rng, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "norm1": rmsnorm_init(cfg.d_model, cfg.jdtype),
+        "self_attn": attn_mod.init_attention(k1, cfg),
+        "norm_x": rmsnorm_init(cfg.d_model, cfg.jdtype),
+        "cross": _init_cross_attn(k2, cfg),
+        "norm2": rmsnorm_init(cfg.d_model, cfg.jdtype),
+        "mlp": mlp_init(k3, cfg),
+    }
+
+
+class EncDecLM:
+    """Speech-to-text enc-dec; encoder input is stub frame embeddings."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        k_emb, k_enc, k_dec = jax.random.split(rng, 3)
+        enc_ks = jax.random.split(k_enc, cfg.encoder_layers)
+        dec_ks = jax.random.split(k_dec, cfg.n_layers)
+        return {
+            "embed": embedding_init(k_emb, cfg.padded_vocab, cfg.d_model, cfg.jdtype),
+            "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_ks),
+            "enc_norm": rmsnorm_init(cfg.d_model, cfg.jdtype),
+            "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_ks),
+            "final_norm": rmsnorm_init(cfg.d_model, cfg.jdtype),
+        }
+
+    def encode(self, params, frames, *, remat: bool = False):
+        """frames: (B, S_src, D) stub embeddings → memory (B, S_src, D).
+
+        Encoder self-attention is bidirectional (full, non-causal)."""
+        cfg = self.cfg
+
+        def body(x, p):
+            h = rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
+            # non-causal: reuse attn machinery with an all-true mask via window=0
+            B, S, _ = h.shape
+            positions = jnp.arange(S)[None, :]
+            q, k, v = attn_mod._project_qkv(p["attn"], cfg, h, positions)
+            G = cfg.n_heads // cfg.n_kv_heads
+            qg = q.reshape(B, S, cfg.n_kv_heads, G, cfg.head_dim_)
+            mask = jnp.ones((S, S), bool)
+            x = x + dense_apply(
+                p["attn"]["wo"],
+                attn_mod._sdpa(qg, k, v, mask, 0.0).reshape(B, S, cfg.n_heads * cfg.head_dim_),
+            )
+            h = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
+            return x + mlp_apply(p["mlp"], h, cfg.activation), None
+
+        body_fn = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(body_fn, frames.astype(cfg.jdtype), params["enc_layers"])
+        return rmsnorm_apply(params["enc_norm"], x, cfg.norm_eps)
+
+    def apply(self, params, tokens, frames, *, remat: bool = False):
+        """Teacher-forced decode over full target sequence → (logits, aux=0)."""
+        cfg = self.cfg
+        memory = self.encode(params, frames, remat=remat)
+        x = embedding_apply(params["embed"], tokens) * jnp.asarray(cfg.d_model**0.5, cfg.jdtype)
+
+        def body(x, p):
+            h = rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
+            x = x + attn_mod.attn_full(p["self_attn"], cfg, h)
+            h = rmsnorm_apply(p["norm_x"], x, cfg.norm_eps)
+            k, v = _cross_kv(p["cross"], cfg, memory)
+            x = x + _cross_attend(p["cross"], cfg, h, k, v)
+            h = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
+            return x + mlp_apply(p["mlp"], h, cfg.activation), None
+
+        body_fn = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(body_fn, x, params["dec_layers"])
+        x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+        return unembed_apply(params["embed"], x), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch, rng=None, *, remat: bool = False):
+        cfg = self.cfg
+        logits, _ = self.apply(params, batch["tokens"], batch["frames"], remat=remat)
+        ce = softmax_cross_entropy(logits, batch["labels"], valid_vocab=cfg.vocab_size)
+        return ce.mean(), {"ce": ce.mean(), "accuracy": token_accuracy(logits, batch["labels"])}
+
+    # -- decode ----------------------------------------------------------------
+    def init_cache(self, params, frames, capacity: int, *, window_override: int | None = None) -> dict:
+        """Precompute encoder memory + per-layer cross K/V; empty self cache."""
+        cfg = self.cfg
+        memory = self.encode(params, frames)
+        cross_kv = jax.vmap(lambda p: _cross_kv(p, cfg, memory))(params["dec_layers"]["cross"])
+        B = frames.shape[0]
+        window = window_override if window_override is not None else cfg.sliding_window
+        cap = min(capacity, window) if window else capacity
+        one = attn_mod.init_attn_cache(cfg, B, cap)
+        self_cache = jax.tree.map(lambda l: jnp.broadcast_to(l[None], (cfg.n_layers,) + l.shape), one)
+        return {"cross_k": cross_kv[0], "cross_v": cross_kv[1], "self": self_cache}
+
+    def decode_step(self, params, token, cache, pos, *, window_override: int | None = None):
+        cfg = self.cfg
+        x = embedding_apply(params["embed"], token[:, None]) * jnp.asarray(cfg.d_model**0.5, cfg.jdtype)
+
+        def body(x, scanned):
+            p, self_cache, ck, cv = scanned
+            h = rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
+            a, self_cache = attn_mod.attn_decode(p["self_attn"], cfg, h, self_cache, pos,
+                                                 window=window_override)
+            x = x + a
+            h = rmsnorm_apply(p["norm_x"], x, cfg.norm_eps)
+            x = x + _cross_attend(p["cross"], cfg, h, ck, cv)
+            h = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
+            return x + mlp_apply(p["mlp"], h, cfg.activation), self_cache
+
+        x, new_self = jax.lax.scan(
+            body, x, (params["dec_layers"], cache["self"], cache["cross_k"], cache["cross_v"])
+        )
+        x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+        logits = unembed_apply(params["embed"], x[:, 0])
+        return logits, {**cache, "self": new_self}

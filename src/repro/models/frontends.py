@@ -1,0 +1,25 @@
+"""Modality frontend STUBS (the one allowed carve-out).
+
+[vlm] and [audio] architectures specify the transformer backbone only; the
+ViT / conv-codec frontends are stubbed: ``input_specs()`` (repro.launch.specs)
+provides precomputed patch/frame embeddings of the right shape, and these
+helpers generate concrete embeddings for smoke tests / examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+
+
+def stub_patch_embeddings(rng, cfg: ModelConfig, batch: int) -> jnp.ndarray:
+    """(B, n_patches, d_model) — stands in for InternViT + MLP projector."""
+    n = cfg.frontend_tokens
+    return jax.random.normal(rng, (batch, n, cfg.d_model), jnp.float32).astype(cfg.jdtype) * 0.02
+
+
+def stub_audio_frames(rng, cfg: ModelConfig, batch: int, n_frames: int | None = None) -> jnp.ndarray:
+    """(B, n_frames, d_model) — stands in for mel-spec + conv feature extractor."""
+    n = n_frames or cfg.frontend_tokens
+    return jax.random.normal(rng, (batch, n, cfg.d_model), jnp.float32).astype(cfg.jdtype) * 0.02

@@ -1,0 +1,96 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block: two branches — (linear → GeLU) gate branch and (linear → causal conv1d
+→ RG-LRU) recurrent branch — merged multiplicatively then projected out.
+
+RG-LRU recurrence (per channel):
+    r_t = σ(W_a x_t),  i_t = σ(W_x x_t)
+    a_t = exp(-c · softplus(Λ) · r_t)
+    h_t = a_t h_{t-1} + sqrt(1 − a_t²) · (i_t ⊙ x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` (log-depth parallel scan —
+the TPU-native answer to the paper's custom GPU scan kernel); decode is a
+single fused step carrying (conv_state, h).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_apply, dense_init
+from .ssm import causal_conv1d
+
+
+def init_rglru(rng, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dr = d  # lru width = d_model
+    dt = cfg.jdtype
+    ks = jax.random.split(rng, 6)
+    # Λ init so that a ∈ [0.9, 0.999] at r=1 (Griffin appendix)
+    u = jax.random.uniform(ks[0], (dr,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / cfg.rglru_c))  # softplus^{-1}
+    return {
+        "w_gate": dense_init(ks[1], d, dr, dt),     # GeLU branch
+        "w_rec": dense_init(ks[2], d, dr, dt),      # recurrent branch input
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv1d_width, dr), jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((dr,), dt),
+        "w_a": dense_init(ks[4], dr, dr, dt, scale=0.02),
+        "w_x": dense_init(ks[5], dr, dr, dt, scale=0.02),
+        "lambda": lam,
+        "w_out": dense_init(jax.random.split(ks[0])[1], dr, d, dt),
+    }
+
+
+def _gates(p: dict, cfg: ModelConfig, x: jnp.ndarray):
+    r = jax.nn.sigmoid(dense_apply(p["w_a"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense_apply(p["w_x"], x).astype(jnp.float32))
+    log_a = -cfg.rglru_c * jax.nn.softplus(p["lambda"]) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (i * x.astype(jnp.float32))
+    return a, gated_in
+
+
+def rglru_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray | None = None) -> jnp.ndarray:
+    """h_t = a_t h_{t-1} + b_t along axis 1, via parallel associative scan."""
+    if h0 is not None:
+        # fold initial state into the first element
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        a1, b1 = l
+        a2, b2 = r
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_full(p: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B,S,D) → (B,S,D)."""
+    gate = jax.nn.gelu(dense_apply(p["w_gate"], x), approximate=True)
+    u = dense_apply(p["w_rec"], x)
+    u = causal_conv1d(u, p["conv_w"], p["conv_b"])
+    a, b = _gates(p, cfg, u)
+    h = rglru_scan(a, b).astype(x.dtype)
+    return dense_apply(p["w_out"], h * gate)
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=None) -> dict:
+    dr = cfg.d_model
+    dt = dtype or cfg.jdtype
+    return {
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, dr), dt),
+        "h": jnp.zeros((batch, dr), jnp.float32),
+    }
+
+
+def rglru_decode(p: dict, cfg: ModelConfig, x: jnp.ndarray, cache: dict) -> tuple[jnp.ndarray, dict]:
+    """x: (B,1,D)."""
+    gate = jax.nn.gelu(dense_apply(p["w_gate"], x), approximate=True)
+    u = dense_apply(p["w_rec"], x)                     # (B,1,dr)
+    window = jnp.concatenate([cache["conv"], u], axis=1)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"])[:, None]
+    a, b = _gates(p, cfg, conv_out)
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    out = dense_apply(p["w_out"], h[:, None].astype(x.dtype) * gate)
+    return out, {"conv": window[:, 1:], "h": h}

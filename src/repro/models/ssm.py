@@ -1,0 +1,221 @@
+"""Mamba2 — state-space duality (SSD) block [arXiv:2405.21060].
+
+Full-sequence path uses the *chunked dual form*: intra-chunk attention-like
+matmuls (MXU-friendly) + an inter-chunk linear recurrence over chunk states.
+``ssd_chunked`` is the pure-jnp reference; the Pallas kernel
+(repro.kernels.ssd_scan) implements the same contraction with VMEM tiling and
+is validated against ``ssd_sequential`` / ``ssd_chunked``.
+
+Decode carries (conv_state, ssm_state) — O(1) per token, which is why
+mamba2 runs the ``long_500k`` shape natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_apply, dense_init, rmsnorm_apply, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Lower-triangular cumulative segment sums: out[..., i, j] = sum x[j+1..i]."""
+    c = x.shape[-1]
+    cum = jnp.cumsum(x, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,      # (B, S, H, P) — inputs, already multiplied by dt
+    dA: jnp.ndarray,     # (B, S, H)    — dt * A (negative)
+    Bm: jnp.ndarray,     # (B, S, H, N) — input matrix (groups broadcast to H)
+    Cm: jnp.ndarray,     # (B, S, H, N)
+    chunk: int,
+    initial_state: jnp.ndarray | None = None,  # (B, H, P, N)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD dual form. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    if S % chunk != 0:
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // chunk
+
+    xc = x.reshape(Bsz, nc, chunk, H, P).astype(jnp.float32)
+    dAc = dA.reshape(Bsz, nc, chunk, H).transpose(0, 3, 1, 2).astype(jnp.float32)  # (B,H,nc,c)
+    Bc = Bm.reshape(Bsz, nc, chunk, H, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, chunk, H, N).astype(jnp.float32)
+
+    A_cumsum = jnp.cumsum(dAc, axis=-1)                       # (B,H,nc,c)
+    L = jnp.exp(segsum(dAc))                                  # (B,H,nc,c,c)
+    # 1. intra-chunk (diagonal blocks)
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", Cc, Bc, L, xc)
+    # 2. chunk states: contribution of each chunk to its final state
+    decay_states = jnp.exp(A_cumsum[..., -1:] - A_cumsum)     # (B,H,nc,c)
+    states = jnp.einsum("bcshn,bhcs,bcshp->bchpn", Bc, decay_states, xc)  # (B,nc,H,P,N)
+    # 3. inter-chunk recurrence: state_{c} = decay_c * state_{c-1} + states_c
+    chunk_decay = jnp.exp(A_cumsum[..., -1])                  # (B,H,nc)
+    init = (
+        jnp.zeros((Bsz, H, P, N), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(carry, inp):
+        st, dec = inp                                          # (B,H,P,N), (B,H)
+        prev = carry
+        new = prev * dec[..., None, None] + st
+        return new, prev                                       # emit state ENTERING the chunk
+
+    states_t = states.transpose(1, 0, 2, 3, 4)                 # (nc,B,H,P,N)
+    decay_t = chunk_decay.transpose(2, 0, 1)                   # (nc,B,H)
+    final_state, prev_states = jax.lax.scan(step, init, (states_t, decay_t))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)         # (B,nc,H,P,N)
+    # 4. inter-chunk output: y_off[l] = C_l · (decay into l) · prev_state
+    state_decay_out = jnp.exp(A_cumsum)                        # (B,H,nc,c)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", Cc, prev_states, state_decay_out)
+
+    y = (y_diag + y_off).reshape(Bsz, Sp, H, P)[:, :S]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_sequential(x, dA, Bm, Cm, initial_state=None):
+    """O(S) sequential oracle: h_t = exp(dA_t) h_{t-1} + B_t ⊗ x_t; y_t = C_t·h_t."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    h0 = (
+        jnp.zeros((Bsz, H, P, N), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(h, inp):
+        xt, dat, bt, ct = inp
+        h = h * jnp.exp(dat)[..., None, None] + xt[..., :, None] * bt[..., None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct)
+        return h, y
+
+    xs = (
+        x.transpose(1, 0, 2, 3).astype(jnp.float32),
+        dA.transpose(1, 0, 2).astype(jnp.float32),
+        Bm.transpose(1, 0, 2, 3).astype(jnp.float32),
+        Cm.transpose(1, 0, 2, 3).astype(jnp.float32),
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    return d_inner, H, cfg.ssm_state
+
+
+def init_mamba2(rng, cfg: ModelConfig) -> dict:
+    d_inner, H, N = _dims(cfg)
+    dt = cfg.jdtype
+    ks = jax.random.split(rng, 6)
+    conv_ch = d_inner + 2 * N  # x, B, C all pass through the causal conv
+    k_z, k_x, k_B, k_C, k_dt = jax.random.split(ks[0], 5)
+    return {
+        # separate projections (not one fused in_proj) so each output dim can
+        # shard independently on the "model" mesh axis (d_inner % 16 == 0
+        # even when the fused width is not divisible)
+        "w_z": dense_init(k_z, cfg.d_model, d_inner, dt),
+        "w_x": dense_init(k_x, cfg.d_model, d_inner, dt),
+        "w_B": dense_init(k_B, cfg.d_model, N, dt),
+        "w_C": dense_init(k_C, cfg.d_model, N, dt),
+        "w_dt": dense_init(k_dt, cfg.d_model, H, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": rmsnorm_init(d_inner, dt),
+        "out_proj": dense_init(ks[2], d_inner, cfg.d_model, dt),
+    }
+
+
+def _project_in(p: dict, cfg: ModelConfig, x: jnp.ndarray):
+    z = dense_apply(p["w_z"], x)
+    xBC = jnp.concatenate(
+        [dense_apply(p["w_x"], x), dense_apply(p["w_B"], x), dense_apply(p["w_C"], x)], axis=-1
+    )
+    dt_raw = dense_apply(p["w_dt"], x)
+    return z, xBC, dt_raw
+
+
+def causal_conv1d(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv along time. xBC: (B,S,C); w: (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xBC.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def mamba2_full(p: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    B, S, _ = x.shape
+    d_inner, H, N = _dims(cfg)
+    z, xBC, dt_raw = _project_in(p, cfg, x)
+    xBC = causal_conv1d(xBC, p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])     # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                            # (H,)
+    xh = xs.reshape(B, S, H, cfg.ssm_head_dim)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+    dA = dt * A
+    Bh = jnp.broadcast_to(Bm[:, :, None, :], (B, S, H, N))
+    Ch = jnp.broadcast_to(Cm[:, :, None, :], (B, S, H, N))
+    y, _ = ssd_chunked(xdt, dA, Bh, Ch, cfg.ssm_chunk)
+    y = y + xh * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm_apply(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return dense_apply(p["out_proj"], y)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=None) -> dict:
+    d_inner, H, N = _dims(cfg)
+    dt = dtype or cfg.jdtype
+    conv_ch = d_inner + 2 * N
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dt),
+        "ssm": jnp.zeros((batch, H, cfg.ssm_head_dim, N), jnp.float32),
+    }
+
+
+def mamba2_decode(p: dict, cfg: ModelConfig, x: jnp.ndarray, cache: dict) -> tuple[jnp.ndarray, dict]:
+    """x: (B,1,D) → (y (B,1,D), cache)."""
+    B = x.shape[0]
+    d_inner, H, N = _dims(cfg)
+    z, xBC, dt_raw = _project_in(p, cfg, x)
+    # conv over the (width-1) history + current token
+    window = jnp.concatenate([cache["conv"], xBC], axis=1)               # (B,K,C)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"])[:, None]
+    new_conv = window[:, 1:]
+    xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, H, cfg.ssm_head_dim).astype(jnp.float32)
+    h = cache["ssm"] * jnp.exp(dt * A)[..., None, None] + (
+        (xh * dt[..., None])[..., :, None] * Bm[:, 0, None, None, :].astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm[:, 0].astype(jnp.float32))
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = rmsnorm_apply(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return dense_apply(p["out_proj"], y), {"conv": new_conv, "ssm": h}

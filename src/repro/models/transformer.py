@@ -1,0 +1,290 @@
+"""Decoder-only LM assembly (all assigned archs except seamless-m4t).
+
+Layers are grouped by the config's repeating ``pattern`` (e.g. RecurrentGemma's
+("rglru","rglru","attn")); each pattern position has its params stacked over a
+leading group axis and the whole stack is consumed by one ``jax.lax.scan`` —
+a 64-layer grok-1 lowers to a single compact scanned HLO body. A remainder
+(n_layers % len(pattern)) is applied unstacked as a tail.
+
+Block types:
+  attn      — pre-norm attention (GQA or MLA) + pre-norm MLP
+  moe_attn  — pre-norm attention + pre-norm MoE (aux loss accumulated)
+  ssm       — pre-norm Mamba2 SSD block (no separate MLP)
+  rglru     — pre-norm RG-LRU recurrent block + pre-norm MLP
+
+The VLM (internvl2) prepends stub patch embeddings to the token embeddings;
+only text positions produce logits/loss.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .common import (
+    ModelConfig,
+    embedding_apply,
+    embedding_init,
+    mlp_apply,
+    mlp_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+    softmax_cross_entropy,
+    token_accuracy,
+    unembed_apply,
+)
+
+
+# ---------------------------------------------------------------------------
+# Per-block init / apply / cache
+# ---------------------------------------------------------------------------
+
+
+def _init_block(rng, cfg: ModelConfig, kind: str) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    if kind == "attn":
+        attn_init = attn_mod.init_mla if cfg.attention == "mla" else attn_mod.init_attention
+        return {
+            "norm1": rmsnorm_init(cfg.d_model, cfg.jdtype),
+            "attn": attn_init(k1, cfg),
+            "norm2": rmsnorm_init(cfg.d_model, cfg.jdtype),
+            "mlp": mlp_init(k2, cfg),
+        }
+    if kind == "moe_attn":
+        return {
+            "norm1": rmsnorm_init(cfg.d_model, cfg.jdtype),
+            "attn": attn_mod.init_attention(k1, cfg),
+            "norm2": rmsnorm_init(cfg.d_model, cfg.jdtype),
+            "moe": moe_mod.init_moe(k2, cfg),
+        }
+    if kind == "ssm":
+        return {
+            "norm1": rmsnorm_init(cfg.d_model, cfg.jdtype),
+            "ssm": ssm_mod.init_mamba2(k1, cfg),
+        }
+    if kind == "rglru":
+        return {
+            "norm1": rmsnorm_init(cfg.d_model, cfg.jdtype),
+            "rglru": rglru_mod.init_rglru(k1, cfg),
+            "norm2": rmsnorm_init(cfg.d_model, cfg.jdtype),
+            "mlp": mlp_init(k2, cfg),
+        }
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def _apply_block_full(p, cfg: ModelConfig, kind: str, x, *, window_override=None, use_flash=False):
+    """Full-sequence forward. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "moe_attn"):
+        h = rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
+        if cfg.attention == "mla" and kind == "attn":
+            a = attn_mod.mla_full(p["attn"], cfg, h, window=window_override)
+        else:
+            a = attn_mod.attn_full(p["attn"], cfg, h, window=window_override, use_flash=use_flash)
+        x = x + a
+        h = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
+        if kind == "moe_attn":
+            out, aux = moe_mod.moe_apply(p["moe"], cfg, h)
+        else:
+            out = mlp_apply(p["mlp"], h, cfg.activation)
+        return x + out, aux
+    if kind == "ssm":
+        h = rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
+        return x + ssm_mod.mamba2_full(p["ssm"], cfg, h), aux
+    if kind == "rglru":
+        h = rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
+        x = x + rglru_mod.rglru_full(p["rglru"], cfg, h)
+        h = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
+        return x + mlp_apply(p["mlp"], h, cfg.activation), aux
+    raise ValueError(kind)
+
+
+def _init_block_cache(cfg: ModelConfig, kind: str, batch: int, capacity: int):
+    if kind in ("attn", "moe_attn"):
+        window = cfg.sliding_window
+        cap = min(capacity, window) if window else capacity
+        if cfg.attention == "mla" and kind == "attn":
+            return attn_mod.init_mla_cache(cfg, batch, cap)
+        return attn_mod.init_attn_cache(cfg, batch, cap)
+    if kind == "ssm":
+        return ssm_mod.init_ssm_cache(cfg, batch)
+    if kind == "rglru":
+        return rglru_mod.init_rglru_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+def _apply_block_decode(p, cfg: ModelConfig, kind: str, x, cache, pos, *, window_override=None):
+    if kind in ("attn", "moe_attn"):
+        h = rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
+        if cfg.attention == "mla" and kind == "attn":
+            a, cache = attn_mod.mla_decode(p["attn"], cfg, h, cache, pos, window=window_override,
+                                           absorb=cfg.mla_absorb)
+        else:
+            a, cache = attn_mod.attn_decode(p["attn"], cfg, h, cache, pos, window=window_override)
+        x = x + a
+        h = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
+        if kind == "moe_attn":
+            out, _ = moe_mod.moe_apply(p["moe"], cfg, h)
+        else:
+            out = mlp_apply(p["mlp"], h, cfg.activation)
+        return x + out, cache
+    if kind == "ssm":
+        h = rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
+        out, cache = ssm_mod.mamba2_decode(p["ssm"], cfg, h, cache)
+        return x + out, cache
+    if kind == "rglru":
+        h = rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
+        out, cache = rglru_mod.rglru_decode(p["rglru"], cfg, h, cache)
+        x = x + out
+        h = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
+        return x + mlp_apply(p["mlp"], h, cfg.activation), cache
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+class DecoderLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.pattern = cfg.pattern
+        U = len(self.pattern)
+        self.n_groups = cfg.n_layers // U
+        self.tail = tuple(self.pattern[: cfg.n_layers % U])
+
+    # -- init ----------------------------------------------------------------
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        k_emb, k_layers, k_tail = jax.random.split(rng, 3)
+        params = {"embed": embedding_init(k_emb, cfg.padded_vocab, cfg.d_model, cfg.jdtype)}
+        blocks = {}
+        for u, kind in enumerate(self.pattern):
+            ks = jax.random.split(jax.random.fold_in(k_layers, u), self.n_groups)
+            blocks[f"u{u}_{kind}"] = jax.vmap(lambda k, kind=kind: _init_block(k, cfg, kind))(ks)
+        params["blocks"] = blocks
+        if self.tail:
+            params["tail"] = {
+                f"t{i}_{kind}": _init_block(jax.random.fold_in(k_tail, i), cfg, kind)
+                for i, kind in enumerate(self.tail)
+            }
+        params["final_norm"] = rmsnorm_init(cfg.d_model, cfg.jdtype)
+        if not cfg.tie_embeddings:
+            k_un = jax.random.fold_in(k_emb, 7)
+            params["unembed"] = embedding_init(k_un, cfg.padded_vocab, cfg.d_model, cfg.jdtype)
+        return params
+
+    # -- embedding frontends ---------------------------------------------------
+    def _embed(self, params, tokens, extra_embeds=None):
+        cfg = self.cfg
+        x = embedding_apply(params["embed"], tokens) * jnp.asarray(
+            cfg.d_model**0.5, cfg.jdtype
+        )
+        if extra_embeds is not None:
+            # VLM / audio-LM: prepend stub modality embeddings
+            x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+        return x
+
+    # -- full forward ----------------------------------------------------------
+    def apply(self, params, tokens, extra_embeds=None, *, window_override=None,
+              remat: bool = False, use_flash: bool = False):
+        """→ (logits (B,S_text,padded_vocab), aux_loss)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, extra_embeds)
+        n_text = tokens.shape[1]
+
+        def group_body(carry, group_params):
+            x, aux = carry
+            for u, kind in enumerate(self.pattern):
+                x, a = _apply_block_full(
+                    group_params[f"u{u}_{kind}"], cfg, kind, x,
+                    window_override=window_override, use_flash=use_flash,
+                )
+                aux = aux + a
+            return (x, aux), None
+
+        if remat:
+            if cfg.remat_policy == "dots":
+                policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                body = jax.checkpoint(group_body, policy=policy)
+            else:
+                body = jax.checkpoint(group_body)
+        else:
+            body = group_body
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+        for i, kind in enumerate(self.tail):
+            x, a = _apply_block_full(
+                params["tail"][f"t{i}_{kind}"], cfg, kind, x,
+                window_override=window_override, use_flash=use_flash,
+            )
+            aux = aux + a
+        x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+        x = x[:, -n_text:]  # only text positions produce logits (VLM prefix)
+        logits = unembed_apply(params.get("unembed", params["embed"]), x)
+        return logits, aux
+
+    # -- loss -------------------------------------------------------------------
+    def loss(self, params, batch, rng=None, *, remat: bool = False, use_flash: bool = False):
+        cfg = self.cfg
+        logits, aux = self.apply(
+            params, batch["tokens"], batch.get("embeds"), remat=remat, use_flash=use_flash
+        )
+        ce = softmax_cross_entropy(logits, batch["labels"], valid_vocab=cfg.vocab_size)
+        loss = ce.mean() + cfg.router_aux_weight * aux
+        return loss, {"ce": ce.mean(), "aux": aux, "accuracy": token_accuracy(logits, batch["labels"])}
+
+    # -- decode -------------------------------------------------------------------
+    def init_cache(self, batch: int, capacity: int, *, window_override=None) -> dict:
+        cfg = self.cfg
+        eff_cfg = cfg if window_override is None else cfg.replace(sliding_window=window_override)
+        caches = {}
+        for u, kind in enumerate(self.pattern):
+            one = _init_block_cache(eff_cfg, kind, batch, capacity)
+            caches[f"u{u}_{kind}"] = jax.tree.map(
+                lambda l: jnp.broadcast_to(l[None], (self.n_groups,) + l.shape), one
+            )
+        if self.tail:
+            caches["tail"] = {
+                f"t{i}_{kind}": _init_block_cache(eff_cfg, kind, batch, capacity)
+                for i, kind in enumerate(self.tail)
+            }
+        return caches
+
+    def decode_step(self, params, token, cache, pos, *, window_override=None):
+        """token: (B,) int32; pos: scalar int32 → (logits (B,padded_vocab), cache)."""
+        cfg = self.cfg
+        x = self._embed(params, token[:, None])
+
+        def group_body(x, scanned):
+            group_params, group_cache = scanned
+            new_cache = {}
+            for u, kind in enumerate(self.pattern):
+                key = f"u{u}_{kind}"
+                x, new_cache[key] = _apply_block_decode(
+                    group_params[key], cfg, kind, x, group_cache[key], pos,
+                    window_override=window_override,
+                )
+            return x, new_cache
+
+        tail_cache = cache.get("tail") if isinstance(cache, dict) else None
+        scan_cache = {k: v for k, v in cache.items() if k != "tail"}
+        x, new_scan_cache = jax.lax.scan(group_body, x, (params["blocks"], scan_cache))
+        new_cache = dict(new_scan_cache)
+        if self.tail:
+            new_tail = {}
+            for i, kind in enumerate(self.tail):
+                key = f"t{i}_{kind}"
+                x, new_tail[key] = _apply_block_decode(
+                    params["tail"][key], cfg, kind, x, tail_cache[key], pos,
+                    window_override=window_override,
+                )
+            new_cache["tail"] = new_tail
+        x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+        logits = unembed_apply(params.get("unembed", params["embed"]), x[:, 0])
+        return logits, new_cache

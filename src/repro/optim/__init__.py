@@ -1,0 +1,256 @@
+"""Optimizers, schedules and gradient transforms — optax-like, self-contained.
+
+API: an ``Optimizer`` is a pair of pure functions
+    init(params)            -> state pytree
+    update(grads, state, params) -> (updates, new_state)
+apply with ``apply_updates(params, updates)`` (updates are *added*).
+
+Implemented: sgd (+momentum/nesterov), adam, adamw, adafactor-lite (factored
+second moment — used for the biggest assigned models so the dry-run optimizer
+state is memory-realistic), global-norm clipping, gradient accumulation, and
+warmup-cosine / constant / linear schedules.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step -> lr
+
+
+# --------------------------------------------------------------------------
+# Schedules
+# --------------------------------------------------------------------------
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_schedule(lr: float, total_steps: int, end_fraction: float = 0.0) -> Schedule:
+    def fn(step):
+        frac = jnp.clip(step / max(1, total_steps), 0.0, 1.0)
+        return jnp.asarray(lr * (1.0 - (1.0 - end_fraction) * frac), jnp.float32)
+
+    return fn
+
+
+def warmup_cosine_schedule(lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1) -> Schedule:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(1.0, warmup_steps)
+        progress = (step - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps)
+        progress = jnp.clip(progress, 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+        return jnp.asarray(lr * jnp.where(step < warmup_steps, warm, cos), jnp.float32)
+
+    return fn
+
+
+def _resolve_schedule(lr) -> Schedule:
+    return lr if callable(lr) else constant_schedule(float(lr))
+
+
+# --------------------------------------------------------------------------
+# Optimizer core
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+    name: str = "optimizer"
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+class ScaleState(NamedTuple):
+    step: jnp.ndarray
+
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    sched = _resolve_schedule(lr)
+
+    def init(params):
+        mom = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params) if momentum else None
+        return {"step": jnp.zeros((), jnp.int32), "momentum": mom}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        if momentum:
+            buf = jax.tree.map(lambda b, g: momentum * b + g.astype(jnp.float32), state["momentum"], grads)
+            if nesterov:
+                upd = jax.tree.map(lambda b, g: -(lr_t * (momentum * b + g)), buf, grads)
+            else:
+                upd = jax.tree.map(lambda b: -(lr_t * b), buf)
+            return upd, {"step": step, "momentum": buf}
+        upd = jax.tree.map(lambda g: -(lr_t * g.astype(jnp.float32)), grads)
+        return upd, {"step": step, "momentum": None}
+
+    return Optimizer(init, update, "sgd")
+
+
+def _adam_core(lr, b1, b2, eps, weight_decay, name) -> Optimizer:
+    sched = _resolve_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def _upd(m_, v_, p):
+            u = -(lr_t * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps))
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        upd = jax.tree.map(_upd, m, v, params)
+        return upd, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update, name)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, 0.0, "adam")
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, weight_decay: float = 0.01) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, weight_decay, "adamw")
+
+
+def adafactor(lr, eps: float = 1e-30, decay: float = 0.8) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern 2018, simplified).
+
+    Matrices keep row/col second-moment vectors instead of a full moment
+    tensor → optimizer state is O(n+m) not O(nm). Used for the 314B-param
+    dry-run so per-chip optimizer memory is realistic.
+    """
+    sched = _resolve_schedule(lr)
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def per_leaf(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+
+        return {"step": jnp.zeros((), jnp.int32), "moments": jax.tree.map(per_leaf, params, is_leaf=lambda x: hasattr(x, "ndim"))}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        beta = 1.0 - (step.astype(jnp.float32)) ** (-decay)
+
+        def per_leaf(g, mom):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if "vr" in mom:
+                vr = beta * mom["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * mom["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = jnp.sqrt(vr[..., :, None] * vc[..., None, :] / jnp.maximum(vr.mean(axis=-1, keepdims=True)[..., None], eps))
+                upd = -(lr_t * g / jnp.maximum(denom, 1e-12))
+                return upd, {"vr": vr, "vc": vc}
+            v = beta * mom["v"] + (1 - beta) * g2
+            return -(lr_t * g / jnp.sqrt(v)), {"v": v}
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state["moments"])
+        outs = [per_leaf(g, m) for g, m in zip(flat_g, flat_m)]
+        upd = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        moms = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        return upd, {"step": step, "moments": moms}
+
+    return Optimizer(init, update, "adafactor")
+
+
+# --------------------------------------------------------------------------
+# Gradient transforms
+# --------------------------------------------------------------------------
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    sq = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(sq)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+def chain_clip(optimizer: Optimizer, max_norm: float) -> Optimizer:
+    def update(grads, state, params):
+        return optimizer.update(clip_by_global_norm(grads, max_norm), state, params)
+
+    return Optimizer(optimizer.init, update, f"{optimizer.name}+clip{max_norm}")
+
+
+def with_accumulation(optimizer: Optimizer, accumulate_steps: int) -> Optimizer:
+    """Gradient accumulation: buffers grads; applies the inner optimizer every
+    ``accumulate_steps`` micro-steps (paper §4.4 uses accumulation of 10)."""
+    if accumulate_steps <= 1:
+        return optimizer
+
+    def init(params):
+        return {
+            "inner": optimizer.init(params),
+            "acc": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32) / accumulate_steps, state["acc"], grads)
+        count = state["count"] + 1
+
+        def do_apply(_):
+            upd, inner = optimizer.update(acc, state["inner"], params)
+            zeroed = jax.tree.map(jnp.zeros_like, acc)
+            return upd, {"inner": inner, "acc": zeroed, "count": jnp.zeros((), jnp.int32)}
+
+        def do_skip(_):
+            upd = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+            return upd, {"inner": state["inner"], "acc": acc, "count": count}
+
+        return jax.lax.cond(count >= accumulate_steps, do_apply, do_skip, operand=None)
+
+    return Optimizer(init, update, f"{optimizer.name}+acc{accumulate_steps}")
+
+
+OPTIMIZERS = {
+    "sgd": sgd,
+    "adam": adam,
+    "adamw": adamw,
+    "adafactor": adafactor,
+}
+
+
+def get_optimizer(name: str, lr, **kwargs) -> Optimizer:
+    if name not in OPTIMIZERS:
+        raise KeyError(f"unknown optimizer {name!r}; options {sorted(OPTIMIZERS)}")
+    return OPTIMIZERS[name](lr, **kwargs)

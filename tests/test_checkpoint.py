@@ -1,0 +1,33 @@
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+
+
+def tree(v):
+    return {"layer": {"w": np.full((3, 3), v, np.float32)}, "step_scale": np.float32(v)}
+
+
+def test_save_load_roundtrip(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 10, tree(1.0), extra={"loss": 0.5})
+    params, meta = load_checkpoint(d)
+    assert meta["step"] == 10 and meta["loss"] == 0.5
+    assert np.allclose(params["layer"]["w"], 1.0)
+
+
+def test_latest_and_gc(tmp_path):
+    d = str(tmp_path)
+    for s in range(6):
+        save_checkpoint(d, s, tree(float(s)), keep=3)
+    assert latest_step(d) == 5
+    params, _ = load_checkpoint(d, step=5)
+    assert np.allclose(params["layer"]["w"], 5.0)
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(d, step=0)  # garbage-collected
+
+
+def test_missing_dir():
+    assert latest_step("/nonexistent/ckpts") is None
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint("/nonexistent/ckpts")

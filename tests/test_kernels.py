@@ -1,0 +1,173 @@
+"""Kernel validation: every Pallas kernel swept over shapes/dtypes in
+interpret mode and assert_allclose'd against its pure-jnp ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.kernel import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.fed_agg import ops as fed_ops
+from repro.kernels.fed_agg.kernel import fed_agg
+from repro.kernels.fed_agg.ref import fed_agg_ref
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.ssd_scan.kernel import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref, ssd_scan_sequential
+
+
+# ---------------------------------------------------------------------------
+# fed_agg
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("K,N", [(2, 128), (3, 8192), (8, 8193), (16, 40000), (32, 7)])
+def test_fed_agg_shapes(K, N):
+    rng = np.random.default_rng(K * 1000 + N)
+    x = rng.normal(size=(K, N)).astype(np.float32)
+    w = rng.random(K).astype(np.float32)
+    w /= w.sum()
+    np.testing.assert_allclose(
+        np.asarray(fed_agg(jnp.asarray(x), jnp.asarray(w), interpret=True)),
+        np.asarray(fed_agg_ref(x, w)), rtol=1e-5, atol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_fed_agg_pytree_matches_tree_mean(dtype):
+    from repro.core.tree import tree_weighted_mean
+
+    rng = np.random.default_rng(0)
+    trees = [{"a": rng.normal(size=(17, 3)).astype(dtype), "b": {"c": rng.normal(size=(5,)).astype(dtype)}}
+             for _ in range(4)]
+    weights = [1, 2, 3, 4]
+    out = fed_ops.aggregate_pytrees(trees, weights, force_kernel=True)
+    ref = tree_weighted_mean(trees, weights)
+    np.testing.assert_allclose(out["a"], ref["a"], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(out["b"]["c"], ref["b"]["c"], rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,KV,G,hd,window", [
+    (2, 256, 2, 2, 64, 0),
+    (1, 256, 1, 4, 64, 128),    # MQA + sliding window
+    (2, 512, 4, 1, 128, 0),
+    (1, 128, 2, 2, 256, 64),    # gemma-style head_dim 256
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, KV, G, hd, window, dtype):
+    rng = jax.random.PRNGKey(S + hd)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    q = jax.random.normal(k1, (B, S, KV, G, hd), dtype)
+    k = jax.random.normal(k2, (B, S, KV, hd), dtype)
+    v = jax.random.normal(k3, (B, S, KV, hd), dtype)
+    bq = min(128, S)
+    out = flash_attention(q, k, v, window=window, block_q=bq, block_k=bq, interpret=True)
+    ref = flash_attention_ref(q, k, v, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_flash_matches_model_attention():
+    """Kernel agrees with the model's own chunked_sdpa path."""
+    from repro.models.attention import chunked_sdpa
+
+    rng = jax.random.PRNGKey(9)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    B, S, KV, G, hd = 1, 256, 2, 3, 64
+    q = jax.random.normal(k1, (B, S, KV, G, hd))
+    k = jax.random.normal(k2, (B, S, KV, hd))
+    v = jax.random.normal(k3, (B, S, KV, hd))
+    out = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    ref = chunked_sdpa(q, k, v, causal=True, qblock=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("BH,S,P,N,chunk", [
+    (2, 128, 64, 32, 32),
+    (3, 256, 64, 128, 64),
+    (1, 512, 128, 64, 128),
+    (2, 256, 64, 128, 256),     # single chunk
+])
+def test_ssd_scan_vs_oracles(BH, S, P, N, chunk):
+    rng = jax.random.PRNGKey(BH * S)
+    ks = jax.random.split(rng, 4)
+    x = jax.random.normal(ks[0], (BH, S, P)) * 0.5
+    dA = -jax.nn.softplus(jax.random.normal(ks[1], (BH, S)))
+    Bm = jax.random.normal(ks[2], (BH, S, N)) * 0.5
+    Cm = jax.random.normal(ks[3], (BH, S, N)) * 0.5
+    out = np.asarray(ssd_scan(x, dA, Bm, Cm, chunk=chunk, interpret=True))
+    np.testing.assert_allclose(out, np.asarray(ssd_scan_ref(x, dA, Bm, Cm, chunk=chunk)),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(out, np.asarray(ssd_scan_sequential(x, dA, Bm, Cm)),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_ops_matches_model_layout():
+    from repro.kernels.ssd_scan import ops as ssd_ops
+    from repro.models.ssm import ssd_chunked
+
+    rng = jax.random.PRNGKey(5)
+    ks = jax.random.split(rng, 4)
+    B, S, H, P, N = 2, 128, 3, 64, 32
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dA = -jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    Bm = jax.random.normal(ks[2], (B, S, H, N)) * 0.5
+    Cm = jax.random.normal(ks[3], (B, S, H, N)) * 0.5
+    out = ssd_ops.ssd(x, dA, Bm, Cm, chunk=64, force_kernel=True)
+    ref, _ = ssd_chunked(x, dA, Bm, Cm, 64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,KV,G,hd,C", [
+    (2, 2, 4, 64, 1024),
+    (1, 8, 1, 128, 512),
+    (3, 1, 6, 64, 2048),
+    (1, 2, 2, 256, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, KV, G, hd, C, dtype):
+    rng = jax.random.PRNGKey(C + hd)
+    ks = jax.random.split(rng, 4)
+    q = jax.random.normal(ks[0], (B, KV, G, hd), dtype)
+    k = jax.random.normal(ks[1], (B, C, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, C, KV, hd), dtype)
+    valid = jax.random.bernoulli(ks[3], 0.7, (C,))
+    out = decode_attention(q, k, v, valid, block_k=min(256, C), interpret=True)
+    ref = decode_attention_ref(q, k, v, valid)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_decode_attention_in_model_path():
+    """attn_decode(use_kernel=True) == jnp path on a real ring cache."""
+    from repro.configs import get_config
+    from repro.models import attention as A
+
+    cfg = get_config("granite-3-2b").reduced()
+    rng = jax.random.PRNGKey(7)
+    p = A.init_attention(rng, cfg)
+    x = jax.random.normal(rng, (2, 1, cfg.d_model), cfg.jdtype)
+    cache = A.init_attn_cache(cfg, 2, 16)
+    out_ref, cache_ref = A.attn_decode(p, cfg, x, cache, jnp.int32(0))
+    out_k, _ = A.attn_decode(p, cfg, x, cache, jnp.int32(0), use_kernel=True)
+    np.testing.assert_allclose(np.asarray(out_k, np.float32), np.asarray(out_ref, np.float32),
+                               rtol=2e-2, atol=2e-2)

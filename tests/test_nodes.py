@@ -1,0 +1,128 @@
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AsyncFederatedNode,
+    FederationTimeout,
+    InMemoryFolder,
+    SyncFederatedNode,
+    run_threaded,
+)
+from repro.core.strategies import FedAvg
+
+
+def params(v):
+    return {"w": np.full((4,), float(v), np.float32)}
+
+
+def test_async_first_node_keeps_training():
+    node = AsyncFederatedNode(strategy=FedAvg(), shared_folder=InMemoryFolder(), node_id="a")
+    assert node.update_parameters(params(1.0), 10) is None
+    assert node.num_pushes == 1
+
+
+def test_async_two_nodes_aggregate():
+    folder = InMemoryFolder()
+    a = AsyncFederatedNode(strategy=FedAvg(), shared_folder=folder, node_id="a")
+    b = AsyncFederatedNode(strategy=FedAvg(), shared_folder=folder, node_id="b")
+    assert a.update_parameters(params(0.0), 10) is None
+    out = b.update_parameters(params(2.0), 10)
+    assert out is not None and np.allclose(out["w"], 1.0)
+
+
+def test_async_state_hash_skips_redundant_pull():
+    folder = InMemoryFolder()
+    a = AsyncFederatedNode(strategy=FedAvg(), shared_folder=folder, node_id="a")
+    b = AsyncFederatedNode(strategy=FedAvg(), shared_folder=folder, node_id="b")
+    a.update_parameters(params(0.0), 10)
+    b.update_parameters(params(2.0), 10)
+    pulls_before = b.num_pulls
+    # nothing changed except b's own deposit → hash check short-circuits
+    assert b.update_parameters(params(3.0), 10) is None
+    assert b.num_pulls == pulls_before
+    assert b.num_skipped_pulls >= 1
+
+
+def test_async_sees_fresher_peer_weights():
+    folder = InMemoryFolder()
+    a = AsyncFederatedNode(strategy=FedAvg(), shared_folder=folder, node_id="a")
+    b = AsyncFederatedNode(strategy=FedAvg(), shared_folder=folder, node_id="b")
+    a.update_parameters(params(0.0), 10)
+    b.update_parameters(params(2.0), 10)
+    a.update_parameters(params(4.0), 10)  # a deposits round 1
+    out = b.update_parameters(params(2.0), 10)
+    assert out is not None and np.allclose(out["w"], 3.0)  # sees a's round-1 weights
+
+
+def test_sync_barrier_identical_results():
+    folder = InMemoryFolder()
+    outs = {}
+
+    def client(nid, val):
+        node = SyncFederatedNode(strategy=FedAvg(), shared_folder=folder, node_id=nid,
+                                 num_nodes=3, timeout=10)
+        outs[nid] = node.update_parameters(params(val), 10)
+
+    res = run_threaded([
+        lambda: client("a", 0.0), lambda: client("b", 3.0), lambda: client("c", 6.0)
+    ])
+    assert all(r.error is None for r in res)
+    for nid in ("a", "b", "c"):
+        assert np.allclose(outs[nid]["w"], 3.0)
+
+
+def test_sync_round_isolation_under_speed_skew():
+    """A fast node racing ahead must not corrupt a slow node's round-t set."""
+    folder = InMemoryFolder()
+    outs = {}
+
+    def fast():
+        node = SyncFederatedNode(strategy=FedAvg(), shared_folder=folder, node_id="fast",
+                                 num_nodes=2, timeout=10)
+        outs["fast0"] = node.update_parameters(params(2.0), 10)
+        outs["fast1"] = node.update_parameters(params(10.0), 10)
+
+    def slow():
+        node = SyncFederatedNode(strategy=FedAvg(), shared_folder=folder, node_id="slow",
+                                 num_nodes=2, timeout=10)
+        time.sleep(0.2)
+        outs["slow0"] = node.update_parameters(params(4.0), 10)
+        outs["slow1"] = node.update_parameters(params(10.0), 10)
+
+    res = run_threaded([fast, slow])
+    assert all(r.error is None for r in res), [r.traceback for r in res]
+    assert np.allclose(outs["fast0"]["w"], 3.0)
+    assert np.allclose(outs["slow0"]["w"], 3.0)  # round-0 blobs, not fast's round-1
+
+
+def test_sync_timeout_on_missing_peer():
+    node = SyncFederatedNode(strategy=FedAvg(), shared_folder=InMemoryFolder(),
+                             node_id="lonely", num_nodes=2, timeout=0.3)
+    with pytest.raises(FederationTimeout):
+        node.update_parameters(params(1.0), 10)
+
+
+def test_async_node_survives_peer_crash():
+    """The async robustness claim: a crashed peer never blocks others."""
+    folder = InMemoryFolder()
+
+    def crasher():
+        node = AsyncFederatedNode(strategy=FedAvg(), shared_folder=folder, node_id="crash")
+        node.update_parameters(params(1.0), 10)
+        raise RuntimeError("injected OOM")
+
+    def survivor():
+        node = AsyncFederatedNode(strategy=FedAvg(), shared_folder=folder, node_id="ok")
+        results = []
+        for i in range(3):
+            time.sleep(0.05)
+            results.append(node.update_parameters(params(float(i)), 10))
+        return results
+
+    res = run_threaded([crasher, survivor])
+    assert res[0].error is not None
+    assert res[1].error is None
+    assert any(r is not None for r in res[1].result)  # still aggregated crash's deposit

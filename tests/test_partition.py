@@ -1,0 +1,59 @@
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import (
+    label_partitions,
+    partition_dataset,
+    partition_sequence_dataset,
+    skewed_assignment,
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    num_nodes=st.integers(2, 6),
+    skew=st.floats(0.0, 1.0),
+    seed=st.integers(0, 100),
+)
+def test_partition_is_exact_cover(num_nodes, skew, seed):
+    """Every example lands on exactly one node, for any skew (hypothesis)."""
+    labels = np.repeat(np.arange(10), 20)
+    x = np.arange(len(labels))[:, None]
+    shards = partition_dataset(x, labels, num_nodes, skew, seed=seed)
+    all_ids = np.concatenate([s[0][:, 0] for s in shards])
+    assert len(all_ids) == len(labels)
+    assert set(all_ids.tolist()) == set(range(len(labels)))
+
+
+def test_full_skew_is_pure():
+    labels = np.repeat(np.arange(10), 100)
+    assign = skewed_assignment(labels, 2, 1.0, seed=0)
+    assert set(assign[labels < 5]) == {0}
+    assert set(assign[labels >= 5]) == {1}
+
+
+def test_zero_skew_is_roughly_uniform():
+    labels = np.repeat(np.arange(10), 500)
+    assign = skewed_assignment(labels, 5, 0.0, seed=0)
+    counts = np.bincount(assign, minlength=5)
+    assert counts.min() > 0.8 * len(labels) / 5
+
+
+def test_partial_skew_majority():
+    """skew=0.9 → ~90%+10%/n of a node's own labels come from its partition."""
+    labels = np.repeat(np.arange(10), 1000)
+    assign = skewed_assignment(labels, 2, 0.9, seed=1)
+    own = assign[labels < 5] == 0
+    assert 0.92 < own.mean() < 0.98  # 0.9 + 0.1/2 = 0.95 expected
+
+
+def test_label_partitions_contiguous():
+    owners = label_partitions(np.arange(10), 2, 10)
+    assert owners.tolist() == [0] * 5 + [1] * 5
+
+
+def test_sequence_partition_covers_stream():
+    stream = np.arange(1000)
+    shards = partition_sequence_dataset(stream, 3)
+    assert sum(len(s) for s in shards) == 1000
+    assert np.array_equal(np.concatenate(shards), stream)

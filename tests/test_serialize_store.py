@@ -1,0 +1,97 @@
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.serialize import (
+    NodeUpdate,
+    content_hash,
+    deserialize_update,
+    deserialize_update_quantized,
+    serialize_update,
+    serialize_update_quantized,
+)
+from repro.core.store import DiskFolder, InMemoryFolder, WeightStore, make_folder
+
+
+def params():
+    return {
+        "dense": {"w": np.random.default_rng(0).normal(size=(8, 4)).astype(np.float32)},
+        "scale": np.ones((4,), np.float32),
+    }
+
+
+def bf16_params():
+    return {"w": jnp.asarray(np.random.default_rng(1).normal(size=(16,)), jnp.bfloat16)}
+
+
+def test_update_roundtrip():
+    u = NodeUpdate(params(), num_examples=42, node_id="n0", counter=7, timestamp=3.25,
+                   metrics={"loss": 1.5})
+    u2 = deserialize_update(serialize_update(u))
+    assert u2.num_examples == 42 and u2.node_id == "n0" and u2.counter == 7
+    assert u2.metrics["loss"] == 1.5
+    assert np.allclose(u2.params["dense"]["w"], u.params["dense"]["w"])
+
+
+def test_bfloat16_roundtrip():
+    """bf16 ships as f32 on the wire and is restored on load."""
+    u = NodeUpdate(bf16_params(), num_examples=1, node_id="b")
+    u2 = deserialize_update(serialize_update(u))
+    assert u2.params["w"].dtype == jnp.bfloat16
+    assert np.allclose(np.asarray(u2.params["w"], np.float32),
+                       np.asarray(u.params["w"], np.float32))
+
+
+def test_quantized_roundtrip_close():
+    u = NodeUpdate(params(), num_examples=1, node_id="q")
+    u2 = deserialize_update_quantized(serialize_update_quantized(u))
+    w, w2 = u.params["dense"]["w"], u2.params["dense"]["w"]
+    assert np.max(np.abs(w - w2)) <= np.abs(w).max() / 127.0 + 1e-6
+
+
+def test_quantized_is_smaller():
+    big = {"w": np.random.default_rng(2).normal(size=(64, 64)).astype(np.float32)}
+    u = NodeUpdate(big, num_examples=1, node_id="q")
+    assert len(serialize_update_quantized(u)) < 0.5 * len(serialize_update(u))
+
+
+@pytest.mark.parametrize("folder_factory", [InMemoryFolder, None])
+def test_folder_semantics(folder_factory, tmp_path):
+    folder = folder_factory() if folder_factory else DiskFolder(str(tmp_path / "store"))
+    h0 = folder.state_hash()
+    folder.put("latest/a", b"hello")
+    h1 = folder.state_hash()
+    assert h0 != h1
+    assert folder.get("latest/a") == b"hello"
+    assert folder.get("latest/missing") is None
+    assert folder.keys() == ["latest/a"]
+    folder.put("latest/a", b"world")
+    assert folder.state_hash() != h1
+    folder.delete("latest/a")
+    assert folder.keys() == []
+
+
+def test_weight_store_latest_and_rounds(tmp_path):
+    store = WeightStore(DiskFolder(str(tmp_path)), keep_history=True)
+    for ctr in range(3):
+        store.push(NodeUpdate(params(), num_examples=5, node_id="a", counter=ctr))
+    store.push(NodeUpdate(params(), num_examples=9, node_id="b", counter=0))
+    assert store.node_ids() == ["a", "b"]
+    latest_a = store.pull_node("a")
+    assert latest_a.counter == 2
+    peers_of_a = store.pull(exclude="a")
+    assert [u.node_id for u in peers_of_a] == ["b"]
+    round0 = store.pull_round(0)
+    assert sorted(u.node_id for u in round0) == ["a", "b"]
+    assert [u.node_id for u in store.pull_round(2)] == ["a"]
+
+
+def test_make_folder_dispatch(tmp_path):
+    assert isinstance(make_folder("memory://"), InMemoryFolder)
+    assert isinstance(make_folder(str(tmp_path / "x")), DiskFolder)
+
+
+def test_content_hash_stability():
+    blob = serialize_update(NodeUpdate(params(), num_examples=1, node_id="n"))
+    assert content_hash(blob) == content_hash(blob)

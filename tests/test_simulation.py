@@ -1,0 +1,59 @@
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.simulation import simulate_timeline, straggler_speedup
+
+
+def test_sync_wall_clock_is_sum_of_round_maxima():
+    tl = simulate_timeline([[1, 2], [3, 1]], mode="sync")
+    assert tl.wall_clock == 3 + 2
+    assert tl.per_node_idle[0] == (3 - 1) + 0
+    assert tl.per_node_idle[1] == 0 + (2 - 1)
+
+
+def test_async_wall_clock_is_max_of_sums():
+    tl = simulate_timeline([[1, 2], [3, 1]], mode="async")
+    assert tl.wall_clock == max(1 + 2, 3 + 1)
+    assert all(i == 0 for i in tl.per_node_idle)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    durations=st.lists(
+        st.lists(st.floats(0.1, 10.0), min_size=3, max_size=3), min_size=2, max_size=5
+    )
+)
+def test_async_never_slower_than_sync(durations):
+    """Σ_rounds max_k ≥ max_k Σ_rounds — async wall-clock ≤ sync, always."""
+    sync = simulate_timeline(durations, mode="sync")
+    asyn = simulate_timeline(durations, mode="async")
+    assert asyn.wall_clock <= sync.wall_clock + 1e-9
+
+
+def test_sync_hangs_on_failure_async_does_not():
+    durations = [[1, 1, 1], [1, 1, 1]]
+    sync = simulate_timeline(durations, mode="sync", failures={1: 1})
+    asyn = simulate_timeline(durations, mode="async", failures={1: 1})
+    assert math.isinf(sync.wall_clock)
+    assert asyn.wall_clock == 3  # the surviving node finishes all its epochs
+
+
+def test_straggler_speedup_grows_with_variance():
+    even = straggler_speedup([[1, 1], [1, 1]])
+    # alternating fast/slow: sync pays the max every round
+    skewed = straggler_speedup([[1, 3], [3, 1]])
+    assert even == pytest.approx(1.0)
+    assert skewed > 1.4  # sync 6 vs async 4
+
+
+def test_federation_events_monotone_visibility():
+    tl = simulate_timeline([[1, 1, 1], [2, 2, 2]], mode="async")
+    by_node = {}
+    for t, node, visible in tl.federation_events:
+        assert visible <= 1
+        by_node.setdefault(node, []).append(visible)
+    # the slow node always sees the fast node's deposits
+    assert all(v == 1 for v in by_node[1])

@@ -1,0 +1,109 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.serialize import NodeUpdate
+from repro.core.strategies import (
+    STRATEGIES,
+    FedAdam,
+    FedAsync,
+    FedAvg,
+    FedAvgM,
+    FedBuff,
+    PartialFedAvg,
+    get_strategy,
+)
+from repro.core.tree import tree_allclose
+
+
+def upd(val, n=10, node="x", counter=0):
+    params = {"layer": {"w": np.full((3, 2), float(val), np.float32)},
+              "head": np.full((4,), float(val) * 2, np.float32)}
+    return NodeUpdate(params, num_examples=n, node_id=node, counter=counter)
+
+
+def test_fedavg_weighted():
+    out = FedAvg().aggregate(upd(0.0, n=100), [upd(4.0, n=300, node="y")])
+    assert np.allclose(out["layer"]["w"], 3.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(vals=st.lists(st.floats(-5, 5), min_size=1, max_size=5),
+       ns=st.lists(st.integers(1, 1000), min_size=5, max_size=5))
+def test_fedavg_bounds(vals, ns):
+    """FedAvg output within [min,max] of inputs for any example counts."""
+    own = upd(vals[0], n=ns[0])
+    peers = [upd(v, n=ns[i + 1], node=f"p{i}") for i, v in enumerate(vals[1:])]
+    out = FedAvg().aggregate(own, peers)
+    assert out["layer"]["w"].min() >= min(vals) - 1e-5
+    assert out["layer"]["w"].max() <= max(vals) + 1e-5
+
+
+@pytest.mark.parametrize("name", sorted(STRATEGIES))
+def test_all_strategies_identity_on_identical(name):
+    """Any strategy aggregating identical params must return those params
+    (FedBuff returns own params before its buffer fills — same thing)."""
+    kwargs = {"buffer_size": 2} if name == "fedbuff" else {}
+    strat = get_strategy(name, **kwargs)
+    own = upd(1.5)
+    peers = [upd(1.5, node="p0"), upd(1.5, node="p1")]
+    out = strat.aggregate(own, peers)
+    assert tree_allclose(out, own.params, rtol=1e-4, atol=1e-4), name
+
+
+def test_fedavgm_momentum_accumulates():
+    strat = FedAvgM(server_lr=1.0, momentum=0.9)
+    own = upd(1.0)
+    out1 = strat.aggregate(own, [upd(0.0, node="p")])
+    # x=1, avg=0.5 → delta=0.5 → buf=0.5 → x=0.5
+    assert np.allclose(out1["layer"]["w"], 0.5)
+    out2 = strat.aggregate(upd(0.5), [upd(0.5, node="p")])
+    # avg=0.5, delta=0 → buf=0.45 → x=0.05: momentum keeps moving
+    assert np.allclose(out2["layer"]["w"], 0.05, atol=1e-6)
+
+
+def test_fedadam_moves_toward_average():
+    strat = FedAdam(server_lr=0.1)
+    out = strat.aggregate(upd(1.0), [upd(0.0, node="p")])
+    assert np.all(out["layer"]["w"] < 1.0)
+
+
+def test_fedasync_staleness_discounts():
+    fresh = FedAsync(alpha=0.5, staleness_fn="poly", a=1.0)
+    own = upd(0.0, counter=10)
+    out_fresh = fresh.aggregate(own, [upd(1.0, node="p", counter=10)])
+    out_stale = fresh.aggregate(own, [upd(1.0, node="p", counter=0)])
+    # stale peer (staleness 10) must move us less than a fresh peer
+    assert out_stale["layer"]["w"][0, 0] < out_fresh["layer"]["w"][0, 0]
+    assert np.allclose(out_fresh["layer"]["w"], 0.5)  # α·s(0)=0.5 mix
+
+
+def test_fedbuff_waits_for_buffer():
+    strat = FedBuff(buffer_size=3)
+    own = upd(0.0)
+    out1 = strat.aggregate(own, [])
+    assert tree_allclose(out1, own.params)  # buffer has 1 < 3 → own params
+    out2 = strat.aggregate(own, [upd(3.0, node="p0"), upd(6.0, node="p1")])
+    assert np.allclose(out2["layer"]["w"], 3.0)  # buffer full → mean
+
+
+def test_fedbuff_dedups_by_counter():
+    strat = FedBuff(buffer_size=3)
+    own = upd(0.0)
+    stale_peer = upd(9.0, node="p0", counter=0)
+    strat.aggregate(own, [stale_peer])
+    out = strat.aggregate(own, [stale_peer])  # same counter → not re-buffered
+    assert tree_allclose(out, own.params)
+
+
+def test_partial_fedavg_only_shares_matching():
+    strat = PartialFedAvg(shared_pattern=r"^layer/")
+    out = strat.aggregate(upd(0.0), [upd(2.0, node="p")])
+    assert np.allclose(out["layer"]["w"], 1.0)   # federated
+    assert np.allclose(out["head"], 0.0)         # personal, untouched
+
+
+def test_kernel_backed_fedavg_matches():
+    plain = FedAvg().aggregate(upd(1.0, n=10), [upd(5.0, n=30, node="p")])
+    kern = FedAvg(use_kernel=True).aggregate(upd(1.0, n=10), [upd(5.0, n=30, node="p")])
+    assert tree_allclose(plain, kern, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,80 @@
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tree import (
+    tree_allclose,
+    tree_flatten_to_vector,
+    tree_mean,
+    tree_num_params,
+    tree_paths,
+    tree_weighted_mean,
+    tree_weighted_sum,
+)
+
+
+def make_tree(vals):
+    return {"a": {"w": np.full((2, 3), vals[0], np.float32)}, "b": np.full((4,), vals[1], np.float32)}
+
+
+def test_weighted_mean_normalizes():
+    t = tree_weighted_mean([make_tree([1, 2]), make_tree([3, 4])], [1, 3])
+    assert np.allclose(t["a"]["w"], 2.5)
+    assert np.allclose(t["b"], 3.5)
+
+
+def test_weighted_sum_validates():
+    with pytest.raises(ValueError):
+        tree_weighted_sum([make_tree([1, 1])], [1.0, 2.0])
+    with pytest.raises(ValueError):
+        tree_weighted_mean([make_tree([1, 1])], [0.0])
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    weights=st.lists(st.floats(0.1, 100.0), min_size=1, max_size=6),
+    base=st.floats(-10, 10),
+)
+def test_weighted_mean_is_convex_combination(weights, base):
+    """Mean of constant trees lies within [min, max] of inputs (hypothesis)."""
+    vals = [base + i for i in range(len(weights))]
+    trees = [make_tree([v, v]) for v in vals]
+    out = tree_weighted_mean(trees, weights)
+    assert out["a"]["w"].min() >= min(vals) - 1e-4
+    assert out["a"]["w"].max() <= max(vals) + 1e-4
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0.5, 5.0), min_size=2, max_size=5))
+def test_weighted_mean_identity(weights):
+    """Aggregating identical trees returns the same tree, any weights."""
+    t = make_tree([1.25, -3.5])
+    out = tree_weighted_mean([t] * len(weights), weights)
+    assert tree_allclose(out, t, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.permutations(list(range(4))))
+def test_weighted_mean_permutation_invariant(perm):
+    trees = [make_tree([i, -i]) for i in range(4)]
+    weights = [1.0, 2.0, 3.0, 4.0]
+    ref = tree_weighted_mean(trees, weights)
+    out = tree_weighted_mean([trees[i] for i in perm], [weights[i] for i in perm])
+    assert tree_allclose(ref, out, rtol=1e-5, atol=1e-6)
+
+
+def test_flatten_to_vector_roundtrip():
+    t = {"x": np.arange(6, dtype=np.float32).reshape(2, 3), "y": {"z": np.ones((4,), np.int32)}}
+    flat, unflatten = tree_flatten_to_vector(t)
+    assert flat.shape == (10,)
+    t2 = unflatten(flat)
+    assert np.array_equal(t2["x"], t["x"])
+    assert np.array_equal(t2["y"]["z"], t["y"]["z"])
+    assert t2["y"]["z"].dtype == np.int32
+
+
+def test_paths_and_count():
+    t = make_tree([0, 0])
+    assert tree_paths(t) == ["a/w", "b"]
+    assert tree_num_params(t) == 10
