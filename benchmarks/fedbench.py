@@ -7,6 +7,8 @@ dataset, skew, node count, strategy, sync/async.
 """
 from __future__ import annotations
 
+import shutil
+import tempfile
 import time
 from dataclasses import dataclass
 
@@ -15,9 +17,12 @@ import numpy as np
 
 from repro.core import (
     AsyncFederatedNode,
+    CachingFolder,
     FederatedCallback,
     InMemoryFolder,
     SyncFederatedNode,
+    make_folder,
+    run_multiprocess,
     run_threaded,
 )
 from repro.core.partition import partition_dataset, partition_sequence_dataset
@@ -113,6 +118,132 @@ def run_image_experiment(
     vals = [accs[f"n{i}"] for i in range(num_nodes)]
     return FedResult(
         name=f"{dataset}/{mode}/{strategy}/n{num_nodes}/skew{skew}",
+        accuracy_mean=float(np.mean(vals)),
+        accuracy_std=float(np.std(vals)),
+        wall_seconds=wall,
+        per_node_accuracy=vals,
+    )
+
+
+def _mp_image_client(
+    i: int,
+    *,
+    dataset: str,
+    folder_uri: str,
+    mode: str,
+    strategy: str,
+    num_nodes: int,
+    skew: float,
+    epochs: int,
+    steps_per_epoch: int,
+    batch_size: int,
+    lr: float,
+    seed: int,
+    num_train: int,
+    num_test: int,
+    transport: str,
+) -> dict:
+    """One federated client in its own OS process.
+
+    Module-level so the ``spawn`` start method can pickle it; regenerates its
+    synthetic data shard deterministically from the seed instead of shipping
+    arrays across the process boundary.
+    """
+    data = _image_dataset(dataset, seed, num_train, num_test)
+    shards = partition_dataset(data.x_train, data.y_train, num_nodes, skew, seed=seed)
+    folder = make_folder(folder_uri)
+    model = _make_image_model(dataset)
+    params = model.init(jax.random.PRNGKey(seed * 101))  # common init
+    trainer = Trainer(
+        loss_fn=lambda p, b, r: model.loss(p, b),
+        optimizer=adam(lr),
+        init_params=params,
+        seed=seed * 101 + i,
+        name=f"n{i}",
+    )
+    strat = get_strategy(strategy)
+    if mode == "sync":
+        node = SyncFederatedNode(strategy=strat, shared_folder=folder, node_id=f"n{i}",
+                                 num_nodes=num_nodes, timeout=600, transport=transport)
+    else:
+        node = AsyncFederatedNode(strategy=strat, shared_folder=folder, node_id=f"n{i}",
+                                  transport=transport)
+    cb = FederatedCallback(node, num_examples_per_epoch=steps_per_epoch * batch_size)
+    x, y = shards[i]
+    data_fn = lambda epoch: batch_iterator(x, y, batch_size=batch_size, seed=i, epoch=epoch)
+    trainer.fit(data_fn, epochs=epochs, steps_per_epoch=steps_per_epoch, callbacks=[cb])
+    logits = model.apply(trainer.params, data.x_test)
+    out = {
+        "accuracy": float((np.argmax(np.asarray(logits), -1) == data.y_test).mean()),
+        "pushes": node.num_pushes,
+        "aggregations": node.num_aggregations,
+        "skipped_pulls": node.num_skipped_pulls,
+    }
+    if isinstance(folder, CachingFolder):
+        out["cache"] = folder.cache_stats()
+    return out
+
+
+def run_multiprocess_experiment(
+    *,
+    dataset: str = "mnist",
+    mode: str = "async",
+    strategy: str = "fedavg",
+    num_nodes: int = 3,
+    skew: float = 0.9,
+    epochs: int = 3,
+    steps_per_epoch: int = 25,
+    batch_size: int = 32,
+    lr: float = 1e-3,
+    seed: int = 0,
+    num_train: int = 4000,
+    num_test: int = 800,
+    folder_dir: str | None = None,
+    transport: str = "full",
+    cached: bool = True,
+    kill_after: dict[int, float] | None = None,
+    join_timeout: float = 1200.0,
+) -> FedResult:
+    """The paper-table experiment with real OS processes over a DiskFolder.
+
+    Each client is a separate interpreter; the only shared state is
+    ``folder_dir`` (defaults to a fresh temp dir — point it at an NFS/S3 mount
+    to span machines). ``transport``/``cached`` select the wire fast path;
+    ``kill_after`` injects SIGKILL crashes (see run_multiprocess).
+    """
+    cleanup_dir = None
+    if folder_dir is None:
+        folder_dir = cleanup_dir = tempfile.mkdtemp(prefix="fedbench_store_")
+    folder_uri = ("cache+" if cached else "") + folder_dir
+    kwargs = dict(
+        dataset=dataset, folder_uri=folder_uri, mode=mode, strategy=strategy,
+        num_nodes=num_nodes, skew=skew, epochs=epochs,
+        steps_per_epoch=steps_per_epoch, batch_size=batch_size, lr=lr, seed=seed,
+        num_train=num_train, num_test=num_test, transport=transport,
+    )
+    t0 = time.time()
+    try:
+        results = run_multiprocess(
+            [(_mp_image_client, (i,), kwargs) for i in range(num_nodes)],
+            names=[f"n{i}" for i in range(num_nodes)],
+            kill_after=kill_after,
+            join_timeout=join_timeout,
+        )
+    finally:
+        if cleanup_dir is not None:
+            shutil.rmtree(cleanup_dir, ignore_errors=True)
+    wall = time.time() - t0
+    survivors = [r for r in results if r.error is None]
+    # Only deaths at injected-kill indices are expected; any other failure is
+    # a broken run and must surface, not average into a healthy-looking row.
+    tolerated = set(kill_after or {})
+    unexpected = [r for i, r in enumerate(results) if r.error is not None and i not in tolerated]
+    if unexpected or not survivors:
+        failed = (unexpected or results)[0]
+        raise RuntimeError(f"client {failed.node_id} failed: {failed.traceback or failed.error}")
+    vals = [r.result["accuracy"] for r in survivors]
+    return FedResult(
+        name=f"{dataset}/mp-{mode}/{strategy}/{transport}/n{num_nodes}/skew{skew}",
         accuracy_mean=float(np.mean(vals)),
         accuracy_std=float(np.std(vals)),
         wall_seconds=wall,

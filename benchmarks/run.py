@@ -155,6 +155,28 @@ def figure_timing_straggler(trials: int):
             f"{sync.wall_seconds / max(asy.wall_seconds, 1e-9):.3f}")
 
 
+def bench_multiprocess(trials: int):
+    """Process-scale federation: 3 OS processes over a DiskFolder, full vs
+    delta+cached transport, plus a SIGKILL-robustness run (async survives)."""
+    from .fedbench import run_multiprocess_experiment
+
+    for transport in ("full", "delta"):
+        results = []
+        t0 = time.time()
+        for trial in range(trials):
+            results.append(run_multiprocess_experiment(
+                dataset="mnist", mode="async", num_nodes=3, epochs=2,
+                steps_per_epoch=15, transport=transport, cached=True, seed=trial))
+        _report(f"mp/async/{transport}/n3", (time.time() - t0) / trials,
+                _mean_std(results))
+    t0 = time.time()
+    res = run_multiprocess_experiment(
+        dataset="mnist", mode="async", num_nodes=3, epochs=3,
+        steps_per_epoch=15, kill_after={2: 20.0})
+    _report("mp/async/crash1of3", time.time() - t0,
+            f"{res.accuracy_mean:.3f} ({len(res.per_node_accuracy)} survivors)")
+
+
 def bench_kernels(trials: int):
     """Aggregation-path microbench: us_per_call for the fed_agg hot loop
     (jnp reference on CPU — the Pallas kernel is TPU-target, validated in
@@ -186,6 +208,7 @@ TABLES = {
     "table6": table6_cifar_strategies_full_skew,
     "table7": table7_lm_nodes,
     "timing": figure_timing_straggler,
+    "multiprocess": bench_multiprocess,
     "kernels": bench_kernels,
 }
 

@@ -1,0 +1,106 @@
+"""Multi-process serverless federation — the paper's claim with real processes.
+
+K clients run as separate OS processes (``spawn``: each gets a clean
+interpreter) whose ONLY shared state is a folder on disk. Optionally one
+client is SIGKILLed mid-training; in async mode the survivors keep going and
+still converge — no server, no coordinator, nothing to restart.
+
+Also demonstrates the store transports: ``--transport delta`` ships sparse
+diffs against a content-hashed base blob, and ``cache+`` folders skip
+re-downloading unchanged peer blobs (per-key version metadata).
+
+    PYTHONPATH=src python examples/multiprocess_federation.py
+    PYTHONPATH=src python examples/multiprocess_federation.py --crash --nodes 4
+    PYTHONPATH=src python examples/multiprocess_federation.py --transport delta
+"""
+import argparse
+import signal
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import (
+    AsyncFederatedNode,
+    CachingFolder,
+    make_folder,
+    run_multiprocess,
+)
+from repro.core.strategies import FedAvg
+
+
+def client(i: int, folder_uri: str, target: float, epochs: int, transport: str,
+           hang_after: int | None = None):
+    """Quadratic consensus client (module-level: spawn must pickle it).
+
+    Local 'training' pulls w toward this client's own target; federation mixes
+    in the peers. With FedAvg the fleet converges near the mean of targets.
+    ``hang_after`` parks the client after that many federation rounds so an
+    injected SIGKILL reliably lands mid-training.
+    """
+    folder = make_folder(folder_uri)
+    node = AsyncFederatedNode(strategy=FedAvg(), shared_folder=folder,
+                              node_id=f"client{i}", transport=transport)
+    w = np.zeros((8,), np.float32)
+    for epoch in range(epochs):
+        w = w + 0.3 * (np.float32(target) - w)  # local step
+        aggregated = node.update_parameters({"w": w}, num_examples=10)
+        if aggregated is not None:
+            w = aggregated["w"]
+        if hang_after is not None and epoch + 1 >= hang_after:
+            while True:  # mid-training: wait for the SIGKILL
+                time.sleep(0.05)
+        time.sleep(0.1)
+    out = {"final": float(w.mean()), "pushes": node.num_pushes,
+           "aggregations": node.num_aggregations}
+    if isinstance(folder, CachingFolder):
+        out["cache"] = folder.cache_stats()
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--nodes", type=int, default=3)
+    ap.add_argument("--epochs", type=int, default=10)
+    ap.add_argument("--transport", default="full",
+                    choices=["full", "quantized", "delta", "delta_q"])
+    ap.add_argument("--no-cache", action="store_true",
+                    help="read the folder directly instead of through cache+")
+    ap.add_argument("--crash", action="store_true",
+                    help="SIGKILL the last client mid-training")
+    ap.add_argument("--store", default=None,
+                    help="shared folder path (default: fresh temp dir)")
+    args = ap.parse_args(argv)
+
+    shared_dir = args.store or tempfile.mkdtemp(prefix="flwr_serverless_mp_")
+    folder_uri = ("" if args.no_cache else "cache+") + shared_dir
+    print(f"weight store: {shared_dir}  (transport={args.transport})")
+
+    targets = [float(i) for i in range(args.nodes)]
+    clients = [
+        (client, (i, folder_uri, targets[i], args.epochs, args.transport),
+         {"hang_after": 3 if (args.crash and i == args.nodes - 1) else None})
+        for i in range(args.nodes)
+    ]
+    kill_after = {args.nodes - 1: 8.0} if args.crash else None
+    results = run_multiprocess(clients, names=[f"client{i}" for i in range(args.nodes)],
+                               kill_after=kill_after, join_timeout=300.0)
+
+    for r in results:
+        if r.error is not None:
+            crashed = r.exitcode == -signal.SIGKILL
+            print(f"{r.node_id}: {'SIGKILLED mid-training' if crashed else r.error} "
+                  f"(exit code {r.exitcode})")
+        else:
+            print(f"{r.node_id}: final={r.result['final']:.3f} "
+                  f"pushes={r.result['pushes']} aggregations={r.result['aggregations']}"
+                  + (f" cache={r.result['cache']}" if "cache" in r.result else ""))
+    survivors = [r for r in results if r.error is None]
+    finals = [r.result["final"] for r in survivors]
+    spread = f"consensus spread {max(finals) - min(finals):.3f} " if finals else ""
+    print(f"{len(survivors)}/{args.nodes} clients finished; "
+          f"{spread}(targets spanned {max(targets) - min(targets):.1f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,9 +12,32 @@ Public API mirrors the paper's usage snippet:
 from .callback import Callback, FederatedCallback
 from .node import AsyncFederatedNode, FederationTimeout, SyncFederatedNode
 from .partition import partition_dataset, partition_sequence_dataset, skewed_assignment
-from .serialize import NodeUpdate, deserialize_update, serialize_update
-from .simulation import run_threaded, simulate_timeline, straggler_speedup
-from .store import DiskFolder, InMemoryFolder, S3Folder, SharedFolder, WeightStore, make_folder
+from .serialize import (
+    NodeUpdate,
+    deserialize_update,
+    deserialize_update_delta,
+    peek_meta,
+    serialize_update,
+    serialize_update_delta,
+)
+from .simulation import (
+    ClientResult,
+    ProcessCrashed,
+    run_multiprocess,
+    run_threaded,
+    simulate_timeline,
+    straggler_speedup,
+)
+from .store import (
+    TRANSPORTS,
+    CachingFolder,
+    DiskFolder,
+    InMemoryFolder,
+    S3Folder,
+    SharedFolder,
+    WeightStore,
+    make_folder,
+)
 from .strategies import (
     STRATEGIES,
     FedAdagrad,
@@ -38,11 +61,16 @@ __all__ = [
     "NodeUpdate",
     "serialize_update",
     "deserialize_update",
+    "serialize_update_delta",
+    "deserialize_update_delta",
+    "peek_meta",
     "SharedFolder",
     "InMemoryFolder",
     "DiskFolder",
     "S3Folder",
+    "CachingFolder",
     "WeightStore",
+    "TRANSPORTS",
     "make_folder",
     "Strategy",
     "FedAvg",
@@ -59,6 +87,9 @@ __all__ = [
     "partition_dataset",
     "partition_sequence_dataset",
     "run_threaded",
+    "run_multiprocess",
+    "ClientResult",
+    "ProcessCrashed",
     "simulate_timeline",
     "straggler_speedup",
 ]

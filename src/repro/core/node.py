@@ -35,12 +35,18 @@ class _BaseNode:
         shared_folder: SharedFolder | None = None,
         store: WeightStore | None = None,
         node_id: str | None = None,
+        transport: str | None = None,
         clock: Callable[[], float] = time.monotonic,
     ):
         if store is None:
             if shared_folder is None:
                 raise ValueError("need shared_folder or store")
-            store = WeightStore(shared_folder)
+            store = WeightStore(shared_folder, transport=transport)
+        elif transport is not None and transport != store.transport:
+            raise ValueError(
+                f"store already configured with transport {store.transport!r}; "
+                "pass transport= only together with shared_folder"
+            )
         self.store = store
         self.strategy = strategy or FedAvg()
         self.node_id = node_id or uuid.uuid4().hex[:8]
@@ -88,7 +94,11 @@ class AsyncFederatedNode(_BaseNode):
             return None
         peers = self.store.pull(exclude=self.node_id)
         self.num_pulls += 1
-        self._last_state_hash = self.store.state_hash(exclude_node=self.node_id)
+        # Record the PRE-pull hash: a peer depositing while we were pulling
+        # must show up as a change next round. Re-hashing here would mark that
+        # unseen blob as already-aggregated and drop it permanently; the
+        # pre-pull hash only risks one redundant re-pull.
+        self._last_state_hash = state
         if not peers:
             return None
         aggregated = self.strategy.aggregate(own, peers)

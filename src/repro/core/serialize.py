@@ -36,21 +36,39 @@ class NodeUpdate:
     metrics: dict = field(default_factory=dict)
 
 
-def serialize_params(params: PyTree, meta: dict[str, Any] | None = None) -> bytes:
-    leaves_with_paths = jax.tree_util.tree_flatten_with_path(params)[0]
-    arrays: dict[str, np.ndarray] = {}
-    order: list[str] = []
-    dtypes: dict[str, str] = {}
-    for path, leaf in leaves_with_paths:
-        key = path_str(path).replace("/", _SEP)
-        arr = np.asarray(leaf)
-        if arr.dtype.kind == "V" or arr.dtype.name in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
-            # numpy cannot round-trip ml_dtypes through npz; ship f32 on the
-            # wire (aggregation is f32 anyway) and restore dtype on load.
-            dtypes[key] = arr.dtype.name
-            arr = arr.astype(np.float32)
-        arrays[key] = arr
-        order.append(key)
+def _wire_leaf(leaf) -> tuple[np.ndarray, str | None]:
+    """Convert a leaf to its on-wire array. numpy cannot round-trip ml_dtypes
+    through npz, so those ship as f32 (aggregation is f32 anyway); returns
+    (array, original dtype name to restore on load — None when unneeded)."""
+    arr = np.asarray(leaf)
+    if arr.dtype.kind == "V" or arr.dtype.name in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
+        return arr.astype(np.float32), arr.dtype.name
+    return arr, None
+
+
+def _rebuild_tree(order, dtypes, get_leaf) -> dict:
+    """Rebuild the nested-dict pytree from 'a|b|c' key paths; restores the
+    original dtype of leaves that shipped as f32."""
+    tree: dict = {}
+    for key in order:
+        leaf = get_leaf(key)
+        if key in dtypes:
+            import ml_dtypes
+
+            leaf = leaf.astype(np.dtype(getattr(ml_dtypes, dtypes[key])))
+        parts = key.split(_SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return tree
+
+
+def _pack_npz(arrays: dict[str, np.ndarray], order: list[str], dtypes: dict[str, str],
+              meta: dict[str, Any] | None) -> bytes:
+    """The one wire envelope: leaf arrays + __order__/__dtypes__ under a JSON
+    __meta__ entry, zipped into an npz. Full and delta blobs both go through
+    here so envelope changes cannot desynchronize the two formats."""
     meta_blob = dict(meta or {})
     meta_blob["__order__"] = order
     meta_blob["__dtypes__"] = dtypes
@@ -60,42 +78,53 @@ def serialize_params(params: PyTree, meta: dict[str, Any] | None = None) -> byte
     return buf.getvalue()
 
 
+def serialize_params(params: PyTree, meta: dict[str, Any] | None = None) -> bytes:
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    arrays: dict[str, np.ndarray] = {}
+    order: list[str] = []
+    dtypes: dict[str, str] = {}
+    for path, leaf in leaves_with_paths:
+        key = path_str(path).replace("/", _SEP)
+        arr, original_dtype = _wire_leaf(leaf)
+        if original_dtype:
+            dtypes[key] = original_dtype
+        arrays[key] = arr
+        order.append(key)
+    return _pack_npz(arrays, order, dtypes, meta)
+
+
 def deserialize_params(blob: bytes) -> tuple[PyTree, dict[str, Any]]:
     """Returns (nested-dict params, meta). Key paths 'a|b|c' rebuild nesting."""
     with np.load(io.BytesIO(blob)) as data:
         meta = json.loads(bytes(data[_META_KEY].tobytes()).decode())
         order = meta.pop("__order__")
         dtypes = meta.pop("__dtypes__", {})
-        tree: dict = {}
-        for key in order:
-            parts = key.split(_SEP)
-            node = tree
-            for p in parts[:-1]:
-                node = node.setdefault(p, {})
-            leaf = data[key]
-            if key in dtypes:
-                import ml_dtypes
-
-                leaf = leaf.astype(np.dtype(getattr(ml_dtypes, dtypes[key])))
-            node[parts[-1]] = leaf
+        tree = _rebuild_tree(order, dtypes, lambda key: data[key])
     return tree, meta
 
 
-def serialize_update(update: NodeUpdate) -> bytes:
-    return serialize_params(
-        update.params,
-        meta={
-            "num_examples": int(update.num_examples),
-            "node_id": update.node_id,
-            "counter": int(update.counter),
-            "timestamp": float(update.timestamp),
-            "metrics": update.metrics,
-        },
-    )
+def canonicalize_params(params: PyTree) -> PyTree:
+    """The nested-dict tree a reader reconstructs after a serialize round-trip
+    (wire dtype conversion included), computed without the npz I/O. A delta
+    writer diffs future updates against this so its view of the base is
+    bitwise-identical to every reader's."""
+    wire = _flat_wire(params)
+    dtypes = {k: dt for k, (_, dt) in wire.items() if dt}
+    return _rebuild_tree(list(wire), dtypes, lambda key: np.array(wire[key][0], copy=True))
 
 
-def deserialize_update(blob: bytes) -> NodeUpdate:
-    params, meta = deserialize_params(blob)
+def _update_meta(update: NodeUpdate, **extra: Any) -> dict[str, Any]:
+    return {
+        "num_examples": int(update.num_examples),
+        "node_id": update.node_id,
+        "counter": int(update.counter),
+        "timestamp": float(update.timestamp),
+        "metrics": update.metrics,
+        **extra,
+    }
+
+
+def _update_from_meta(params: PyTree, meta: dict[str, Any]) -> NodeUpdate:
     return NodeUpdate(
         params=params,
         num_examples=int(meta["num_examples"]),
@@ -106,8 +135,24 @@ def deserialize_update(blob: bytes) -> NodeUpdate:
     )
 
 
+def serialize_update(update: NodeUpdate) -> bytes:
+    return serialize_params(update.params, meta=_update_meta(update))
+
+
+def deserialize_update(blob: bytes) -> NodeUpdate:
+    params, meta = deserialize_params(blob)
+    return _update_from_meta(params, meta)
+
+
 def content_hash(blob: bytes) -> str:
     return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def peek_meta(blob: bytes) -> dict[str, Any]:
+    """Read only the ``__meta__`` entry of a serialized blob (cheap dispatch:
+    full vs quantized vs delta) without materializing the weight arrays."""
+    with np.load(io.BytesIO(blob)) as data:
+        return json.loads(bytes(data[_META_KEY].tobytes()).decode())
 
 
 # --- int8 compressed payloads (beyond-paper extension #4) -------------------
@@ -129,26 +174,129 @@ def serialize_update_quantized(update: NodeUpdate) -> bytes:
     qtree = jax.tree.map(lambda x: quantize_leaf(np.asarray(x))[0], update.params)
     stree = jax.tree.map(lambda x: quantize_leaf(np.asarray(x))[1], update.params)
     return serialize_params(
-        {"q": qtree, "s": stree},
-        meta={
-            "num_examples": int(update.num_examples),
-            "node_id": update.node_id,
-            "counter": int(update.counter),
-            "timestamp": float(update.timestamp),
-            "metrics": update.metrics,
-            "quantized": True,
-        },
+        {"q": qtree, "s": stree}, meta=_update_meta(update, quantized=True)
     )
 
 
 def deserialize_update_quantized(blob: bytes) -> NodeUpdate:
     packed, meta = deserialize_params(blob)
     params = jax.tree.map(dequantize_leaf, packed["q"], packed["s"])
-    return NodeUpdate(
-        params=params,
-        num_examples=int(meta["num_examples"]),
-        node_id=str(meta["node_id"]),
-        counter=int(meta["counter"]),
-        timestamp=float(meta["timestamp"]),
-        metrics=meta.get("metrics", {}),
-    )
+    return _update_from_meta(params, meta)
+
+
+# --- delta payloads against a content-hashed base ---------------------------
+#
+# Transport fast path for the weight store: after the first full deposit, a
+# node ships only the entries that changed relative to a *base* blob it also
+# deposited (content-addressed, so readers can verify they reconstruct against
+# the exact bytes the writer diffed against). The sparse encoding stores the
+# NEW values at changed positions — not arithmetic differences — so
+# reconstruction is bitwise-exact and aggregation over reconstructed params
+# equals aggregation over full blobs exactly.
+
+_DENSE = "d" + _SEP  # per-leaf dense fallback
+_IDX = "i" + _SEP    # changed flat indices
+_VAL = "v" + _SEP    # new values at those indices
+_SCALE = "c" + _SEP  # int8 scale when the delta values are quantized
+
+
+class DeltaBaseMismatch(RuntimeError):
+    """The base blob a delta references is missing or has different content."""
+
+
+def _flat_wire(params: PyTree) -> dict[str, tuple[np.ndarray, str | None]]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        out[path_str(path).replace("/", _SEP)] = _wire_leaf(leaf)
+    return out
+
+
+def delta_density(params: PyTree, base_params: PyTree) -> float:
+    """Fraction of entries that differ from the base (1.0 on any structural
+    mismatch). Diagnostic helper for sizing experiments — the store itself
+    decides delta-vs-rebase by comparing the encoded delta's size against the
+    tree's raw byte size, which costs only the one serialization scan."""
+    new, base = _flat_wire(params), _flat_wire(base_params)
+    if set(new) != set(base):
+        return 1.0
+    changed = total = 0
+    for key, (a, _) in new.items():
+        b = base[key][0]
+        if a.shape != b.shape or a.dtype != b.dtype:
+            return 1.0
+        total += a.size
+        changed += int(np.count_nonzero(a.reshape(-1) != b.reshape(-1)))
+    return changed / max(total, 1)
+
+
+def serialize_update_delta(
+    update: NodeUpdate,
+    base_params: PyTree,
+    base_hash: str,
+    *,
+    quantize: bool = False,
+    density_threshold: float = 0.5,
+) -> bytes:
+    """Encode ``update`` as a sparse diff against ``base_params`` (whose full
+    serialized blob hashes to ``base_hash``). Leaves denser than
+    ``density_threshold`` fall back to dense storage; ``quantize`` ships the
+    changed values int8-quantized (lossy — drop it when bitwise equality with
+    the full-blob path matters)."""
+    new, base = _flat_wire(update.params), _flat_wire(base_params)
+    if set(new) != set(base):
+        raise ValueError("delta requires identical tree structure with the base")
+    arrays: dict[str, np.ndarray] = {}
+    order: list[str] = []
+    dtypes: dict[str, str] = {}
+    for key, (a, dt) in new.items():
+        order.append(key)
+        if dt:
+            dtypes[key] = dt
+        b = base[key][0]
+        if a.shape != b.shape or a.dtype != b.dtype:
+            arrays[_DENSE + key] = a
+            continue
+        af, bf = a.reshape(-1), b.reshape(-1)
+        idx = np.flatnonzero(af != bf)
+        if idx.size > density_threshold * af.size:
+            arrays[_DENSE + key] = a
+            continue
+        arrays[_IDX + key] = idx.astype(np.int64 if af.size > 2**31 else np.int32)
+        vals = af[idx]
+        if quantize and vals.dtype.kind == "f" and vals.size:
+            q, scale = quantize_leaf(vals)
+            arrays[_VAL + key] = q
+            arrays[_SCALE + key] = np.asarray(scale)
+        else:
+            arrays[_VAL + key] = vals
+    return _pack_npz(arrays, order, dtypes, _update_meta(update, delta_of=base_hash))
+
+
+def deserialize_update_delta(blob: bytes, base_params: PyTree) -> NodeUpdate:
+    """Reconstruct a full NodeUpdate from a delta blob + the base params it
+    was diffed against (the caller is responsible for matching ``delta_of`` to
+    the base blob's content hash; see WeightStore)."""
+    base = _flat_wire(base_params)
+    with np.load(io.BytesIO(blob)) as data:
+        meta = json.loads(bytes(data[_META_KEY].tobytes()).decode())
+        if "delta_of" not in meta:
+            raise ValueError("not a delta blob")
+        order = meta.pop("__order__")
+        dtypes = meta.pop("__dtypes__", {})
+
+        def reconstruct(key: str) -> np.ndarray:
+            if _DENSE + key in data.files:
+                return data[_DENSE + key]
+            if key not in base:
+                raise DeltaBaseMismatch(f"base is missing leaf {key!r}")
+            b = base[key][0]
+            flat = np.array(b, copy=True).reshape(-1)
+            idx = data[_IDX + key]
+            vals = data[_VAL + key]
+            if _SCALE + key in data.files:
+                vals = dequantize_leaf(vals, data[_SCALE + key])
+            flat[idx] = vals.astype(flat.dtype, copy=False)
+            return flat.reshape(b.shape)
+
+        tree = _rebuild_tree(order, dtypes, reconstruct)
+    return _update_from_meta(tree, meta)

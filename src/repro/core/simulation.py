@@ -1,11 +1,17 @@
 """Federated simulation harnesses.
 
-Two complementary simulators:
+Three complementary simulators:
 
 * ``run_threaded`` — real concurrency with Python threads sharing one weight
   store, mirroring the paper's own experimental setup ("we simulated
   concurrent training jobs with python multi-threading"). Supports injected
   per-node failures to reproduce the paper's robustness claims.
+
+* ``run_multiprocess`` — the same contract across real OS processes sharing a
+  ``DiskFolder`` (or any mountable backend). This is the honest version of
+  the paper's serverless claim: no shared Python objects, no GIL, crash
+  injection is a real SIGKILL mid-round, and survivors must make progress on
+  the strength of the shared folder alone.
 
 * ``simulate_timeline`` — deterministic event-driven virtual-clock model of
   sync vs async federation. The paper's timing claims (async avoids straggler
@@ -16,7 +22,11 @@ Two complementary simulators:
 """
 from __future__ import annotations
 
+import multiprocessing
+import os
+import signal
 import threading
+import time
 import traceback
 from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
@@ -33,6 +43,7 @@ class ClientResult:
     result: Any = None
     error: BaseException | None = None
     traceback: str = ""
+    exitcode: int | None = None  # set by run_multiprocess; None for threads
 
 
 def run_threaded(client_fns: Sequence[Callable[[], Any]], *, names: Sequence[str] | None = None,
@@ -57,6 +68,148 @@ def run_threaded(client_fns: Sequence[Callable[[], Any]], *, names: Sequence[str
         t.start()
     for t in threads:
         t.join(timeout=join_timeout)
+    return results
+
+
+# --------------------------------------------------------------------------
+# Process-based federation runtime
+# --------------------------------------------------------------------------
+
+
+class ProcessCrashed(RuntimeError):
+    """A client process exited without reporting a result (crash / SIGKILL)."""
+
+
+def _mp_entry(target: Callable[..., Any], args: tuple, kwargs: dict, conn) -> None:
+    """Child entrypoint: run the client and ship (ok, result, tb) back over the
+    child's private pipe (one channel per process — a SIGKILL mid-send can only
+    corrupt the victim's own channel, never a survivor's)."""
+    try:
+        result = target(*args, **kwargs)
+        conn.send((True, result, ""))
+    except BaseException:  # noqa: BLE001 - reported to the parent, never raised
+        conn.send((False, None, traceback.format_exc()))
+    finally:
+        conn.close()
+
+
+def run_multiprocess(
+    clients: Sequence[Callable[[], Any] | tuple],
+    *,
+    names: Sequence[str] | None = None,
+    start_method: str = "spawn",
+    join_timeout: float = 600.0,
+    kill_after: dict[int, float] | None = None,
+) -> list[ClientResult]:
+    """Run clients as real OS processes; a crashed process never kills the rest.
+
+    Each entry of ``clients`` is either a zero-arg callable or a
+    ``(target, args)`` / ``(target, args, kwargs)`` tuple. Targets and their
+    return values cross a process boundary, so both must be picklable —
+    module-level functions, not closures (the default ``spawn`` start method
+    gives every client a clean interpreter, which is what a real serverless
+    deployment looks like and is the only fork-safe choice once JAX threads
+    exist in the parent).
+
+    ``kill_after`` maps client index → seconds after launch at which the
+    process is SIGKILLed (crash injection mid-round: no cleanup, no goodbye
+    deposit — exactly what the async-robustness claim must survive). Killed or
+    timed-out clients report a ``ProcessCrashed`` error in their
+    ``ClientResult``; survivors are unaffected.
+    """
+    specs: list[tuple[Callable[..., Any], tuple, dict]] = []
+    for entry in clients:
+        if callable(entry):
+            specs.append((entry, (), {}))
+        else:
+            target = entry[0]
+            args = tuple(entry[1]) if len(entry) > 1 else ()
+            kwargs = dict(entry[2]) if len(entry) > 2 else {}
+            specs.append((target, args, kwargs))
+    for i in kill_after or {}:
+        # validate BEFORE launching anything: failing mid-setup would leave
+        # already-started children running unsupervised
+        if not 0 <= i < len(specs):
+            raise ValueError(f"kill_after index {i} out of range for {len(specs)} clients")
+    names = list(names or [f"node{i}" for i in range(len(specs))])
+    if len(names) != len(specs):
+        raise ValueError(f"{len(names)} names for {len(specs)} clients")
+    results = [ClientResult(node_id=n) for n in names]
+
+    ctx = multiprocessing.get_context(start_method)
+    procs = []
+    conns = []
+    for i, (t, a, kw) in enumerate(specs):
+        parent_conn, child_conn = ctx.Pipe(duplex=False)
+        procs.append(ctx.Process(target=_mp_entry, args=(t, a, kw, child_conn),
+                                 name=names[i], daemon=True))
+        conns.append((parent_conn, child_conn))
+    for p in procs:
+        p.start()
+    for _, child_conn in conns:
+        child_conn.close()  # parent's copy; lets recv see EOF when a child dies
+
+    timers: list[threading.Timer] = []
+
+    def _kill(proc) -> None:
+        if proc.is_alive() and proc.pid is not None:
+            try:
+                os.kill(proc.pid, signal.SIGKILL)
+            except ProcessLookupError:
+                pass
+
+    for i, delay in (kill_after or {}).items():
+        timer = threading.Timer(delay, _kill, args=(procs[i],))
+        timer.daemon = True
+        timer.start()
+        timers.append(timer)
+
+    received: set[int] = set()
+
+    def _try_recv(i: int) -> bool:
+        """Absorb client i's message if available; True when i is settled
+        (reported, channel dead, or process gone without reporting)."""
+        conn = conns[i][0]
+        alive = procs[i].is_alive()  # check BEFORE polling: a message landing
+        # between poll and liveness check must not be mistaken for a crash
+        try:
+            if not conn.poll(0 if alive else 0.05):
+                return not alive  # dead + channel empty ⇒ will never report
+            ok, result, tb = conn.recv()
+        except (EOFError, OSError):  # killed mid-send: only its own channel dies
+            return True
+        received.add(i)
+        if ok:
+            results[i].result = result
+        else:
+            results[i].error = ProcessCrashed(f"client {names[i]} raised")
+            results[i].traceback = tb
+        return True
+
+    deadline = time.monotonic() + join_timeout
+    pending = set(range(len(specs)))
+    while pending and time.monotonic() < deadline:
+        settled = {i for i in pending if _try_recv(i)}
+        pending -= settled
+        if not settled:
+            time.sleep(0.05)
+    # Final sweep: a result delivered right at the deadline is already sitting
+    # in our end of the pipe — recover it instead of reporting a crash.
+    for i in list(pending):
+        _try_recv(i)
+
+    for timer in timers:
+        timer.cancel()
+    for i, p in enumerate(procs):
+        p.join(timeout=max(0.0, deadline - time.monotonic()) + 1.0)
+        if p.is_alive():  # hung past the deadline: reap it
+            _kill(p)
+            p.join(timeout=5.0)
+        results[i].exitcode = p.exitcode
+        if i not in received and results[i].error is None:
+            results[i].error = ProcessCrashed(
+                f"client {names[i]} exited with code {p.exitcode} before reporting"
+            )
     return results
 
 

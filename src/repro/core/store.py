@@ -13,11 +13,16 @@ Backends:
   * ``S3Folder``      — thin boto3 adapter, import-guarded (the container is
     offline; the class exists so the public API matches the paper's usage
     snippet `S3Folder(directory="mybucket/experiment1")`).
+  * ``CachingFolder`` — read-through wrapper over any backend: skips
+    re-downloading blobs whose per-key ``version`` metadata is unchanged
+    (the Algorithm 1 state-hash fast path at per-peer granularity).
 
 All backends implement the tiny ``SharedFolder`` byte-blob protocol; the
 ``WeightStore`` wrapper above them speaks ``NodeUpdate`` pytrees, keeps one
 *latest* blob per node (plus optional history), and exposes the state-hash
-fast path from Algorithm 1.
+fast path from Algorithm 1. ``WeightStore`` also owns the wire *transport*:
+full blobs, int8-quantized blobs, or sparse deltas against a content-hashed
+per-node base blob.
 """
 from __future__ import annotations
 
@@ -26,16 +31,38 @@ import os
 import tempfile
 import threading
 import time
+import urllib.parse
 from abc import ABC, abstractmethod
-from typing import Iterable
+from typing import Any, Iterable
 
 from .serialize import (
     NodeUpdate,
+    canonicalize_params,
+    content_hash,
     deserialize_update,
+    deserialize_update_delta,
     deserialize_update_quantized,
+    peek_meta,
     serialize_update,
+    serialize_update_delta,
     serialize_update_quantized,
 )
+from .tree import tree_size_bytes
+
+def _excluded(key: str, exclude: "str | tuple[str, ...] | None") -> bool:
+    """state_hash exclusion: ``exclude`` is None, one exact key, or a tuple
+    whose entries are exact keys or prefixes (marked by a trailing '/')."""
+    if exclude is None:
+        return False
+    if isinstance(exclude, str):
+        exclude = (exclude,)
+    for entry in exclude:
+        if entry.endswith("/"):
+            if key.startswith(entry):
+                return True
+        elif key == entry:
+            return True
+    return False
 
 
 class SharedFolder(ABC):
@@ -53,17 +80,25 @@ class SharedFolder(ABC):
     @abstractmethod
     def delete(self, key: str) -> None: ...
 
-    def state_hash(self, exclude: str | None = None) -> str:
+    def version(self, key: str) -> Any | None:
+        """Cheap per-key change token (vclock, stat tuple, etag). Two calls
+        returning equal non-None values imply the blob content is unchanged.
+        ``None`` means the backend cannot answer cheaply (or the key is
+        missing) — callers must fetch."""
+        return None
+
+    def state_hash(self, exclude: str | tuple[str, ...] | None = None) -> str:
         """Hash of (key, version) pairs — cheap change detection. ``exclude``
-        drops one key (the caller's own deposit) so a client's push does not
-        defeat its own skip check (Algorithm 1's hash comparison).
+        drops keys (the caller's own deposits: exact keys, or prefixes ending
+        in '/') so a client's push does not defeat its own skip check
+        (Algorithm 1's hash comparison).
 
         Default derives versions from blob hashes; backends override with
         cheaper metadata (mtime, etag) when available.
         """
         h = hashlib.sha256()
         for key in sorted(self.keys()):
-            if key == exclude:
+            if _excluded(key, exclude):
                 continue
             blob = self.get(key)
             if blob is not None:
@@ -100,9 +135,15 @@ class InMemoryFolder(SharedFolder):
             self._blobs.pop(key, None)
             self._versions.pop(key, None)
 
-    def state_hash(self, exclude: str | None = None) -> str:
+    def version(self, key: str) -> int | None:
         with self._lock:
-            items = sorted((k, v) for k, v in self._versions.items() if k != exclude)
+            return self._versions.get(key)
+
+    def state_hash(self, exclude: str | tuple[str, ...] | None = None) -> str:
+        with self._lock:
+            items = sorted(
+                (k, v) for k, v in self._versions.items() if not _excluded(k, exclude)
+            )
         h = hashlib.sha256(repr(items).encode())
         return h.hexdigest()[:16]
 
@@ -119,7 +160,9 @@ class DiskFolder(SharedFolder):
         os.makedirs(directory, exist_ok=True)
 
     def _path(self, key: str) -> str:
-        safe = key.replace("/", "__")
+        # Percent-encoding is reversible even when the key (a node id, say)
+        # itself contains '/', '__', or '%' — '.replace("/", "__")' was not.
+        safe = urllib.parse.quote(key, safe="")
         return os.path.join(self.directory, safe + ".npz")
 
     def put(self, key: str, blob: bytes) -> None:
@@ -127,6 +170,12 @@ class DiskFolder(SharedFolder):
         try:
             with os.fdopen(fd, "wb") as f:
                 f.write(blob)
+            # Stamp an explicit nanosecond mtime: the filesystem clock can be
+            # coarse (1s on NFS), and inode numbers recycle, so without this a
+            # rapid same-size rewrite could repeat a version() token and let a
+            # CachingFolder serve stale bytes as a hit.
+            now = time.time_ns()
+            os.utime(tmp, ns=(now, now))
             os.replace(tmp, self._path(key))
         finally:
             if os.path.exists(tmp):
@@ -148,7 +197,7 @@ class DiskFolder(SharedFolder):
         out = []
         for name in os.listdir(self.directory):
             if name.endswith(".npz"):
-                out.append(name[: -len(".npz")].replace("__", "/"))
+                out.append(urllib.parse.unquote(name[: -len(".npz")]))
         return out
 
     def delete(self, key: str) -> None:
@@ -157,18 +206,31 @@ class DiskFolder(SharedFolder):
         except FileNotFoundError:
             pass
 
-    def state_hash(self, exclude: str | None = None) -> str:
+    def version(self, key: str) -> tuple[int, int, int] | None:
+        try:
+            st = os.stat(self._path(key))
+        except FileNotFoundError:
+            return None
+        # put() always replaces via a fresh temp file, so the inode changes on
+        # every write — (inode, mtime, size) survives coarse mtime clocks.
+        return (st.st_ino, st.st_mtime_ns, st.st_size)
+
+    def state_hash(self, exclude: str | tuple[str, ...] | None = None) -> str:
         items = []
-        skip = exclude.replace("/", "__") + ".npz" if exclude else None
         for name in sorted(os.listdir(self.directory)):
-            if not name.endswith(".npz") or name == skip:
+            if not name.endswith(".npz"):
+                continue
+            if _excluded(urllib.parse.unquote(name[: -len(".npz")]), exclude):
                 continue
             path = os.path.join(self.directory, name)
             try:
                 st = os.stat(path)
             except FileNotFoundError:
                 continue
-            items.append((name, st.st_mtime_ns, st.st_size))
+            # include the inode: a same-size rewrite within one mtime tick on a
+            # coarse-timestamp mount must still change the hash (put() always
+            # replaces via a fresh temp file)
+            items.append((name, st.st_ino, st.st_mtime_ns, st.st_size))
         return hashlib.sha256(repr(items).encode()).hexdigest()[:16]
 
 
@@ -214,14 +276,113 @@ class S3Folder(SharedFolder):
     def delete(self, key: str) -> None:  # pragma: no cover
         self._s3.delete_object(Bucket=self.bucket, Key=self._key(key))
 
-    def state_hash(self, exclude: str | None = None) -> str:  # pragma: no cover
+    def version(self, key: str) -> str | None:  # pragma: no cover
+        try:
+            resp = self._s3.head_object(Bucket=self.bucket, Key=self._key(key))
+        except Exception:
+            return None
+        return resp.get("ETag")
+
+    def state_hash(self, exclude: str | tuple[str, ...] | None = None) -> str:  # pragma: no cover
         prefix = f"{self.prefix}/" if self.prefix else ""
-        skip = self._key(exclude) if exclude else None
         resp = self._s3.list_objects_v2(Bucket=self.bucket, Prefix=prefix)
         items = sorted(
-            (o["Key"], o["ETag"]) for o in resp.get("Contents", []) if o["Key"] != skip
+            (o["Key"], o["ETag"])
+            for o in resp.get("Contents", [])
+            if o["Key"].endswith(".npz")
+            and not _excluded(o["Key"][len(prefix): -len(".npz")], exclude)
         )
         return hashlib.sha256(repr(items).encode()).hexdigest()[:16]
+
+
+class CachingFolder(SharedFolder):
+    """Read-through cache over any SharedFolder.
+
+    ``get`` first asks the inner backend for the key's cheap ``version`` token
+    and returns the locally cached blob when it matches — so a peer whose
+    deposit has not changed since the last pull costs one metadata lookup
+    instead of a full download. This extends Algorithm 1's whole-store
+    state-hash fast path to per-peer granularity, which matters once one slow
+    peer would otherwise force re-downloading every fast peer's blob.
+
+    Byte counters (``bytes_fetched`` / ``bytes_saved``) make transport
+    experiments measurable. The cache holds at most ``max_entries`` blobs
+    (LRU): a long sync federation with ``keep_history`` mints a new
+    ``history/...`` key every round, and an unbounded cache would grow with
+    the full federation trace.
+    """
+
+    def __init__(self, inner: SharedFolder, *, max_entries: int = 64):
+        self.inner = inner
+        self.max_entries = max_entries
+        self._cache: dict[str, tuple[Any, bytes]] = {}  # insertion-ordered, LRU
+        self._lock = threading.RLock()
+        self.hits = 0
+        self.misses = 0
+        self.bytes_fetched = 0
+        self.bytes_saved = 0
+
+    def put(self, key: str, blob: bytes) -> None:
+        self.inner.put(key, blob)
+        # Invalidate rather than cache: version(key) here could already belong
+        # to a concurrent writer's blob, and pairing their token with our bytes
+        # would be a *persistent* stale hit. The next get refetches once.
+        with self._lock:
+            self._cache.pop(key, None)
+
+    def _remember(self, key: str, version: Any, blob: bytes) -> None:
+        self._cache.pop(key, None)
+        self._cache[key] = (version, blob)
+        while len(self._cache) > self.max_entries:
+            self._cache.pop(next(iter(self._cache)))
+
+    def get(self, key: str) -> bytes | None:
+        # Read the version token *before* the blob: if a writer lands between
+        # the two reads we may cache a fresh blob under a stale token, which
+        # only costs one redundant refetch next time — never a stale hit.
+        v = self.inner.version(key)
+        if v is not None:
+            with self._lock:
+                hit = self._cache.get(key)
+                if hit is not None and hit[0] == v:
+                    self.hits += 1
+                    self.bytes_saved += len(hit[1])
+                    self._remember(key, *hit)  # refresh LRU position
+                    return hit[1]
+        blob = self.inner.get(key)
+        with self._lock:
+            self.misses += 1
+            if blob is not None:
+                self.bytes_fetched += len(blob)
+                if v is not None:
+                    self._remember(key, v, blob)
+        return blob
+
+    def keys(self) -> list[str]:
+        return self.inner.keys()
+
+    def delete(self, key: str) -> None:
+        self.inner.delete(key)
+        with self._lock:
+            self._cache.pop(key, None)
+
+    def version(self, key: str) -> Any | None:
+        return self.inner.version(key)
+
+    def state_hash(self, exclude: str | tuple[str, ...] | None = None) -> str:
+        return self.inner.state_hash(exclude=exclude)
+
+    def cache_stats(self) -> dict[str, int]:
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "bytes_fetched": self.bytes_fetched,
+                "bytes_saved": self.bytes_saved,
+            }
+
+
+TRANSPORTS = ("full", "quantized", "delta", "delta_q")
 
 
 class WeightStore:
@@ -230,25 +391,122 @@ class WeightStore:
     Implements the push / state-hash-check / pull triad from Algorithm 1.
     ``keep_history`` additionally retains per-counter blobs so experiments can
     audit the full federation trace.
+
+    ``transport`` selects the wire format for ``latest/`` deposits:
+
+      * ``"full"``      — one complete npz blob per push (the default).
+      * ``"quantized"`` — int8-quantized blob (lossy, ~4x smaller).
+      * ``"delta"``     — sparse diff against a per-node content-hashed base
+        blob stored under ``base/<node>/<hash>``; lossless (bitwise-equal
+        reconstruction). The node re-deposits a full base every
+        ``rebase_every`` pushes, or whenever the encoded delta would not be
+        smaller than a full deposit (``delta_density_threshold`` governs the
+        per-leaf dense fallback inside the wire format).
+      * ``"delta_q"``   — delta with int8-quantized changed values (lossy).
+
+    Blobs are self-describing (dispatch on ``__meta__``), so readers decode
+    any transport regardless of their own setting.
     """
 
-    def __init__(self, folder: SharedFolder, *, quantized: bool = False, keep_history: bool = False):
+    def __init__(
+        self,
+        folder: SharedFolder,
+        *,
+        quantized: bool = False,
+        keep_history: bool = False,
+        transport: str | None = None,
+        rebase_every: int = 10,
+        delta_density_threshold: float = 0.5,
+    ):
+        if transport is None:
+            transport = "quantized" if quantized else "full"
+        if transport not in TRANSPORTS:
+            raise ValueError(f"unknown transport {transport!r}; options: {TRANSPORTS}")
         self.folder = folder
-        self.quantized = quantized
+        self.transport = transport
+        self.quantized = transport == "quantized"
         self.keep_history = keep_history
-        self._ser = serialize_update_quantized if quantized else serialize_update
-        self._de = deserialize_update_quantized if quantized else deserialize_update
+        self.rebase_every = rebase_every
+        self.delta_density_threshold = delta_density_threshold
+        # writer state: node -> (base_hash, base_params, pushes since rebase)
+        self._bases: dict[str, tuple[str, Any, int]] = {}
+        # reader state: base_hash -> decoded base params (bounded)
+        self._decoded_bases: dict[str, Any] = {}
 
     # -- push ---------------------------------------------------------------
     def push(self, update: NodeUpdate) -> None:
-        blob = self._ser(update)
-        self.folder.put(f"latest/{update.node_id}", blob)
+        is_delta = False
+        if self.transport in ("delta", "delta_q"):
+            blob, is_delta = self._push_delta(update)
+        else:
+            ser = serialize_update_quantized if self.quantized else serialize_update
+            blob = ser(update)
+            self.folder.put(f"latest/{update.node_id}", blob)
         if self.keep_history:
+            if is_delta:
+                blob = serialize_update(update)  # history stays self-contained
             self.folder.put(f"history/{update.node_id}/{update.counter:06d}", blob)
+
+    def _push_delta(self, update: NodeUpdate) -> tuple[bytes, bool]:
+        """Deposit a delta when worthwhile, else rebase with a full blob;
+        returns (deposited blob, whether it is a delta)."""
+        node = update.node_id
+        base = self._bases.get(node)
+        if base is not None and base[2] < self.rebase_every:
+            h, base_params, age = base
+            try:
+                blob = serialize_update_delta(
+                    update,
+                    base_params,
+                    h,
+                    quantize=self.transport == "delta_q",
+                    density_threshold=self.delta_density_threshold,
+                )
+            except ValueError:  # tree structure changed vs the base → rebase
+                blob = None
+            # One scan decides: if the encoded delta is not actually smaller
+            # than a full deposit (dense drift — e.g. aggregated params were
+            # adopted), rebase instead of shipping a delta that saves nothing.
+            if blob is not None and len(blob) < tree_size_bytes(update.params):
+                self.folder.put(f"latest/{node}", blob)
+                self._bases[node] = (h, base_params, age + 1)
+                return blob, True
+        full = serialize_update(update)
+        h = content_hash(full)
+        # Base first, then latest: a reader that sees the new latest can
+        # always resolve its base. Old bases are GC'd only after the new
+        # full latest is in place (readers of the old delta retry into
+        # the new full blob).
+        self.folder.put(f"base/{node}/{h}", full)
+        self.folder.put(f"latest/{node}", full)
+        if base is not None:
+            # common case: we know the one base we deposited — delete it
+            # directly instead of listing the whole folder
+            if base[0] != h:
+                self.folder.delete(f"base/{node}/{base[0]}")
+        else:
+            # first rebase in this process: sweep leftovers from a previous
+            # incarnation (e.g. a crashed client restarting under its id)
+            for key in self.folder.keys():
+                # match on (prefix, hash) split from the right: node ids may
+                # contain '/', so a plain startswith would cross node borders
+                if key.rpartition("/")[0] == f"base/{node}" and key != f"base/{node}/{h}":
+                    self.folder.delete(key)
+        self._bases[node] = (h, canonicalize_params(update.params), 0)
+        return full, False
 
     # -- state hash fast path -------------------------------------------------
     def state_hash(self, exclude_node: str | None = None) -> str:
-        exclude = f"latest/{exclude_node}" if exclude_node else None
+        # A node's deposits span latest/, base/ (delta rebases) and history/;
+        # all of them must be excluded or the node's own push would defeat its
+        # own skip check.
+        exclude = None
+        if exclude_node:
+            exclude = (
+                f"latest/{exclude_node}",
+                f"base/{exclude_node}/",
+                f"history/{exclude_node}/",
+            )
         return self.folder.state_hash(exclude=exclude)
 
     # -- pull ---------------------------------------------------------------
@@ -257,20 +515,50 @@ class WeightStore:
             key[len("latest/"):] for key in self.folder.keys() if key.startswith("latest/")
         )
 
+    def _decode(self, blob: bytes, node_id: str) -> NodeUpdate | None:
+        """Decode a self-describing blob; None when a delta's base cannot be
+        resolved yet (caller refetches — the writer is mid-rebase)."""
+        meta = peek_meta(blob)
+        base_hash = meta.get("delta_of")
+        if base_hash:
+            base_params = self._decoded_bases.get(base_hash)
+            if base_params is None:
+                base_blob = self.folder.get(f"base/{node_id}/{base_hash}")
+                if base_blob is None or content_hash(base_blob) != base_hash:
+                    return None
+                base_params = deserialize_update(base_blob).params
+                if len(self._decoded_bases) > 16:
+                    self._decoded_bases.pop(next(iter(self._decoded_bases)))
+                self._decoded_bases[base_hash] = base_params
+            return deserialize_update_delta(blob, base_params)
+        if meta.get("quantized"):
+            return deserialize_update_quantized(blob)
+        return deserialize_update(blob)
+
+    def _pull_latest(self, node_id: str) -> NodeUpdate | None:
+        for _ in range(3):
+            blob = self.folder.get(f"latest/{node_id}")
+            if blob is None:
+                return None
+            update = self._decode(blob, node_id)
+            if update is not None:
+                return update
+            time.sleep(0.01)  # writer mid-rebase; refetch latest + base
+        return None
+
     def pull(self, exclude: str | None = None) -> list[NodeUpdate]:
         """Latest update per node (optionally excluding the caller's own)."""
         out = []
         for node_id in self.node_ids():
             if node_id == exclude:
                 continue
-            blob = self.folder.get(f"latest/{node_id}")
-            if blob is not None:
-                out.append(self._de(blob))
+            update = self._pull_latest(node_id)
+            if update is not None:
+                out.append(update)
         return out
 
     def pull_node(self, node_id: str) -> NodeUpdate | None:
-        blob = self.folder.get(f"latest/{node_id}")
-        return self._de(blob) if blob is not None else None
+        return self._pull_latest(node_id)
 
     def pull_round(self, counter: int, exclude: str | None = None) -> list[NodeUpdate]:
         """Exact-round blobs (requires keep_history=True) — used by the
@@ -281,21 +569,29 @@ class WeightStore:
         for key in sorted(self.folder.keys()):
             if not key.startswith(prefix):
                 continue
-            _, node_id, ctr = key.split("/")
-            if int(ctr) != counter or node_id == exclude:
+            # node ids may themselves contain '/' — split the counter off the
+            # right instead of assuming exactly three segments.
+            node_id, _, ctr = key[len(prefix):].rpartition("/")
+            if not ctr.isdigit() or int(ctr) != counter or node_id == exclude:
                 continue
             blob = self.folder.get(key)
             if blob is not None:
-                out.append(self._de(blob))
-        return out
+                out.append(self._decode(blob, node_id))
+        return [u for u in out if u is not None]
 
     def clear(self) -> None:
         for key in self.folder.keys():
             self.folder.delete(key)
+        self._bases.clear()
+        self._decoded_bases.clear()
 
 
 def make_folder(uri: str) -> SharedFolder:
-    """Folder factory: 'memory://', 's3://bucket/prefix', or a local path."""
+    """Folder factory: 'memory://', 's3://bucket/prefix', a local path, or any
+    of those behind a read-through cache via a 'cache+' prefix
+    (e.g. 'cache+/mnt/shared/exp1', 'cache+s3://bucket/exp1')."""
+    if uri.startswith("cache+"):
+        return CachingFolder(make_folder(uri[len("cache+"):]))
     if uri.startswith("memory://"):
         return InMemoryFolder()
     if uri.startswith("s3://"):

@@ -1,5 +1,5 @@
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core.partition import (
     label_partitions,

@@ -95,3 +95,47 @@ def test_make_folder_dispatch(tmp_path):
 def test_content_hash_stability():
     blob = serialize_update(NodeUpdate(params(), num_examples=1, node_id="n"))
     assert content_hash(blob) == content_hash(blob)
+
+
+# --- key round-tripping regressions -----------------------------------------
+
+
+@pytest.mark.parametrize("node_id", ["a__b", "team/alpha", "pct%id", "dot.dash-_x", "sp ace"])
+def test_diskfolder_key_roundtrip_hostile_node_ids(tmp_path, node_id):
+    """DiskFolder must round-trip keys whose node id contains '/', '__', '%',
+    or spaces (the old '__'-join encoding was lossy)."""
+    folder = DiskFolder(str(tmp_path))
+    key = f"latest/{node_id}"
+    folder.put(key, b"payload")
+    assert folder.keys() == [key]
+    assert folder.get(key) == b"payload"
+    h = folder.state_hash(exclude=key)
+    folder.put(key, b"payload2")
+    assert folder.state_hash(exclude=key) == h  # exclusion matches the key
+    folder.delete(key)
+    assert folder.keys() == []
+
+
+@pytest.mark.parametrize("node_id", ["a__b", "team/alpha", "with__many__unders"])
+def test_pull_round_with_hostile_node_ids(tmp_path, node_id):
+    """pull_round used to assume history keys split into exactly 3 parts."""
+    store = WeightStore(DiskFolder(str(tmp_path)), keep_history=True)
+    store.push(NodeUpdate(params(), num_examples=2, node_id=node_id, counter=0))
+    store.push(NodeUpdate(params(), num_examples=2, node_id=node_id, counter=1))
+    store.push(NodeUpdate(params(), num_examples=5, node_id="plain", counter=0))
+    assert store.node_ids() == sorted([node_id, "plain"])
+    round0 = store.pull_round(0)
+    assert sorted(u.node_id for u in round0) == sorted([node_id, "plain"])
+    assert [u.node_id for u in store.pull_round(1)] == [node_id]
+    assert [u.node_id for u in store.pull_round(0, exclude=node_id)] == ["plain"]
+
+
+def test_diskfolder_version_changes_on_overwrite(tmp_path):
+    folder = DiskFolder(str(tmp_path))
+    assert folder.version("missing") is None
+    folder.put("k", b"same-size")
+    v1 = folder.version("k")
+    folder.put("k", b"same-size")  # same content and size, new write
+    v2 = folder.version("k")
+    assert v1 is not None and v2 is not None
+    assert v1 != v2  # fresh temp-file inode ⇒ version moves even at same mtime

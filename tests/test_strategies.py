@@ -1,6 +1,6 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core.serialize import NodeUpdate
 from repro.core.strategies import (
@@ -107,3 +107,62 @@ def test_kernel_backed_fedavg_matches():
     plain = FedAvg().aggregate(upd(1.0, n=10), [upd(5.0, n=30, node="p")])
     kern = FedAvg(use_kernel=True).aggregate(upd(1.0, n=10), [upd(5.0, n=30, node="p")])
     assert tree_allclose(plain, kern, rtol=1e-5, atol=1e-5)
+
+
+# --- async strategy semantics (FedAsync staleness, FedBuff buffering) --------
+
+
+@pytest.mark.parametrize("fn", ["poly", "hinge", "const"])
+def test_fedasync_discount_monotone_nonincreasing(fn):
+    """s(staleness) must never grow with staleness, for every discount family."""
+    strat = FedAsync(staleness_fn=fn, a=0.5, b=4)
+    discounts = [strat._discount(s) for s in range(0, 20)]
+    assert all(d1 >= d2 - 1e-12 for d1, d2 in zip(discounts, discounts[1:])), discounts
+    assert all(0.0 < d <= 1.0 for d in discounts)
+
+
+def test_fedasync_poly_strictly_decreasing_const_flat():
+    poly = FedAsync(staleness_fn="poly", a=0.5)
+    assert poly._discount(0) > poly._discount(1) > poly._discount(5)
+    const = FedAsync(staleness_fn="const")
+    assert const._discount(0) == const._discount(100) == 1.0
+
+
+def test_fedasync_hinge_flat_then_decaying():
+    hinge = FedAsync(staleness_fn="hinge", a=0.5, b=4)
+    assert hinge._discount(0) == hinge._discount(4) == 1.0
+    assert hinge._discount(5) < 1.0
+    assert hinge._discount(10) < hinge._discount(5)
+
+
+def test_fedasync_mixing_bounded_by_alpha():
+    """Aggregate must stay within [own, own + α·(peer − own)] per peer."""
+    strat = FedAsync(alpha=0.3, staleness_fn="const")
+    out = strat.aggregate(upd(0.0), [upd(10.0, node="p")])
+    assert np.allclose(out["layer"]["w"], 3.0)  # α · s(0) = 0.3 of the gap
+
+
+def test_fedbuff_rebuffers_newer_counter():
+    """A peer's *newer* update re-enters the buffer after a flush; replays of
+    the same counter do not."""
+    strat = FedBuff(buffer_size=2)
+    own = upd(0.0)
+    out = strat.aggregate(own, [upd(4.0, node="p", counter=0)])
+    assert np.allclose(out["layer"]["w"], 2.0)  # flushed at threshold
+    # replay of counter 0 → ignored, buffer only has own → own params back
+    out = strat.aggregate(own, [upd(4.0, node="p", counter=0)])
+    assert tree_allclose(out, own.params)
+    # the peer progressed to counter 1 → buffered again → flush
+    out = strat.aggregate(own, [upd(8.0, node="p", counter=1)])
+    assert np.allclose(out["layer"]["w"], 4.0)
+
+
+def test_fedbuff_counts_distinct_nodes_not_updates():
+    strat = FedBuff(buffer_size=3)
+    own = upd(0.0)
+    # two successive updates from the same peer must not fill a 3-buffer
+    strat.aggregate(own, [upd(1.0, node="p", counter=0)])
+    out = strat.aggregate(own, [upd(2.0, node="p", counter=1)])
+    assert tree_allclose(out, own.params)  # still only {own, p} buffered
+    out = strat.aggregate(own, [upd(3.0, node="q", counter=0)])
+    assert not tree_allclose(out, own.params)  # third distinct node → flush

@@ -1,0 +1,304 @@
+"""Delta + cached store transport: correctness and byte accounting.
+
+The headline property: federating with ``transport="delta"`` behind a
+``CachingFolder`` produces *bitwise identical* aggregation results to the
+full-blob path while reading far fewer bytes from the shared folder.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (
+    AsyncFederatedNode,
+    CachingFolder,
+    DiskFolder,
+    InMemoryFolder,
+    NodeUpdate,
+    WeightStore,
+    deserialize_update_delta,
+    make_folder,
+    peek_meta,
+    serialize_update,
+    serialize_update_delta,
+)
+from repro.core.serialize import DeltaBaseMismatch, content_hash, delta_density
+from repro.core.strategies import FedAvg
+
+
+def _params(rng, scale=1.0):
+    # Big enough that payload bytes dominate npz container overhead — the
+    # regime transport choices are about.
+    return {
+        "layer": {"w": (scale * rng.normal(size=(256, 128))).astype(np.float32)},
+        "head": (scale * rng.normal(size=(512,))).astype(np.float32),
+    }
+
+
+def _sparse_step(params, rng, fraction=0.01):
+    """Deterministically mutate a small fraction of entries in-place-ish."""
+    out = {}
+    for top, v in params.items():
+        if isinstance(v, dict):
+            out[top] = {k: a.copy() for k, a in v.items()}
+        else:
+            out[top] = v.copy()
+    for arr in [out["layer"]["w"], out["head"]]:
+        flat = arr.reshape(-1)
+        n = max(1, int(fraction * flat.size))
+        idx = rng.choice(flat.size, size=n, replace=False)
+        flat[idx] += rng.normal(size=n).astype(np.float32)
+    return out
+
+
+# --- delta wire format ------------------------------------------------------
+
+
+def test_delta_roundtrip_is_bitwise_exact():
+    rng = np.random.default_rng(0)
+    base = _params(rng)
+    base_blob = serialize_update(NodeUpdate(base, num_examples=1, node_id="n", counter=0))
+    new = _sparse_step(base, rng)
+    u = NodeUpdate(new, num_examples=9, node_id="n", counter=1, timestamp=2.5,
+                   metrics={"loss": 0.25})
+    blob = serialize_update_delta(u, base, content_hash(base_blob))
+    u2 = deserialize_update_delta(blob, base)
+    assert np.array_equal(u2.params["layer"]["w"], new["layer"]["w"])
+    assert np.array_equal(u2.params["head"], new["head"])
+    assert (u2.num_examples, u2.counter, u2.timestamp) == (9, 1, 2.5)
+    assert u2.metrics == {"loss": 0.25}
+    assert peek_meta(blob)["delta_of"] == content_hash(base_blob)
+
+
+def test_delta_blob_is_smaller_for_sparse_changes():
+    rng = np.random.default_rng(1)
+    base = _params(rng)
+    new = _sparse_step(base, rng, fraction=0.01)
+    u = NodeUpdate(new, num_examples=1, node_id="n", counter=1)
+    full = serialize_update(u)
+    delta = serialize_update_delta(u, base, "h")
+    assert len(delta) < 0.5 * len(full)
+
+
+def test_delta_dense_fallback_and_density():
+    rng = np.random.default_rng(2)
+    base = _params(rng)
+    totally_new = _params(np.random.default_rng(3))
+    assert delta_density(totally_new, base) > 0.9
+    u = NodeUpdate(totally_new, num_examples=1, node_id="n", counter=1)
+    blob = serialize_update_delta(u, base, "h")  # every leaf goes dense
+    u2 = deserialize_update_delta(blob, base)
+    assert np.array_equal(u2.params["layer"]["w"], totally_new["layer"]["w"])
+
+
+def test_delta_structural_mismatch_raises():
+    rng = np.random.default_rng(4)
+    base = _params(rng)
+    other = {"different": np.ones((3,), np.float32)}
+    u = NodeUpdate(other, num_examples=1, node_id="n", counter=1)
+    with pytest.raises(ValueError):
+        serialize_update_delta(u, base, "h")
+
+
+def test_delta_quantized_is_close_not_exact():
+    rng = np.random.default_rng(5)
+    base = _params(rng)
+    new = _sparse_step(base, rng, fraction=0.05)
+    u = NodeUpdate(new, num_examples=1, node_id="n", counter=1)
+    u2 = deserialize_update_delta(serialize_update_delta(u, base, "h", quantize=True), base)
+    w, w2 = new["layer"]["w"], u2.params["layer"]["w"]
+    assert not np.array_equal(w, w2) or np.array_equal(w, base["layer"]["w"])
+    changed = w != base["layer"]["w"]
+    assert np.max(np.abs((w - w2)[changed])) <= np.abs(w[changed]).max() / 127.0 + 1e-6
+
+
+def test_delta_bfloat16_roundtrip():
+    base = {"w": jnp.asarray(np.linspace(-1, 1, 32), jnp.bfloat16)}
+    new = {"w": np.asarray(base["w"]).copy()}
+    new["w"][3] = np.float32(0.625)  # exactly representable in bfloat16
+    u = NodeUpdate(new, num_examples=1, node_id="b", counter=1)
+    u2 = deserialize_update_delta(serialize_update_delta(u, base, "h"), base)
+    assert u2.params["w"].dtype == jnp.bfloat16
+    assert np.array_equal(np.asarray(u2.params["w"], np.float32),
+                          np.asarray(new["w"], np.float32))
+
+
+# --- CachingFolder ----------------------------------------------------------
+
+
+@pytest.mark.parametrize("inner_factory", ["memory", "disk"])
+def test_caching_folder_hits_and_invalidation(inner_factory, tmp_path):
+    inner = InMemoryFolder() if inner_factory == "memory" else DiskFolder(str(tmp_path))
+    folder = CachingFolder(inner)
+    folder.put("k", b"abc")
+    assert folder.get("k") == b"abc"          # first read populates the cache
+    assert folder.misses == 1 and folder.bytes_fetched == 3
+    assert folder.get("k") == b"abc"          # second read is a hit
+    assert folder.hits == 1 and folder.bytes_saved == 3
+    inner.put("k", b"defg")                    # out-of-band overwrite
+    assert folder.get("k") == b"defg"          # version changed → refetch
+    assert folder.bytes_fetched == 7
+    assert folder.get("k") == b"defg"          # now cached again
+    assert folder.hits == 2
+    folder.put("k", b"hi")                     # own put invalidates, not caches
+    assert folder.get("k") == b"hi"
+    assert folder.bytes_fetched == 9
+    folder.delete("k")
+    assert folder.get("k") is None
+
+
+def test_caching_folder_second_reader_sees_writes(tmp_path):
+    writer = DiskFolder(str(tmp_path))
+    reader = CachingFolder(DiskFolder(str(tmp_path)))
+    writer.put("x", b"one")
+    assert reader.get("x") == b"one"
+    writer.put("x", b"two")
+    assert reader.get("x") == b"two"  # never a stale hit
+    stats = reader.cache_stats()
+    assert stats["misses"] == 2 and stats["bytes_fetched"] == 6
+
+
+def test_make_folder_cache_prefix(tmp_path):
+    f = make_folder(f"cache+{tmp_path}/store")
+    assert isinstance(f, CachingFolder) and isinstance(f.inner, DiskFolder)
+    assert isinstance(make_folder("cache+memory://"), CachingFolder)
+
+
+# --- WeightStore delta transport --------------------------------------------
+
+
+def test_weightstore_delta_rebases_and_gcs_old_bases(tmp_path):
+    folder = DiskFolder(str(tmp_path))
+    store = WeightStore(folder, transport="delta", rebase_every=3)
+    rng = np.random.default_rng(6)
+    params = _params(rng)
+    for ctr in range(8):
+        params = _sparse_step(params, rng)
+        store.push(NodeUpdate(params, num_examples=1, node_id="n", counter=ctr))
+    base_keys = [k for k in folder.keys() if k.startswith("base/n/")]
+    assert len(base_keys) == 1  # old bases were garbage collected
+    pulled = WeightStore(folder).pull_node("n")  # a fresh reader, any transport
+    assert pulled.counter == 7
+    assert np.array_equal(pulled.params["layer"]["w"], params["layer"]["w"])
+
+
+def test_weightstore_transport_validation():
+    with pytest.raises(ValueError):
+        WeightStore(InMemoryFolder(), transport="gzip")
+    with pytest.raises(ValueError):
+        AsyncFederatedNode(store=WeightStore(InMemoryFolder()), transport="delta")
+
+
+def test_delta_base_mismatch_reports_leaf():
+    rng = np.random.default_rng(7)
+    base = _params(rng)
+    u = NodeUpdate(_sparse_step(base, rng), num_examples=1, node_id="n", counter=1)
+    blob = serialize_update_delta(u, base, "h")
+    with pytest.raises((DeltaBaseMismatch, KeyError, ValueError)):
+        deserialize_update_delta(blob, {"other": np.zeros((2,), np.float32)})
+
+
+# --- the acceptance property: bitwise-equal results, fewer bytes ------------
+
+
+def _run_federation(base_dir, transport, *, adopt, rounds=6, num_nodes=3):
+    """Deterministic sequential async federation; every node reads the shared
+    DiskFolder through its own CachingFolder (its private cache, as a real
+    client on a real mount would). Returns every aggregation result each node
+    ever produced, plus total bytes read from the folder.
+
+    ``adopt=False`` is the partial-fine-tuning regime (LoRA-style: pushed
+    params evolve by sparse local steps; the global aggregate is tracked but
+    not folded back) — the regime where delta encoding pays off. With
+    ``adopt=True`` the weighted mean perturbs every entry, deltas go dense,
+    and the store falls back to rebasing — correct, just not smaller.
+    """
+    folders = [CachingFolder(DiskFolder(base_dir)) for _ in range(num_nodes)]
+    nodes = [
+        AsyncFederatedNode(strategy=FedAvg(), shared_folder=folders[i],
+                           node_id=f"n{i}", transport=transport)
+        for i in range(num_nodes)
+    ]
+    rngs = [np.random.default_rng(100 + i) for i in range(num_nodes)]
+    params = [_params(np.random.default_rng(42)) for _ in range(num_nodes)]  # common init
+    aggregates = []
+    for _ in range(rounds):
+        for i in range(num_nodes):
+            params[i] = _sparse_step(params[i], rngs[i])
+            aggregated = nodes[i].update_parameters(params[i], num_examples=10)
+            if aggregated is not None:
+                aggregates.append(aggregated)
+                if adopt:
+                    params[i] = aggregated
+    bytes_read = sum(f.bytes_fetched for f in folders)
+    return aggregates, bytes_read
+
+
+def test_delta_cached_transport_matches_full_bitwise_with_fewer_bytes(tmp_path):
+    full_aggs, full_bytes = _run_federation(str(tmp_path / "full"), "full", adopt=False)
+    delta_aggs, delta_bytes = _run_federation(str(tmp_path / "delta"), "delta", adopt=False)
+    # identical schedule → bitwise identical aggregation results, every time
+    assert len(full_aggs) == len(delta_aggs) > 0
+    for pf, pd in zip(full_aggs, delta_aggs):
+        assert np.array_equal(pf["layer"]["w"], pd["layer"]["w"])
+        assert np.array_equal(pf["head"], pd["head"])
+    # ... while reading measurably fewer bytes from the shared folder
+    assert delta_bytes < 0.5 * full_bytes, (delta_bytes, full_bytes)
+
+
+def test_delta_transport_stays_bitwise_exact_when_aggregates_are_adopted(tmp_path):
+    """Adopting the aggregate densifies every delta (forced rebases); results
+    must still match the full-blob path bitwise."""
+    full_aggs, _ = _run_federation(str(tmp_path / "full"), "full", adopt=True, rounds=4)
+    delta_aggs, _ = _run_federation(str(tmp_path / "delta"), "delta", adopt=True, rounds=4)
+    assert len(full_aggs) == len(delta_aggs) > 0
+    for pf, pd in zip(full_aggs, delta_aggs):
+        assert np.array_equal(pf["layer"]["w"], pd["layer"]["w"])
+        assert np.array_equal(pf["head"], pd["head"])
+
+
+def test_weightstore_delta_hostile_node_ids_base_gc(tmp_path):
+    """Base GC must not cross node borders when ids contain '/'."""
+    folder = DiskFolder(str(tmp_path))
+    rng = np.random.default_rng(8)
+    params = {nid: _params(np.random.default_rng(9)) for nid in ("team", "team/alpha")}
+    store = WeightStore(folder, transport="delta", rebase_every=2)
+    for ctr in range(5):  # rebase_every=2 → multiple rebases per node
+        for nid in params:
+            params[nid] = _sparse_step(params[nid], rng)
+            store.push(NodeUpdate(params[nid], num_examples=1, node_id=nid, counter=ctr))
+    for nid in params:
+        bases = [k for k in folder.keys() if k.rpartition("/")[0] == f"base/{nid}"]
+        assert len(bases) == 1, (nid, bases)
+        pulled = WeightStore(folder).pull_node(nid)
+        assert pulled.counter == 4
+        assert np.array_equal(pulled.params["layer"]["w"], params[nid]["layer"]["w"])
+    assert sorted(store.node_ids()) == ["team", "team/alpha"]
+
+
+def test_async_skip_check_survives_delta_rebase(tmp_path):
+    """A node's own rebase writes base/<node>/<hash>; that must not defeat its
+    own state-hash skip check (the whole point of Algorithm 1's fast path)."""
+    folder = DiskFolder(str(tmp_path))
+    node = AsyncFederatedNode(strategy=FedAvg(), shared_folder=folder,
+                              node_id="solo", transport="delta")
+    node.store.rebase_every = 1  # force a rebase (base churn) on every push
+    rng = np.random.default_rng(10)
+    p = _params(rng)
+    assert node.update_parameters(p, num_examples=1) is None
+    pulls_before = node.num_pulls
+    for _ in range(3):
+        p = _sparse_step(p, rng)
+        assert node.update_parameters(p, num_examples=1) is None
+    assert node.num_pulls == pulls_before  # all skipped via the hash check
+    assert node.num_skipped_pulls >= 3
+
+
+def test_diskfolder_state_hash_changes_on_same_size_rewrite(tmp_path):
+    """Same content, same size, potentially same mtime tick — the hash must
+    still move (fresh-inode hardening), or peers' updates get skipped."""
+    folder = DiskFolder(str(tmp_path))
+    folder.put("latest/a", b"same-bytes")
+    h1 = folder.state_hash()
+    folder.put("latest/a", b"same-bytes")
+    assert folder.state_hash() != h1

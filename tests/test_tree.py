@@ -1,7 +1,7 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core.tree import (
     tree_allclose,
