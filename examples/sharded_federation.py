@@ -1,0 +1,157 @@
+"""Sharded gossip federation — O(group) scans instead of O(fleet).
+
+The fleet is partitioned into node-groups via a ``shard<G>+<uri>`` store URI;
+each group owns its own folder, and cross-group information travels as gossip
+summaries (one aggregate blob per group, forwarded along a ring). A node's
+per-step ``state_hash``/``pull`` touch only its home group's folder, so scan
+cost is flat in fleet size at fixed group size.
+
+    PYTHONPATH=src python examples/sharded_federation.py
+    PYTHONPATH=src python examples/sharded_federation.py --nodes 24 --groups 6
+    PYTHONPATH=src python examples/sharded_federation.py --processes
+
+The default run federates threaded clients over a sharded temp-dir store and
+then prints a flat-vs-sharded scan-cost comparison on simulated fleets.
+"""
+import argparse
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import (
+    AsyncFederatedNode,
+    InMemoryFolder,
+    NodeUpdate,
+    ShardedFolders,
+    ShardedWeightStore,
+    WeightStore,
+    balanced_groups,
+    make_folder,
+    run_threaded,
+)
+from repro.core.gossip import GROUP_PEER_PREFIX
+from repro.core.strategies import FedAvg
+
+
+def threaded_demo(num_nodes: int, num_groups: int, epochs: int) -> None:
+    shared_dir = tempfile.mkdtemp(prefix="flwr_serverless_shard_")
+    uri = f"shard{num_groups}+{shared_dir}"
+    print(f"weight store: {uri}")
+    node_ids = [f"client{i}" for i in range(num_nodes)]
+    mapping = balanced_groups(node_ids, num_groups)  # explicit: no empty group
+    targets = {nid: float(i) for i, nid in enumerate(node_ids)}
+    finals = {}
+
+    def client(nid):
+        store = ShardedWeightStore(make_folder(uri), group_of=mapping)
+        node = AsyncFederatedNode(strategy=FedAvg(), store=store, node_id=nid)
+        w = np.zeros((8,), np.float32)
+        pseudo_peers = set()
+        for _ in range(epochs):
+            w = w + 0.3 * (np.float32(targets[nid]) - w)  # local step
+            aggregated = node.update_parameters({"w": w}, num_examples=10)
+            if aggregated is not None:
+                w = aggregated["w"]
+            pseudo_peers.update(
+                u.node_id for u in store.pull(exclude=nid)
+                if u.node_id.startswith(GROUP_PEER_PREFIX)
+            )
+            time.sleep(0.02)
+        finals[nid] = (float(w.mean()), sorted(pseudo_peers))
+
+    results = run_threaded([lambda n=n: client(n) for n in node_ids])
+    errors = [r for r in results if r.error is not None]
+    assert not errors, [r.traceback for r in errors]
+    values = [v for v, _ in finals.values()]
+    print(f"{num_nodes} clients in {num_groups} groups, {epochs} epochs:")
+    for nid in node_ids[:4]:
+        v, peers = finals[nid]
+        print(f"  {nid} (group {mapping[nid]}): final={v:.2f} gossip peers={peers}")
+    print(f"  ... consensus spread {max(values) - min(values):.2f} "
+          f"(targets spanned {max(targets.values()) - min(targets.values()):.1f})")
+
+
+def scan_cost_demo() -> None:
+    """Per-step scan cost (state_hash + pull): flat store vs sharded store."""
+    params = {"w": np.zeros((16,), np.float32)}
+    group_size = 50
+    print("\nper-step scan cost, group size fixed at "
+          f"{group_size} (simulated deposits, memory backend):")
+    for fleet in (200, 2000):
+        num_groups = fleet // group_size
+        flat = WeightStore(InMemoryFolder(), decode_cache_entries=fleet)
+        sharded = ShardedWeightStore(
+            ShardedFolders(num_groups, factory=lambda g: InMemoryFolder()),
+            group_of=lambda nid: int(nid[1:]) % num_groups,
+        )
+        for store in (flat, sharded):
+            for i in range(fleet):
+                store.push(NodeUpdate(params, num_examples=1, node_id=f"n{i}"))
+
+        def step_cost(store):
+            store.state_hash(exclude_node="n0"); store.pull(exclude="n0")  # warm
+            t0 = time.time()
+            for _ in range(3):
+                store.state_hash(exclude_node="n0")
+                store.pull(exclude="n0")
+            return (time.time() - t0) / 3
+
+        print(f"  fleet {fleet:5d}: flat {step_cost(flat) * 1e3:7.2f} ms   "
+              f"sharded({num_groups} groups) {step_cost(sharded) * 1e3:7.2f} ms")
+
+
+def _proc_client(shared_dir, nid, mapping, num_groups, target, epochs):
+    """Module-level so the spawn start method can pickle it by name."""
+    store = ShardedWeightStore(f"shard{num_groups}+{shared_dir}", group_of=mapping)
+    node = AsyncFederatedNode(strategy=FedAvg(), store=store, node_id=nid)
+    w = np.zeros((8,), np.float32)
+    peers = set()
+    for _ in range(epochs):
+        w = w + 0.3 * (np.float32(target) - w)
+        aggregated = node.update_parameters({"w": w}, num_examples=10)
+        if aggregated is not None:
+            w = aggregated["w"]
+        peers.update(u.node_id for u in store.pull(exclude=nid))
+        time.sleep(0.05)
+    return {"final": float(w.mean()), "peers": sorted(peers)}
+
+
+def process_demo(num_nodes: int, num_groups: int, epochs: int) -> None:
+    """The same federation across real OS processes (see
+    tests/test_multiprocess.py for the asserted version)."""
+    from repro.core import run_multiprocess
+
+    shared_dir = tempfile.mkdtemp(prefix="flwr_serverless_shard_mp_")
+    node_ids = [f"n{i}" for i in range(num_nodes)]
+    mapping = balanced_groups(node_ids, num_groups)
+    clients = [
+        (_proc_client, (shared_dir, nid, mapping, num_groups, float(i), epochs))
+        for i, nid in enumerate(node_ids)
+    ]
+    results = run_multiprocess(clients, names=node_ids, join_timeout=300.0)
+    for r in results:
+        if r.error is None:
+            print(f"  {r.node_id}: final={r.result['final']:.2f} "
+                  f"peers={r.result['peers']}")
+        else:
+            print(f"  {r.node_id}: {r.error}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--nodes", type=int, default=12)
+    ap.add_argument("--groups", type=int, default=3)
+    ap.add_argument("--epochs", type=int, default=8)
+    ap.add_argument("--processes", action="store_true",
+                    help="run clients as real OS processes instead of threads")
+    args = ap.parse_args(argv)
+    if args.processes:
+        process_demo(args.nodes, args.groups, args.epochs)
+    else:
+        threaded_demo(args.nodes, args.groups, args.epochs)
+        scan_cost_demo()
+
+
+if __name__ == "__main__":
+    main()

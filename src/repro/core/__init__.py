@@ -10,13 +10,22 @@ Public API mirrors the paper's usage snippet:
     trainer.fit(..., callbacks=[callback])
 """
 from .callback import Callback, FederatedCallback
+from .gossip import (
+    ShardedFolders,
+    ShardedWeightStore,
+    balanced_groups,
+    default_group_of,
+)
 from .node import AsyncFederatedNode, FederationTimeout, SyncFederatedNode
 from .partition import partition_dataset, partition_sequence_dataset, skewed_assignment
 from .serialize import (
+    GroupSummary,
     NodeUpdate,
+    deserialize_group_summary,
     deserialize_update,
     deserialize_update_delta,
     peek_meta,
+    serialize_group_summary,
     serialize_update,
     serialize_update_delta,
 )
@@ -59,11 +68,18 @@ __all__ = [
     "Callback",
     "FederatedCallback",
     "NodeUpdate",
+    "GroupSummary",
     "serialize_update",
     "deserialize_update",
     "serialize_update_delta",
     "deserialize_update_delta",
+    "serialize_group_summary",
+    "deserialize_group_summary",
     "peek_meta",
+    "ShardedFolders",
+    "ShardedWeightStore",
+    "default_group_of",
+    "balanced_groups",
     "SharedFolder",
     "InMemoryFolder",
     "DiskFolder",

@@ -1,0 +1,628 @@
+"""Sharded gossip weight store — O(group) federation for 10⁴-node fleets.
+
+The flat ``WeightStore`` scans every fleet member on each ``state_hash`` /
+``pull``, so the store itself becomes the bottleneck long before the ROADMAP's
+"millions of users": per-step cost is O(fleet). This module partitions the
+fleet into *node groups*, each owning its own ``SharedFolder`` (any existing
+backend — memory, disk, s3, cache-wrapped), so a node's per-step ``push`` /
+``state_hash`` / ``pull`` touch only its home group's folder: O(group).
+
+Cross-group information flows by gossip instead of scanning:
+
+* Every push refreshes the pushing node's *group summary* — the
+  example-weighted mean of the group's latest params, carrying the total
+  ``num_examples`` behind it and a version vector (node → counter). The
+  summary is deposited under a versioned key
+  ``summary/<origin>/<version>-<content hash>`` in the group's own folder;
+  the zero-padded version scalar (sum of counters + 1) makes freshness
+  comparable from a key listing alone — no blob reads — and the hash makes
+  version-scalar ties between racing writers resolve deterministically.
+
+* Groups form a ring. After pushing, a node *forwards* every summary its home
+  folder holds (its own group's and any it previously received) to the next
+  ``gossip_fanout`` **populated** groups on the ring, skipping-but-seeding
+  empty groups so holes in a hash-assigned fleet never partition the ring.
+  A forward is a cheap key-listing comparison plus a blob copy only when the
+  target's copy is missing or older — steady state writes nothing.
+
+* ``pull`` returns the home group's real peer updates plus a bounded sample
+  of foreign-group summaries as pseudo-peers (node id ``group:<origin>``,
+  weighted by the group's total example count), so the existing client-side
+  strategies fold remote groups into aggregation unchanged.
+
+An update therefore propagates fleet-wide within at most one populated-group
+hop per gossip round: every group hears about it within ``num_groups`` rounds
+(the ring diameter) — the property test in ``tests/test_gossip.py`` proves the
+bound under adversarial push orderings.
+
+Consistency model: the summary layer is eventually consistent. Two same-group
+writers racing a refresh can leave one contribution out of the summary until
+either pushes again (last-writer-wins per version scalar); real ``latest/``
+deposits are never involved in the race, so within-group federation stays
+exactly as strong as the flat store.
+
+``ShardedWeightStore`` presents the ``WeightStore`` interface, so
+``AsyncFederatedNode`` / ``SyncFederatedNode`` work unchanged on top;
+``make_folder("shard<G>+<uri>")`` routes URIs here (see ``ShardedFolders``).
+"""
+from __future__ import annotations
+
+import hashlib
+import re
+import threading
+from typing import Callable, Iterable, Mapping, Sequence
+
+from .serialize import (
+    GroupSummary,
+    NodeUpdate,
+    content_hash,
+    deserialize_group_summary,
+    serialize_group_summary,
+)
+from .store import TRANSPORTS, SharedFolder, WeightStore, _LruCache
+from .tree import tree_weighted_mean
+
+_SUMMARY_PREFIX = "summary/"
+GROUP_PEER_PREFIX = "group:"  # node_id prefix of summary pseudo-peers in pull()
+
+SHARD_URI_RE = re.compile(r"^shard(\d+)\+(.+)$", re.DOTALL)
+
+
+# --------------------------------------------------------------------------
+# Group assignment
+# --------------------------------------------------------------------------
+
+
+def default_group_of(node_id: str, num_groups: int) -> int:
+    """Stable hash assignment: the same node id maps to the same group on any
+    machine, any process, any fleet composition — a node can compute its home
+    group knowing nothing but its own id."""
+    if num_groups < 1:
+        raise ValueError(f"num_groups must be >= 1, got {num_groups}")
+    h = int.from_bytes(hashlib.sha256(node_id.encode()).digest()[:8], "big")
+    return h % num_groups
+
+
+def balanced_groups(node_ids: Iterable[str], num_groups: int) -> dict[str, int]:
+    """Explicit balanced assignment for a *known* fleet: deterministic in the
+    node **set** (any iteration order), group sizes differ by at most one, so
+    no group is empty once ``len(node_ids) >= num_groups``. Use as the
+    ``group_of`` override when the fleet roster is known up front; the default
+    hash assignment needs no roster but only balances in expectation."""
+    if num_groups < 1:
+        raise ValueError(f"num_groups must be >= 1, got {num_groups}")
+    ordered = sorted(set(node_ids), key=lambda n: (hashlib.sha256(n.encode()).hexdigest(), n))
+    return {n: i % num_groups for i, n in enumerate(ordered)}
+
+
+# --------------------------------------------------------------------------
+# Per-group folder routing
+# --------------------------------------------------------------------------
+
+
+def _append_group(uri: str, group: int) -> str:
+    """Derive group ``group``'s folder URI from the base URI, preserving any
+    ``cache+`` wrapping ('shard4+cache+/mnt/x' caches each group folder)."""
+    if uri.startswith("cache+"):
+        return "cache+" + _append_group(uri[len("cache+"):], group)
+    if uri.startswith("memory://"):
+        # memory:// mints a fresh in-process folder per make_folder call;
+        # ShardedFolders caches one instance per group, which is the identity
+        # that matters.
+        return "memory://"
+    return uri.rstrip("/") + f"/group{group:04d}"
+
+
+class ShardedFolders:
+    """Handle to a family of per-group folders (lazily created, cached).
+
+    Built from a base URI (``make_folder("shard<G>+<uri>")`` returns one) or
+    an explicit ``factory``. Not itself a ``SharedFolder`` — it is the routing
+    table a ``ShardedWeightStore`` shards over, and ``_BaseNode`` accepts it
+    wherever ``shared_folder=`` is taken.
+    """
+
+    def __init__(
+        self,
+        num_groups: int,
+        uri: str | None = None,
+        *,
+        factory: Callable[[int], SharedFolder] | None = None,
+    ):
+        if num_groups < 1:
+            raise ValueError(f"num_groups must be >= 1, got {num_groups}")
+        if (uri is None) == (factory is None):
+            raise ValueError("pass exactly one of uri= or factory=")
+        self.num_groups = num_groups
+        self.uri = uri
+        self._factory = factory
+        self._folders: dict[int, SharedFolder] = {}
+        self._lock = threading.Lock()
+
+    @classmethod
+    def from_uri(cls, uri: str) -> "ShardedFolders":
+        m = SHARD_URI_RE.match(uri)
+        if not m:
+            raise ValueError(f"not a shard URI: {uri!r} (expected 'shard<G>+<uri>')")
+        return cls(int(m.group(1)), m.group(2))
+
+    def group_uri(self, group: int) -> str | None:
+        if self.uri is None:
+            return None
+        return _append_group(self.uri, group)
+
+    def group_folder(self, group: int) -> SharedFolder:
+        if not 0 <= group < self.num_groups:
+            raise ValueError(f"group {group} out of range [0, {self.num_groups})")
+        with self._lock:
+            folder = self._folders.get(group)
+            if folder is None:
+                if self._factory is not None:
+                    folder = self._factory(group)
+                else:
+                    from .store import make_folder  # lazy: store routes shard URIs here
+
+                    folder = make_folder(self.group_uri(group))
+                self._folders[group] = folder
+            return folder
+
+    @classmethod
+    def from_folders(cls, folders: Sequence[SharedFolder]) -> "ShardedFolders":
+        folders = list(folders)
+        return cls(len(folders), factory=lambda g: folders[g])
+
+    def __len__(self) -> int:
+        return self.num_groups
+
+    def __repr__(self) -> str:
+        src = self.uri if self.uri is not None else "<factory>"
+        return f"ShardedFolders(num_groups={self.num_groups}, uri={src!r})"
+
+
+# --------------------------------------------------------------------------
+# The sharded store
+# --------------------------------------------------------------------------
+
+
+def _summary_key(origin: int, version: int, blob_hash: str) -> str:
+    """``summary/<origin>/<version>-<hash>``: the zero-padded version makes
+    freshness a plain string comparison from a key listing, and the content
+    hash makes the key name its exact bytes — two racing refreshes that land
+    on the same version scalar produce *distinct* keys, every folder picks the
+    same (lexically largest) winner, and decoded-summary caches keyed on the
+    key can never alias different params."""
+    return f"{_SUMMARY_PREFIX}{origin:04d}/{version:012d}-{blob_hash}"
+
+
+def _parse_summary_key(key: str) -> tuple[str, str] | None:
+    """-> (zero-padded origin string, 'version-hash'). Both components stay
+    strings on the scan path — zero-padding makes lexical order numeric, and
+    skipping int conversions matters when every pull re-indexes every summary
+    key; the composite version orders by scalar first, content hash as the
+    deterministic tie-break."""
+    if not key.startswith(_SUMMARY_PREFIX):
+        return None
+    origin, _, version = key[len(_SUMMARY_PREFIX):].partition("/")
+    if not (origin.isdigit() and version):
+        return None
+    return origin, version
+
+
+def _version_scalar(composite: str) -> int:
+    return int(composite.partition("-")[0])
+
+
+class ShardedWeightStore:
+    """``WeightStore``-compatible facade over per-group stores + gossip.
+
+    ``folders`` is a ``ShardedFolders`` handle, a ``shard<G>+<uri>`` string,
+    or an explicit sequence of ``SharedFolder`` (one per group).
+
+    ``group_of`` overrides the stable-hash assignment: a mapping
+    (node → group, e.g. from ``balanced_groups``) or a callable
+    ``node_id -> group``; unmapped nodes fall back to the hash.
+
+    ``gossip_fanout`` is how many *populated* downstream ring neighbors each
+    push forwards summaries to; ``summary_sample`` bounds how many foreign
+    summaries one ``pull`` folds in (rotating deterministically through all
+    origins across successive pulls, so every group is eventually sampled).
+
+    Operations that identify the acting node (``push`` via ``update.node_id``,
+    ``state_hash(exclude_node=...)``, ``pull(exclude=...)``,
+    ``pull_round(..., exclude=...)``) route to that node's home group and stay
+    O(group). Fleet-wide calls with no node context (``node_ids()``,
+    ``pull()`` with no exclude, ``clear()``) scan every group — diagnostics,
+    not the hot path.
+    """
+
+    def __init__(
+        self,
+        folders: "ShardedFolders | str | Sequence[SharedFolder]",
+        *,
+        group_of: Mapping[str, int] | Callable[[str], int] | None = None,
+        gossip_fanout: int = 1,
+        summary_sample: int = 16,
+        transport: str | None = None,
+        keep_history: bool = False,
+        rebase_every: int = 10,
+        delta_density_threshold: float = 0.5,
+        decode_cache_entries: int = 256,
+    ):
+        if isinstance(folders, str):
+            folders = ShardedFolders.from_uri(folders)
+        elif not isinstance(folders, ShardedFolders):
+            folders = ShardedFolders.from_folders(folders)
+        self.folders = folders
+        self.num_groups = folders.num_groups
+        if transport is None:
+            transport = "full"
+        if transport not in TRANSPORTS:
+            raise ValueError(f"unknown transport {transport!r}; options: {TRANSPORTS}")
+        self.transport = transport
+        if gossip_fanout < 1:
+            raise ValueError(f"gossip_fanout must be >= 1, got {gossip_fanout}")
+        self.gossip_fanout = gossip_fanout
+        if summary_sample < 1:
+            raise ValueError(f"summary_sample must be >= 1, got {summary_sample}")
+        self.summary_sample = summary_sample
+        self._group_of = group_of
+        self._keep_history = keep_history
+        self._store_kwargs = dict(
+            rebase_every=rebase_every,
+            delta_density_threshold=delta_density_threshold,
+            decode_cache_entries=decode_cache_entries,
+        )
+        self._stores: dict[int, WeightStore] = {}
+        self._lock = threading.Lock()
+        self._push_seq = 0  # paces the empty-group rechecks in _forward
+        self._assumed_empty: set[int] = set()  # groups last seen memberless
+        # Decoded-summary cache. A summary key names its exact content
+        # (origin + version + content hash; forwarded copies are
+        # byte-identical), so a decoded pseudo-update can be reused across
+        # pulls AND across group folders with no version-token dance — the key
+        # is the identity. Held one-per-origin plus rotation slack: a smaller
+        # bound would evict inside the rotating sample window and re-pay an
+        # O(num_groups) decode stream every cycle.
+        self._summary_cache = _LruCache(
+            max(4 * max(summary_sample, 16), self.num_groups)
+        )
+        # Rotation bookkeeping per pulling node: its own window counter (a
+        # store-global counter would stride past some origins forever when the
+        # instance is shared by several nodes), which (origin, version-hash)
+        # pairs its pulls have already been handed, and whether unseen pairs
+        # remain (drives the state-hash nudge that keeps rotation alive when
+        # the folder itself is quiet). Keyed per node, so concurrent pulls by
+        # different nodes touch different entries.
+        self._window: dict[str, int] = {}
+        self._served: dict[str, set] = {}
+        self._rotation_pending: dict[str, bool] = {}
+        # instrumentation
+        self.num_summary_refreshes = 0
+        self.num_summary_forwards = 0
+
+    # -- routing -------------------------------------------------------------
+    def group_of(self, node_id: str) -> int:
+        if self._group_of is not None:
+            if callable(self._group_of):
+                g = int(self._group_of(node_id))
+                if not 0 <= g < self.num_groups:
+                    raise ValueError(f"group_of({node_id!r}) = {g} out of range")
+                return g
+            g = self._group_of.get(node_id)
+            if g is not None:
+                return int(g)
+        return default_group_of(node_id, self.num_groups)
+
+    def _store(self, group: int) -> WeightStore:
+        with self._lock:
+            store = self._stores.get(group)
+            if store is None:
+                store = WeightStore(
+                    self.folders.group_folder(group),
+                    transport=self.transport,
+                    keep_history=self._keep_history,
+                    **self._store_kwargs,
+                )
+                self._stores[group] = store
+            return store
+
+    def _folder(self, group: int) -> SharedFolder:
+        return self._store(group).folder
+
+    # keep_history must fan out to every per-group store, present and future
+    # (SyncFederatedNode flips it post-construction).
+    @property
+    def keep_history(self) -> bool:
+        return self._keep_history
+
+    @keep_history.setter
+    def keep_history(self, value: bool) -> None:
+        self._keep_history = value
+        with self._lock:
+            stores = list(self._stores.values())
+        for store in stores:
+            store.keep_history = value
+
+    # -- summary plumbing -----------------------------------------------------
+    @staticmethod
+    def _summary_index(keys: Iterable[str]) -> dict[str, list]:
+        """zero-padded origin string -> [freshest 'version-hash', its key,
+        stale keys], from a key listing alone — freshness comparisons AND
+        garbage collection need no blob reads and no relisting (stale keys a
+        racing writer adds after this listing are caught by the next pass)."""
+        index: dict[str, list] = {}
+        for key in keys:
+            parsed = _parse_summary_key(key)
+            if parsed is None:
+                continue
+            origin, version = parsed
+            have = index.get(origin)
+            if have is None:
+                index[origin] = [version, key, []]
+            elif version > have[0]:
+                have[2].append(have[1])
+                have[0], have[1] = version, key
+            else:
+                have[2].append(key)
+        return index
+
+    @staticmethod
+    def _replace_summaries(folder: SharedFolder, stale: list | None) -> None:
+        """GC an origin's superseded summary keys after a fresher put."""
+        if stale is None:
+            return
+        for key in stale[2]:
+            folder.delete(key)
+        folder.delete(stale[1])
+
+    def load_summary(self, group: int, origin: int) -> GroupSummary | None:
+        """Freshest readable summary of ``origin`` held in ``group``'s folder
+        (diagnostics + tests; pull() uses the same resolution)."""
+        folder = self._folder(group)
+        entry = self._summary_index(folder.keys()).get(f"{origin:04d}")
+        if entry is None:
+            return None
+        _vtag, freshest, stale = entry
+        # freshest first, stale fallbacks next — tolerates a racing GC
+        for key in [freshest, *sorted(stale, reverse=True)]:
+            blob = folder.get(key)
+            if blob is not None:
+                try:
+                    return deserialize_group_summary(blob)
+                except (ValueError, KeyError):
+                    continue
+        return None
+
+    def _refresh_summary(self, group: int) -> None:
+        """Recompute ``group``'s own summary from its latest set and deposit it
+        if fresher than what the folder already holds. Every pushing node runs
+        this — the 'election' is simply that a stale folder gets refreshed by
+        whichever member pushes next, and version-ordered keys make the race
+        last-writer-wins without blob reads."""
+        store = self._store(group)
+        updates = store.pull()
+        if not updates:
+            return
+        vv = {u.node_id: int(u.counter) for u in updates}
+        version = sum(c + 1 for c in vv.values())
+        folder = store.folder
+        keys = folder.keys()
+        current = self._summary_index(keys).get(f"{group:04d}")
+        if current is not None and _version_scalar(current[0]) >= version:
+            return
+        weights = [max(1, u.num_examples) for u in updates]
+        summary = GroupSummary(
+            params=tree_weighted_mean([u.params for u in updates], weights),
+            num_examples=sum(weights),
+            origin=group,
+            version=version,
+            version_vector=vv,
+            timestamp=max(u.timestamp for u in updates),
+        )
+        blob = serialize_group_summary(summary)
+        folder.put(_summary_key(group, version, content_hash(blob)), blob)
+        self._replace_summaries(folder, current)
+        self.num_summary_refreshes += 1
+
+    def _forward(self, group: int) -> None:
+        """Forward every summary ``group``'s folder holds to the next
+        ``gossip_fanout`` populated groups on the ring. Empty groups en route
+        don't count toward the fanout — so hash-assignment holes never cut the
+        ring — and are *seeded once* per origin rather than kept fresh (their
+        folder is read only by a node that later joins, whose own pushes then
+        pull the group into the live ring); between periodic rechecks they
+        don't even cost a listing. A populated target that is already as
+        fresh costs one key listing, no writes."""
+        if self.num_groups <= 1:
+            return
+        folder = self._folder(group)
+        held = self._summary_index(folder.keys())
+        if not held:
+            return
+        blobs: dict[str, bytes | None] = {}  # one home-folder read per origin,
+        relayed = 0                          # however many targets need it
+        # every 16th push, re-list groups assumed empty: one that gained its
+        # first member starts receiving forwards within bounded delay
+        recheck = self._push_seq % 16 == 0
+        for step in range(1, self.num_groups):
+            target = (group + step) % self.num_groups
+            if target in self._assumed_empty and not recheck:
+                continue
+            target_folder = self._folder(target)
+            target_keys = target_folder.keys()
+            target_index = self._summary_index(target_keys)
+            populated = any(k.startswith("latest/") for k in target_keys)
+            for origin, (vtag, key, _stale) in held.items():
+                have = target_index.get(origin)
+                if have is not None and (not populated or have[0] >= vtag):
+                    continue  # empty targets: seed once, don't keep fresh
+                if key not in blobs:
+                    blobs[key] = folder.get(key)
+                blob = blobs[key]
+                if blob is None:  # GC'd under us — a racing writer is fresher
+                    continue
+                target_folder.put(key, blob)
+                self._replace_summaries(target_folder, have)
+                self.num_summary_forwards += 1
+            if populated:
+                self._assumed_empty.discard(target)
+                relayed += 1
+                if relayed >= self.gossip_fanout:
+                    break
+            else:
+                self._assumed_empty.add(target)
+
+    def _peer_summaries(self, group: int, exclude: str) -> list[NodeUpdate]:
+        """Foreign-group summaries in ``group``'s folder as pseudo-peer
+        updates, bounded to ``summary_sample`` per pull (rotating through all
+        origins across successive pulls). Tracks which (origin, version)
+        pairs ``exclude``'s pulls have been handed so ``state_hash`` can keep
+        nudging the node until the rotation has covered everything."""
+        folder = self._folder(group)
+        index = self._summary_index(folder.keys())
+        index.pop(f"{group:04d}", None)  # own group's members arrive as real updates
+        origins = sorted(index)  # zero-padded strings: lexical order IS numeric
+        current = {(o, index[o][0]) for o in origins}
+        served = self._served.get(exclude, set()) & current  # drop superseded pairs
+        seq = self._window.get(exclude, 0)
+        self._window[exclude] = seq + 1
+        window = origins
+        if self.summary_sample and len(origins) > self.summary_sample:
+            # Tile the origin space per pulling node: ITS successive pulls see
+            # disjoint sample windows, so all groups are covered in
+            # ceil(n/sample) of its pulls and the decoded-summary cache
+            # reaches steady state just as fast.
+            start = (seq * self.summary_sample) % len(origins)
+            window = (origins + origins)[start:start + self.summary_sample]
+        out = []
+        for origin in window:
+            vtag, key, _stale = index[origin]
+            served.add((origin, vtag))  # handed to this pull, readable or not
+            cached = self._summary_cache.get(key)  # refreshes LRU position
+            if cached is not None:
+                out.append(cached)
+                continue
+            blob = folder.get(key)
+            if blob is None:
+                continue
+            try:
+                summary = deserialize_group_summary(blob)
+            except (ValueError, KeyError):
+                continue
+            update = NodeUpdate(
+                params=summary.params,
+                num_examples=summary.num_examples,
+                node_id=f"{GROUP_PEER_PREFIX}{summary.origin}",
+                # Node-counter units (freshest member's counter), NOT the
+                # version scalar: staleness-aware strategies (FedAsync)
+                # compare this against their own epoch counter.
+                counter=max(summary.version_vector.values(), default=0),
+                timestamp=summary.timestamp,
+                metrics={"summary_of": summary.origin,
+                         "summary_version": summary.version},
+            )
+            self._summary_cache.put(key, update)
+            out.append(update)
+        self._served[exclude] = served
+        self._rotation_pending[exclude] = len(served) < len(current)
+        return out
+
+    # -- the WeightStore interface -------------------------------------------
+    def push(self, update: NodeUpdate) -> None:
+        self._push_seq += 1
+        group = self.group_of(update.node_id)
+        # this push populates ``group`` — never skip it as an empty hole again
+        # (an instance shared by many nodes learns this for every group it
+        # routes; per-node instances rely on the periodic recheck instead)
+        self._assumed_empty.discard(group)
+        self._store(group).push(update)
+        self._refresh_summary(group)
+        self._forward(group)
+
+    def state_hash(self, exclude_node: str | None = None) -> str:
+        """O(group-folder keys): only the caller's home folder is hashed. The
+        caller's own deposits AND its own group's summary (which its push just
+        refreshed) are excluded, so Algorithm 1's skip check survives; foreign
+        summaries forwarded in by upstream groups are included — their arrival
+        is precisely the cross-group change a node must react to."""
+        if exclude_node is None:
+            h = hashlib.sha256()
+            for g in range(self.num_groups):
+                h.update(self._folder(g).state_hash().encode())
+            return h.hexdigest()[:16]
+        group = self.group_of(exclude_node)
+        exclude = (
+            f"latest/{exclude_node}",
+            f"base/{exclude_node}/",
+            f"history/{exclude_node}/",
+            f"{_SUMMARY_PREFIX}{group:04d}/",
+        )
+        base = self._folder(group).state_hash(exclude=exclude)
+        if self._rotation_pending.get(exclude_node):
+            # The folder may be quiet, but this node's pulls have not yet
+            # been handed every foreign summary (origins > summary_sample):
+            # without this nudge the node's skip check would freeze the
+            # rotation and some groups would never be folded in. Mixing in
+            # the node's own window counter keeps the hash moving until
+            # coverage is complete, then it settles back to the folder hash.
+            seq = self._window.get(exclude_node, 0)
+            return hashlib.sha256(
+                f"{base}:rotation:{seq}".encode()
+            ).hexdigest()[:16]
+        return base
+
+    def node_ids(self) -> list[str]:
+        out: set[str] = set()
+        for g in range(self.num_groups):
+            out.update(self._store(g).node_ids())
+        return sorted(out)
+
+    def pull(self, exclude: str | None = None) -> list[NodeUpdate]:
+        """With ``exclude`` (the caller): home-group peers as real updates plus
+        a bounded sample of foreign-group summaries as pseudo-peers. Without:
+        a fleet-wide scan of real updates (no summaries — they would double
+        count), for diagnostics."""
+        if exclude is None:
+            out = []
+            for g in range(self.num_groups):
+                out.extend(self._store(g).pull())
+            return out
+        group = self.group_of(exclude)
+        return self._store(group).pull(exclude=exclude) + self._peer_summaries(group, exclude)
+
+    def pull_node(self, node_id: str) -> NodeUpdate | None:
+        return self._store(self.group_of(node_id)).pull_node(node_id)
+
+    def pull_round(self, counter: int, exclude: str | None = None) -> list[NodeUpdate]:
+        """Sync-mode barrier set. With ``exclude`` this is the caller's home
+        group only: synchronous federation is per-group under sharding (set
+        ``SyncFederatedNode(num_nodes=<group size>)``); cross-group state still
+        arrives via async gossip summaries on ``pull``."""
+        if exclude is None:
+            out = []
+            for g in range(self.num_groups):
+                out.extend(self._store(g).pull_round(counter))
+            return out
+        return self._store(self.group_of(exclude)).pull_round(counter, exclude=exclude)
+
+    def clear(self) -> None:
+        for g in range(self.num_groups):
+            self._store(g).clear()
+        # Version scalars restart after a clear, so cached decodes and the
+        # populated/seeded/served memos are all invalid — drop every bit of
+        # derived state along with the blobs.
+        self._summary_cache.clear()
+        self._assumed_empty.clear()
+        self._window.clear()
+        self._served.clear()
+        self._rotation_pending.clear()
+
+    def cache_stats(self) -> dict[str, int]:
+        """Aggregate decode-cache counters across the per-group stores."""
+        hits = misses = 0
+        with self._lock:
+            stores = list(self._stores.values())
+        for store in stores:
+            hits += store.decode_hits
+            misses += store.decode_misses
+        return {"decode_hits": hits, "decode_misses": misses}

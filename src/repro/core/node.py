@@ -15,8 +15,10 @@ from __future__ import annotations
 
 import time
 import uuid
+import warnings
 from typing import Callable
 
+from .gossip import ShardedFolders, ShardedWeightStore
 from .serialize import NodeUpdate
 from .store import SharedFolder, WeightStore
 from .strategies import FedAvg, Strategy
@@ -32,16 +34,21 @@ class _BaseNode:
         self,
         *,
         strategy: Strategy | None = None,
-        shared_folder: SharedFolder | None = None,
-        store: WeightStore | None = None,
+        shared_folder: SharedFolder | ShardedFolders | None = None,
+        store: WeightStore | ShardedWeightStore | None = None,
         node_id: str | None = None,
         transport: str | None = None,
+        resume: bool = True,
         clock: Callable[[], float] = time.monotonic,
     ):
+        self._owns_store = store is None
         if store is None:
             if shared_folder is None:
                 raise ValueError("need shared_folder or store")
-            store = WeightStore(shared_folder, transport=transport)
+            if isinstance(shared_folder, ShardedFolders):
+                store = ShardedWeightStore(shared_folder, transport=transport)
+            else:
+                store = WeightStore(shared_folder, transport=transport)
         elif transport is not None and transport != store.transport:
             raise ValueError(
                 f"store already configured with transport {store.transport!r}; "
@@ -53,6 +60,18 @@ class _BaseNode:
         self.clock = clock
         self.counter = 0  # local epoch counter; there is no global round
         self._last_state_hash: str | None = None
+        # Restart/recovery (read-your-own-writes bootstrap): a node that comes
+        # back under an id it deposited under before — a SIGKILL'd client
+        # restarting — resumes its counter after its own ``latest/`` blob, and
+        # exposes that blob so the caller can restore params instead of
+        # restarting training from scratch. A fresh (generated) id has nothing
+        # to recover, so only explicit ids pay the one lookup.
+        self.resumed: NodeUpdate | None = None
+        if resume and node_id is not None:
+            previous = store.pull_node(node_id)
+            if previous is not None:
+                self.counter = previous.counter + 1
+                self.resumed = previous
         # instrumentation
         self.num_pushes = 0
         self.num_pulls = 0
@@ -109,11 +128,29 @@ class AsyncFederatedNode(_BaseNode):
 class SyncFederatedNode(_BaseNode):
     """Synchronous serverless federation: barrier on the weight store."""
 
-    def __init__(self, *, num_nodes: int, timeout: float = 60.0, poll_interval: float = 0.02, **kwargs):
-        super().__init__(**kwargs)
+    def __init__(self, *, num_nodes: int, timeout: float = 60.0, poll_interval: float = 0.02,
+                 resume: bool = False, **kwargs):
+        # resume defaults OFF here (unlike async): a node that bootstraps its
+        # counter past its peers would wait on a round they will never reach,
+        # while the peers aggregate their stale history blobs. Sync recovery
+        # needs all participants restarted together — opt in explicitly.
+        super().__init__(resume=resume, **kwargs)
         # Round-exact blobs are required so every client aggregates the same
-        # set even when a fast peer has already deposited round t+1.
-        self.store.keep_history = True
+        # set even when a fast peer has already deposited round t+1. Flipping
+        # keep_history on a store the CALLER constructed (and may share with
+        # async nodes) is a side effect they must hear about: every node using
+        # that store starts writing per-round history blobs.
+        if not self.store.keep_history:
+            if not self._owns_store:
+                warnings.warn(
+                    "SyncFederatedNode is enabling keep_history on a caller-"
+                    "provided store; all nodes sharing it will now write "
+                    "history/ blobs. Construct the store with "
+                    "keep_history=True (or give sync nodes their own store) "
+                    "to make this explicit.",
+                    stacklevel=2,
+                )
+            self.store.keep_history = True
         self.num_nodes = num_nodes
         self.timeout = timeout
         self.poll_interval = poll_interval

@@ -155,6 +155,56 @@ def peek_meta(blob: bytes) -> dict[str, Any]:
         return json.loads(bytes(data[_META_KEY].tobytes()).decode())
 
 
+# --- group summaries (sharded gossip store) ---------------------------------
+#
+# A group's deposit in the gossip layer: the example-weighted mean of the
+# group's latest params plus enough metadata for receivers to (a) weight it
+# like a pseudo-peer in client-side aggregation (``num_examples`` = the total
+# behind the mean) and (b) order competing copies by freshness. The blob rides
+# the same self-describing npz envelope as every other deposit — ``peek_meta``
+# dispatches on ``summary_of`` exactly like it does on ``delta_of`` /
+# ``quantized`` — so heterogeneous readers never need out-of-band schema.
+
+
+@dataclass
+class GroupSummary:
+    """One group's aggregate deposit in the gossip layer."""
+
+    params: PyTree              # example-weighted mean of the group's latest params
+    num_examples: int           # total examples behind that mean
+    origin: int                 # group index that produced the summary
+    version: int                # monotone freshness scalar: sum of (counter + 1)
+    version_vector: dict        # node_id -> latest counter folded into the mean
+    timestamp: float = 0.0      # newest member timestamp (staleness strategies)
+
+
+def serialize_group_summary(summary: GroupSummary) -> bytes:
+    return serialize_params(
+        summary.params,
+        meta={
+            "summary_of": int(summary.origin),
+            "num_examples": int(summary.num_examples),
+            "version": int(summary.version),
+            "version_vector": {str(k): int(v) for k, v in summary.version_vector.items()},
+            "timestamp": float(summary.timestamp),
+        },
+    )
+
+
+def deserialize_group_summary(blob: bytes) -> GroupSummary:
+    params, meta = deserialize_params(blob)
+    if "summary_of" not in meta:
+        raise ValueError("not a group-summary blob")
+    return GroupSummary(
+        params=params,
+        num_examples=int(meta["num_examples"]),
+        origin=int(meta["summary_of"]),
+        version=int(meta["version"]),
+        version_vector={str(k): int(v) for k, v in meta["version_vector"].items()},
+        timestamp=float(meta.get("timestamp", 0.0)),
+    )
+
+
 # --- int8 compressed payloads (beyond-paper extension #4) -------------------
 
 

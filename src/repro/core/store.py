@@ -33,7 +33,7 @@ import threading
 import time
 import urllib.parse
 from abc import ABC, abstractmethod
-from typing import Any, Iterable
+from typing import Any
 
 from .serialize import (
     NodeUpdate,
@@ -49,20 +49,62 @@ from .serialize import (
 )
 from .tree import tree_size_bytes
 
-def _excluded(key: str, exclude: "str | tuple[str, ...] | None") -> bool:
-    """state_hash exclusion: ``exclude`` is None, one exact key, or a tuple
-    whose entries are exact keys or prefixes (marked by a trailing '/')."""
+def _exclusion(exclude: "str | tuple[str, ...] | None"):
+    """Normalize a state_hash exclusion — None, one exact key, or a tuple of
+    exact keys / prefixes (trailing '/') — into a fast per-key predicate:
+    one set lookup plus one C-level tuple-startswith, hoisted out of the
+    per-key loop (state_hash runs this over every key in the folder)."""
     if exclude is None:
-        return False
+        return None
     if isinstance(exclude, str):
         exclude = (exclude,)
-    for entry in exclude:
-        if entry.endswith("/"):
-            if key.startswith(entry):
-                return True
-        elif key == entry:
-            return True
-    return False
+    exact = frozenset(e for e in exclude if not e.endswith("/"))
+    prefixes = tuple(e for e in exclude if e.endswith("/"))
+    if prefixes:
+        return lambda key: key in exact or key.startswith(prefixes)
+    return exact.__contains__
+
+
+class _LruCache:
+    """Tiny insertion-ordered LRU (dict-backed) shared by the read-side
+    caches: CachingFolder's blob cache, WeightStore's decoded-update cache,
+    and ShardedWeightStore's decoded-summary cache. Internally locked: stores
+    are shared across threads (one ShardedWeightStore serving many threaded
+    nodes is an endorsed usage), and an unlocked eviction loop racing a
+    get()'s pop/reinsert would crash with 'dict changed size during
+    iteration'."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._data: dict = {}
+        self._lock = threading.Lock()
+
+    def get(self, key):
+        """Value for ``key`` (refreshing its LRU position), else None."""
+        with self._lock:
+            hit = self._data.get(key)
+            if hit is not None:
+                self._data.pop(key, None)
+                self._data[key] = hit
+            return hit
+
+    def put(self, key, value) -> None:
+        with self._lock:
+            self._data.pop(key, None)
+            self._data[key] = value
+            while len(self._data) > self.capacity:
+                self._data.pop(next(iter(self._data)))
+
+    def pop(self, key) -> None:
+        with self._lock:
+            self._data.pop(key, None)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+
+    def __len__(self) -> int:
+        return len(self._data)
 
 
 class SharedFolder(ABC):
@@ -96,9 +138,10 @@ class SharedFolder(ABC):
         Default derives versions from blob hashes; backends override with
         cheaper metadata (mtime, etag) when available.
         """
+        skip = _exclusion(exclude)
         h = hashlib.sha256()
         for key in sorted(self.keys()):
-            if _excluded(key, exclude):
+            if skip is not None and skip(key):
                 continue
             blob = self.get(key)
             if blob is not None:
@@ -140,9 +183,11 @@ class InMemoryFolder(SharedFolder):
             return self._versions.get(key)
 
     def state_hash(self, exclude: str | tuple[str, ...] | None = None) -> str:
+        skip = _exclusion(exclude)
         with self._lock:
             items = sorted(
-                (k, v) for k, v in self._versions.items() if not _excluded(k, exclude)
+                (k, v) for k, v in self._versions.items()
+                if skip is None or not skip(k)
             )
         h = hashlib.sha256(repr(items).encode())
         return h.hexdigest()[:16]
@@ -216,11 +261,12 @@ class DiskFolder(SharedFolder):
         return (st.st_ino, st.st_mtime_ns, st.st_size)
 
     def state_hash(self, exclude: str | tuple[str, ...] | None = None) -> str:
+        skip = _exclusion(exclude)
         items = []
         for name in sorted(os.listdir(self.directory)):
             if not name.endswith(".npz"):
                 continue
-            if _excluded(urllib.parse.unquote(name[: -len(".npz")]), exclude):
+            if skip is not None and skip(urllib.parse.unquote(name[: -len(".npz")])):
                 continue
             path = os.path.join(self.directory, name)
             try:
@@ -285,12 +331,13 @@ class S3Folder(SharedFolder):
 
     def state_hash(self, exclude: str | tuple[str, ...] | None = None) -> str:  # pragma: no cover
         prefix = f"{self.prefix}/" if self.prefix else ""
+        skip = _exclusion(exclude)
         resp = self._s3.list_objects_v2(Bucket=self.bucket, Prefix=prefix)
         items = sorted(
             (o["Key"], o["ETag"])
             for o in resp.get("Contents", [])
             if o["Key"].endswith(".npz")
-            and not _excluded(o["Key"][len(prefix): -len(".npz")], exclude)
+            and not (skip is not None and skip(o["Key"][len(prefix): -len(".npz")]))
         )
         return hashlib.sha256(repr(items).encode()).hexdigest()[:16]
 
@@ -314,13 +361,20 @@ class CachingFolder(SharedFolder):
 
     def __init__(self, inner: SharedFolder, *, max_entries: int = 64):
         self.inner = inner
-        self.max_entries = max_entries
-        self._cache: dict[str, tuple[Any, bytes]] = {}  # insertion-ordered, LRU
+        self._cache: "_LruCache" = _LruCache(max_entries)  # key -> (version, blob)
         self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
         self.bytes_fetched = 0
         self.bytes_saved = 0
+
+    @property
+    def max_entries(self) -> int:
+        return self._cache.capacity
+
+    @max_entries.setter
+    def max_entries(self, value: int) -> None:
+        self._cache.capacity = value
 
     def put(self, key: str, blob: bytes) -> None:
         self.inner.put(key, blob)
@@ -328,13 +382,7 @@ class CachingFolder(SharedFolder):
         # to a concurrent writer's blob, and pairing their token with our bytes
         # would be a *persistent* stale hit. The next get refetches once.
         with self._lock:
-            self._cache.pop(key, None)
-
-    def _remember(self, key: str, version: Any, blob: bytes) -> None:
-        self._cache.pop(key, None)
-        self._cache[key] = (version, blob)
-        while len(self._cache) > self.max_entries:
-            self._cache.pop(next(iter(self._cache)))
+            self._cache.pop(key)
 
     def get(self, key: str) -> bytes | None:
         # Read the version token *before* the blob: if a writer lands between
@@ -343,11 +391,10 @@ class CachingFolder(SharedFolder):
         v = self.inner.version(key)
         if v is not None:
             with self._lock:
-                hit = self._cache.get(key)
+                hit = self._cache.get(key)  # refreshes LRU position
                 if hit is not None and hit[0] == v:
                     self.hits += 1
                     self.bytes_saved += len(hit[1])
-                    self._remember(key, *hit)  # refresh LRU position
                     return hit[1]
         blob = self.inner.get(key)
         with self._lock:
@@ -355,7 +402,7 @@ class CachingFolder(SharedFolder):
             if blob is not None:
                 self.bytes_fetched += len(blob)
                 if v is not None:
-                    self._remember(key, v, blob)
+                    self._cache.put(key, (v, blob))
         return blob
 
     def keys(self) -> list[str]:
@@ -364,7 +411,7 @@ class CachingFolder(SharedFolder):
     def delete(self, key: str) -> None:
         self.inner.delete(key)
         with self._lock:
-            self._cache.pop(key, None)
+            self._cache.pop(key)
 
     def version(self, key: str) -> Any | None:
         return self.inner.version(key)
@@ -406,6 +453,13 @@ class WeightStore:
 
     Blobs are self-describing (dispatch on ``__meta__``), so readers decode
     any transport regardless of their own setting.
+
+    ``pull``/``pull_node`` keep a bounded decoded-update cache keyed on the
+    folder's per-key ``version`` token, so a peer whose deposit is unchanged
+    costs one metadata lookup instead of an npz decode (the decode-side twin
+    of ``CachingFolder``'s download skip). Cached ``NodeUpdate`` objects are
+    returned by reference — treat pulled params as read-only, as every caller
+    in this repo already does.
     """
 
     def __init__(
@@ -417,6 +471,7 @@ class WeightStore:
         transport: str | None = None,
         rebase_every: int = 10,
         delta_density_threshold: float = 0.5,
+        decode_cache_entries: int = 64,
     ):
         if transport is None:
             transport = "quantized" if quantized else "full"
@@ -432,6 +487,14 @@ class WeightStore:
         self._bases: dict[str, tuple[str, Any, int]] = {}
         # reader state: base_hash -> decoded base params (bounded)
         self._decoded_bases: dict[str, Any] = {}
+        # decoded-update cache: latest/<node> key -> (version token, update).
+        # Companion to CachingFolder: that layer skips the *download* of an
+        # unchanged blob, this one skips the npz *decode* — keyed on the same
+        # cheap folder.version() token. 0 disables.
+        self.decode_cache_entries = decode_cache_entries
+        self._decoded_latest = _LruCache(decode_cache_entries)  # key -> (version, update)
+        self.decode_hits = 0
+        self.decode_misses = 0
 
     # -- push ---------------------------------------------------------------
     def push(self, update: NodeUpdate) -> None:
@@ -536,12 +599,25 @@ class WeightStore:
         return deserialize_update(blob)
 
     def _pull_latest(self, node_id: str) -> NodeUpdate | None:
+        key = f"latest/{node_id}"
+        # Version token read BEFORE the blob (same ordering as CachingFolder):
+        # a writer landing in between can only cache a fresh update under a
+        # stale token — one redundant decode next time, never a stale hit.
+        v = self.folder.version(key) if self.decode_cache_entries else None
+        if v is not None:
+            hit = self._decoded_latest.get(key)  # refreshes LRU position
+            if hit is not None and hit[0] == v:
+                self.decode_hits += 1
+                return hit[1]
         for _ in range(3):
-            blob = self.folder.get(f"latest/{node_id}")
+            blob = self.folder.get(key)
             if blob is None:
                 return None
             update = self._decode(blob, node_id)
             if update is not None:
+                self.decode_misses += 1
+                if v is not None:
+                    self._decoded_latest.put(key, (v, update))
                 return update
             time.sleep(0.01)  # writer mid-rebase; refetch latest + base
         return None
@@ -584,12 +660,24 @@ class WeightStore:
             self.folder.delete(key)
         self._bases.clear()
         self._decoded_bases.clear()
+        self._decoded_latest.clear()
 
 
-def make_folder(uri: str) -> SharedFolder:
+def make_folder(uri: str):
     """Folder factory: 'memory://', 's3://bucket/prefix', a local path, or any
     of those behind a read-through cache via a 'cache+' prefix
-    (e.g. 'cache+/mnt/shared/exp1', 'cache+s3://bucket/exp1')."""
+    (e.g. 'cache+/mnt/shared/exp1', 'cache+s3://bucket/exp1').
+
+    A 'shard<G>+<uri>' prefix returns a ``ShardedFolders`` handle — G
+    per-group folders of the inner kind (e.g. 'shard16+/mnt/shared/exp1',
+    'shard8+cache+s3://bucket/exp1') — which the federated nodes turn into a
+    gossip-sharded ``ShardedWeightStore`` instead of a flat ``WeightStore``.
+    """
+    if uri.startswith("shard"):
+        from .gossip import SHARD_URI_RE, ShardedFolders  # circular-import guard
+
+        if SHARD_URI_RE.match(uri):
+            return ShardedFolders.from_uri(uri)
     if uri.startswith("cache+"):
         return CachingFolder(make_folder(uri[len("cache+"):]))
     if uri.startswith("memory://"):

@@ -1,0 +1,611 @@
+"""Sharded gossip weight store: assignment stability, URI routing, O(group)
+scan structure, and the diameter-bounded convergence property.
+
+The acceptance property: an update deposited in any group reaches EVERY
+populated group's folder within ``num_groups`` gossip rounds (the ring
+diameter), under adversarial per-round push orderings.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, strategies as st
+
+from repro.core import (
+    AsyncFederatedNode,
+    DiskFolder,
+    GroupSummary,
+    InMemoryFolder,
+    NodeUpdate,
+    ShardedFolders,
+    ShardedWeightStore,
+    SyncFederatedNode,
+    WeightStore,
+    balanced_groups,
+    default_group_of,
+    deserialize_group_summary,
+    make_folder,
+    peek_meta,
+    run_threaded,
+    serialize_group_summary,
+)
+from repro.core.gossip import GROUP_PEER_PREFIX
+from repro.core.store import CachingFolder
+from repro.core.strategies import FedAvg
+
+
+def params(v, n=4):
+    return {"w": np.full((n,), float(v), np.float32)}
+
+
+def fresh_sharded(num_groups, **kwargs):
+    return ShardedWeightStore(
+        ShardedFolders(num_groups, factory=lambda g: InMemoryFolder()), **kwargs
+    )
+
+
+# --- summary wire format -----------------------------------------------------
+
+
+def test_group_summary_roundtrip_and_meta_dispatch():
+    s = GroupSummary(
+        params=params(1.5),
+        num_examples=42,
+        origin=3,
+        version=17,
+        version_vector={"a": 4, "b": 11},
+        timestamp=2.25,
+    )
+    blob = serialize_group_summary(s)
+    assert peek_meta(blob)["summary_of"] == 3  # cheap dispatch, like delta_of
+    s2 = deserialize_group_summary(blob)
+    assert np.array_equal(s2.params["w"], s.params["w"])
+    assert (s2.num_examples, s2.origin, s2.version, s2.timestamp) == (42, 3, 17, 2.25)
+    assert s2.version_vector == {"a": 4, "b": 11}
+
+
+def test_deserialize_group_summary_rejects_non_summary():
+    from repro.core import serialize_update
+
+    blob = serialize_update(NodeUpdate(params(0.0), num_examples=1, node_id="n"))
+    with pytest.raises(ValueError):
+        deserialize_group_summary(blob)
+
+
+# --- group assignment properties ---------------------------------------------
+
+
+@settings(max_examples=25)
+@given(st.lists(st.integers(0, 10**6), min_size=1, max_size=40), st.integers(1, 12))
+def test_default_assignment_stable_and_in_range(raw_ids, num_groups):
+    node_ids = [f"node{v}" for v in raw_ids]
+    for nid in node_ids:
+        g = default_group_of(nid, num_groups)
+        assert 0 <= g < num_groups
+        # stability: recomputing from an equal-but-distinct string agrees
+        assert default_group_of(str(nid), num_groups) == g
+
+
+@settings(max_examples=25)
+@given(
+    st.lists(st.integers(0, 10**6), min_size=1, max_size=40),
+    st.integers(1, 8),
+    st.integers(0, 2**31 - 1),
+)
+def test_balanced_groups_stable_and_covering(raw_ids, num_groups, seed):
+    node_ids = [f"node{v}" for v in raw_ids]
+    mapping = balanced_groups(node_ids, num_groups)
+    # same SET, any order (and with duplicates collapsed) -> same mapping
+    shuffled = list(dict.fromkeys(node_ids))
+    np.random.default_rng(seed).shuffle(shuffled)
+    assert balanced_groups(shuffled, num_groups) == mapping
+    assert balanced_groups(reversed(node_ids), num_groups) == mapping
+    sizes = np.bincount(list(mapping.values()), minlength=num_groups)
+    assert sizes.max() - sizes.min() <= 1
+    if len(mapping) >= num_groups:
+        assert sizes.min() >= 1  # no empty group once n >= num_groups
+
+
+# --- the convergence bound ---------------------------------------------------
+
+
+def _run_round(store, counters, order):
+    """One gossip round: every node pushes exactly once, in ``order``."""
+    for nid in order:
+        counters[nid] += 1
+        store.push(
+            NodeUpdate(params(counters[nid]), num_examples=1, node_id=nid,
+                       counter=counters[nid])
+        )
+
+
+def _groups_holding(store, origin, node_id, min_counter):
+    """Set of groups whose folder holds a summary of ``origin`` that has
+    folded in ``node_id``'s update at >= ``min_counter``."""
+    out = set()
+    for g in range(store.num_groups):
+        s = store.load_summary(g, origin)
+        if s is not None and s.version_vector.get(node_id, -1) >= min_counter:
+            out.add(g)
+    return out
+
+
+@settings(max_examples=8)
+@given(st.integers(2, 5), st.integers(1, 3), st.integers(0, 2**31 - 1))
+def test_update_reaches_every_group_within_diameter(num_groups, per_group, seed):
+    """The acceptance bound: after a distinguished node's push, every group
+    holds that update's effect within num_groups gossip rounds, for any
+    per-round push ordering."""
+    node_ids = [f"n{i}" for i in range(num_groups * per_group)]
+    mapping = {nid: i % num_groups for i, nid in enumerate(node_ids)}
+    store = fresh_sharded(num_groups, group_of=mapping)
+    rng = np.random.default_rng(seed)
+    counters = {nid: -1 for nid in node_ids}
+
+    order = list(node_ids)
+    rng.shuffle(order)
+    _run_round(store, counters, order)  # seed round: everyone deposits once
+
+    # the distinguished update: n0 (group 0) pushes counter c
+    counters["n0"] += 1
+    c = counters["n0"]
+    store.push(NodeUpdate(params(99.0), num_examples=1, node_id="n0", counter=c))
+
+    rounds_needed = None
+    for r in range(1, num_groups + 1):
+        order = list(node_ids)
+        rng.shuffle(order)
+        _run_round(store, counters, order)
+        if _groups_holding(store, origin=0, node_id="n0", min_counter=c) == set(
+            range(num_groups)
+        ):
+            rounds_needed = r
+            break
+    assert rounds_needed is not None and rounds_needed <= num_groups
+
+
+def test_gossip_rides_over_empty_groups():
+    """Hash-assigned fleets can leave groups empty; forwarding walks past
+    holes (seeding them en route) so the ring never partitions."""
+    num_groups = 6
+    mapping = {"a": 0, "b": 3}  # groups 1,2,4,5 are empty
+    store = fresh_sharded(num_groups, group_of=mapping)
+    counters = {"a": -1, "b": -1}
+    for _ in range(num_groups + 1):
+        _run_round(store, counters, ["a", "b"])
+    # both populated groups hear about each other
+    assert store.load_summary(3, 0) is not None  # a's summary reached b's group
+    assert store.load_summary(0, 3) is not None  # and vice versa
+    # a's pull folds in b's group summary as a pseudo-peer
+    peers = store.pull(exclude="a")
+    assert f"{GROUP_PEER_PREFIX}3" in {u.node_id for u in peers}
+
+
+def test_summary_versions_gc_to_one_per_origin():
+    store = fresh_sharded(2, group_of={"a": 0, "b": 1})
+    counters = {"a": -1, "b": -1}
+    for _ in range(5):
+        _run_round(store, counters, ["a", "b"])
+    for g in range(2):
+        keys = [k for k in store.folders.group_folder(g).keys() if k.startswith("summary/")]
+        origins = [k.split("/")[1] for k in keys]
+        assert len(origins) == len(set(origins)), keys  # one version per origin
+
+
+# --- O(group) scan structure -------------------------------------------------
+
+
+def test_state_hash_and_pull_touch_only_home_group():
+    """A node's per-step scan is its home folder only: activity confined to a
+    foreign (non-adjacent-summary) node's latest/ never perturbs it."""
+
+    class CountingFolder(InMemoryFolder):
+        def __init__(self):
+            super().__init__()
+            self.ops = 0
+
+        def keys(self):
+            self.ops += 1
+            return super().keys()
+
+        def get(self, key):
+            self.ops += 1
+            return super().get(key)
+
+    folders = [CountingFolder() for _ in range(4)]
+    mapping = {f"n{i}": i % 4 for i in range(8)}
+    store = ShardedWeightStore(ShardedFolders.from_folders(folders), group_of=mapping)
+    counters = {nid: -1 for nid in mapping}
+    _run_round(store, counters, list(mapping))
+
+    for f in folders:
+        f.ops = 0
+    store.state_hash(exclude_node="n0")  # n0 lives in group 0
+    store.pull(exclude="n0")
+    assert folders[0].ops > 0
+    assert folders[1].ops == folders[2].ops == folders[3].ops == 0
+
+
+def test_own_push_does_not_defeat_skip_check():
+    """Algorithm 1's fast path survives sharding: a push refreshes the home
+    group's summary, but that summary is excluded from the pusher's own
+    state hash."""
+    store = fresh_sharded(3, group_of={"solo": 1})
+    node = AsyncFederatedNode(strategy=FedAvg(), store=store, node_id="solo")
+    assert node.update_parameters(params(1.0), 10) is None
+    pulls = node.num_pulls
+    for i in range(3):
+        assert node.update_parameters(params(float(i)), 10) is None
+    assert node.num_pulls == pulls
+    assert node.num_skipped_pulls >= 3
+
+
+# --- nodes on a ShardedWeightStore (the existing contracts, unchanged) -------
+
+
+def test_async_same_group_nodes_aggregate():
+    shared = ShardedFolders(2, factory=lambda g: InMemoryFolder())
+    mapping = {"a": 0, "b": 0}
+    a = AsyncFederatedNode(strategy=FedAvg(),
+                           store=ShardedWeightStore(shared, group_of=mapping),
+                           node_id="a")
+    b = AsyncFederatedNode(strategy=FedAvg(),
+                           store=ShardedWeightStore(shared, group_of=mapping),
+                           node_id="b")
+    assert a.update_parameters(params(0.0), 10) is None
+    out = b.update_parameters(params(2.0), 10)
+    assert out is not None and np.allclose(out["w"], 1.0)
+
+
+def test_async_cross_group_nodes_converge_via_summaries():
+    shared = ShardedFolders(2, factory=lambda g: InMemoryFolder())
+    mapping = {"a": 0, "b": 1}
+    a = AsyncFederatedNode(strategy=FedAvg(),
+                           store=ShardedWeightStore(shared, group_of=mapping),
+                           node_id="a")
+    b = AsyncFederatedNode(strategy=FedAvg(),
+                           store=ShardedWeightStore(shared, group_of=mapping),
+                           node_id="b")
+    outs = []
+    for _ in range(3):
+        outs.append(a.update_parameters(params(0.0), 10))
+        outs.append(b.update_parameters(params(4.0), 10))
+    folded = [o for o in outs if o is not None]
+    assert folded, "cross-group summaries never arrived"
+    # aggregates sit strictly between the two targets: remote info was mixed in
+    for o in folded:
+        assert 0.0 < float(o["w"][0]) < 4.0
+
+
+def test_sync_barrier_is_per_group_under_sharding():
+    shared = ShardedFolders(2, factory=lambda g: InMemoryFolder())
+    mapping = {"a0": 0, "a1": 0, "b0": 1, "b1": 1}
+    values = {"a0": 0.0, "a1": 2.0, "b0": 10.0, "b1": 14.0}
+    outs = {}
+
+    def client(nid):
+        node = SyncFederatedNode(
+            strategy=FedAvg(),
+            store=ShardedWeightStore(shared, group_of=mapping, keep_history=True),
+            node_id=nid, num_nodes=2, timeout=10,
+        )
+        outs[nid] = node.update_parameters(params(values[nid]), 10)
+
+    res = run_threaded([lambda n=n: client(n) for n in mapping])
+    assert all(r.error is None for r in res), [r.traceback for r in res]
+    assert np.allclose(outs["a0"]["w"], 1.0) and np.allclose(outs["a1"]["w"], 1.0)
+    assert np.allclose(outs["b0"]["w"], 12.0) and np.allclose(outs["b1"]["w"], 12.0)
+
+
+def test_summary_pseudo_peer_counter_is_in_node_counter_units():
+    """Staleness strategies (FedAsync) compare peer counters against their own
+    epoch counter; a summary pseudo-peer must report the freshest member's
+    counter, not the version scalar (regression)."""
+    store = fresh_sharded(2, group_of={"a": 0, "b": 1})
+    store.push(NodeUpdate(params(0.0), num_examples=1, node_id="a", counter=0))
+    for ctr in range(4):  # group 0 is populated: every push forwards fresh
+        store.push(NodeUpdate(params(1.0), num_examples=3, node_id="b", counter=ctr))
+    pseudo = [u for u in store.pull(exclude="a")
+              if u.node_id == f"{GROUP_PEER_PREFIX}1"]
+    assert pseudo and pseudo[0].counter == 3      # freshest member's counter
+    assert pseudo[0].metrics["summary_version"] == 4  # scalar still available
+
+
+def test_rotation_survives_hash_skip_on_quiet_folder():
+    """With more foreign origins than summary_sample and a folder gone quiet,
+    the state-hash nudge keeps an async node pulling until every group's
+    summary has been folded in — then the skip check re-engages (regression:
+    the skip froze the rotation and starved unsampled groups forever)."""
+    num_groups = 5
+    mapping = {f"n{i}": i for i in range(num_groups)}
+    shared = ShardedFolders(num_groups, factory=lambda g: InMemoryFolder())
+    seed_store = ShardedWeightStore(shared, group_of=mapping)
+    counters = {nid: -1 for nid in mapping}
+    for _ in range(num_groups + 1):
+        _run_round(seed_store, counters, list(mapping))
+
+    class Recording(FedAvg):
+        def __init__(self):
+            super().__init__()
+            self.seen = set()
+
+        def aggregate(self, own, peers):
+            self.seen.update(u.node_id for u in peers)
+            return super().aggregate(own, peers)
+
+    strat = Recording()
+    store = ShardedWeightStore(shared, group_of=mapping, summary_sample=1)
+    node = AsyncFederatedNode(strategy=strat, store=store, node_id="n0",
+                              resume=False)
+    for i in range(3 * num_groups):  # the rest of the fleet stays silent
+        node.update_parameters(params(float(i)), 10)
+    assert {f"{GROUP_PEER_PREFIX}{g}" for g in range(1, num_groups)} <= strat.seen
+    # coverage complete -> the hash settles and the skip fast path returns
+    skipped_before = node.num_skipped_pulls
+    for i in range(3):
+        node.update_parameters(params(float(i)), 10)
+    assert node.num_skipped_pulls >= skipped_before + 3
+
+
+def test_rotation_covers_all_origins_per_node_on_shared_instance():
+    """The rotation window is per pulling node: two nodes alternating pulls
+    through ONE shared store instance must each still cover every foreign
+    origin (regression: a store-global counter strode past half of them)."""
+    num_groups = 5
+    mapping = {f"n{i}": i for i in range(num_groups)}
+    shared = ShardedFolders(num_groups, factory=lambda g: InMemoryFolder())
+    seed = ShardedWeightStore(shared, group_of=mapping)
+    counters = {nid: -1 for nid in mapping}
+    for _ in range(num_groups + 1):
+        _run_round(seed, counters, list(mapping))
+
+    store = ShardedWeightStore(shared, group_of=mapping, summary_sample=1)
+    seen = {"n0": set(), "n1": set()}
+    for _ in range(10):  # strict alternation through the shared instance
+        for nid in seen:
+            seen[nid].update(u.node_id for u in store.pull(exclude=nid)
+                             if u.node_id.startswith(GROUP_PEER_PREFIX))
+    for nid, g in (("n0", 0), ("n1", 1)):
+        expect = {f"{GROUP_PEER_PREFIX}{o}" for o in range(num_groups) if o != g}
+        assert seen[nid] == expect, (nid, seen[nid])
+
+
+def test_pull_summary_sample_is_bounded_and_rotates():
+    num_groups = 9
+    mapping = {f"n{i}": i for i in range(num_groups)}
+    store = fresh_sharded(num_groups, group_of=mapping, summary_sample=3)
+    counters = {nid: -1 for nid in mapping}
+    for _ in range(num_groups + 1):  # enough rounds for full propagation
+        _run_round(store, counters, list(mapping))
+    seen = set()
+    for _ in range(8):
+        peers = store.pull(exclude="n0")
+        pseudo = [u for u in peers if u.node_id.startswith(GROUP_PEER_PREFIX)]
+        assert len(pseudo) <= 3  # bounded per pull
+        seen.update(u.node_id for u in pseudo)
+    # ...but rotation eventually samples every foreign origin
+    assert seen == {f"{GROUP_PEER_PREFIX}{g}" for g in range(1, num_groups)}
+
+
+# --- shard URI routing -------------------------------------------------------
+
+
+def test_make_folder_shard_uri(tmp_path):
+    sf = make_folder("shard8+memory://")
+    assert isinstance(sf, ShardedFolders) and sf.num_groups == 8
+    assert isinstance(sf.group_folder(0), InMemoryFolder)
+    assert sf.group_folder(0) is sf.group_folder(0)  # cached instance
+    assert sf.group_folder(0) is not sf.group_folder(1)
+
+    sfd = make_folder(f"shard4+{tmp_path}/exp")
+    assert isinstance(sfd.group_folder(2), DiskFolder)
+    assert sfd.group_uri(2) == f"{tmp_path}/exp/group0002"
+
+    sfc = make_folder(f"shard2+cache+{tmp_path}/exp2")
+    assert sfc.group_uri(1) == f"cache+{tmp_path}/exp2/group0001"
+    assert isinstance(sfc.group_folder(1), CachingFolder)
+
+
+def test_make_folder_plain_shard_path_is_not_a_shard_uri(tmp_path):
+    # a directory literally named 'shardware' must stay a DiskFolder
+    f = make_folder(str(tmp_path / "shardware"))
+    assert isinstance(f, DiskFolder)
+
+
+def test_node_accepts_shard_uri_folder():
+    node = AsyncFederatedNode(strategy=FedAvg(),
+                              shared_folder=make_folder("shard4+memory://"),
+                              node_id="x")
+    assert isinstance(node.store, ShardedWeightStore)
+    assert node.update_parameters(params(1.0), 10) is None
+    assert node.store.node_ids() == ["x"]
+
+
+def test_shard_validation_errors(tmp_path):
+    with pytest.raises(ValueError):
+        ShardedFolders(0, "memory://")
+    with pytest.raises(ValueError):
+        ShardedFolders(2)  # neither uri nor factory
+    with pytest.raises(ValueError):
+        ShardedFolders.from_uri("cache+memory://")
+    with pytest.raises(ValueError):
+        ShardedWeightStore("shard2+memory://", transport="gzip")
+    with pytest.raises(ValueError):
+        ShardedWeightStore("shard2+memory://", gossip_fanout=0)
+    with pytest.raises(ValueError):
+        ShardedWeightStore("shard2+memory://", summary_sample=0)
+    store = ShardedWeightStore("shard2+memory://",
+                               group_of=lambda nid: 7)  # out of range
+    with pytest.raises(ValueError):
+        store.push(NodeUpdate(params(0.0), num_examples=1, node_id="n"))
+
+
+def test_sharded_store_works_with_delta_transport(tmp_path):
+    store = ShardedWeightStore(f"shard2+{tmp_path}", group_of={"a": 0, "b": 1},
+                               transport="delta")
+    for ctr in range(3):
+        store.push(NodeUpdate(params(ctr), num_examples=1, node_id="a", counter=ctr))
+        store.push(NodeUpdate(params(-ctr), num_examples=1, node_id="b", counter=ctr))
+    pulled = store.pull_node("a")
+    assert pulled.counter == 2 and np.allclose(pulled.params["w"], 2.0)
+    assert sorted(store.node_ids()) == ["a", "b"]
+
+
+# --- restart/recovery (read-your-own-writes bootstrap) -----------------------
+
+
+def test_node_resumes_counter_and_params_from_own_blob():
+    folder = InMemoryFolder()
+    first = AsyncFederatedNode(strategy=FedAvg(), shared_folder=folder, node_id="ph")
+    for i in range(3):
+        first.update_parameters(params(float(i)), 10)
+    assert first.counter == 3
+
+    reborn = AsyncFederatedNode(strategy=FedAvg(), shared_folder=folder, node_id="ph")
+    assert reborn.resumed is not None
+    assert reborn.counter == 3  # continues after its last deposit (counter 2)
+    assert np.allclose(reborn.resumed.params["w"], 2.0)
+
+    fresh = AsyncFederatedNode(strategy=FedAvg(), shared_folder=folder, node_id="ph",
+                               resume=False)
+    assert fresh.resumed is None and fresh.counter == 0
+
+
+def test_node_resume_routes_through_sharded_store():
+    shared = ShardedFolders(3, factory=lambda g: InMemoryFolder())
+    mapping = {"ph": 2}
+    first = AsyncFederatedNode(strategy=FedAvg(),
+                               store=ShardedWeightStore(shared, group_of=mapping),
+                               node_id="ph")
+    first.update_parameters(params(5.0), 10)
+    reborn = AsyncFederatedNode(strategy=FedAvg(),
+                                store=ShardedWeightStore(shared, group_of=mapping),
+                                node_id="ph")
+    assert reborn.resumed is not None and reborn.counter == 1
+    assert np.allclose(reborn.resumed.params["w"], 5.0)
+
+
+def test_generated_node_id_skips_resume_lookup():
+    node = AsyncFederatedNode(strategy=FedAvg(), shared_folder=InMemoryFolder())
+    assert node.resumed is None and node.counter == 0
+
+
+def test_sync_node_does_not_auto_resume():
+    """A resuming sync node would wait on a round its peers never reach while
+    they aggregate its stale history blobs — sync resume is explicit opt-in."""
+    folder = InMemoryFolder()
+    first = SyncFederatedNode(strategy=FedAvg(), shared_folder=folder,
+                              node_id="s", num_nodes=1, timeout=1)
+    first.update_parameters(params(1.0), 10)
+    again = SyncFederatedNode(strategy=FedAvg(), shared_folder=folder,
+                              node_id="s", num_nodes=1, timeout=1)
+    assert again.resumed is None and again.counter == 0
+    opted_in = SyncFederatedNode(strategy=FedAvg(), shared_folder=folder,
+                                 node_id="s", num_nodes=1, timeout=1, resume=True)
+    assert opted_in.resumed is not None and opted_in.counter == 1
+
+
+def test_clear_drops_summary_cache():
+    """Version scalars restart after clear(); cached decodes keyed on the old
+    keys must not survive into the reborn store (regression: pull after clear
+    served pre-clear params)."""
+    store = fresh_sharded(2, group_of={"a": 0, "b": 1})
+    store.push(NodeUpdate(params(111.0), num_examples=1, node_id="b", counter=0))
+    store.push(NodeUpdate(params(0.0), num_examples=1, node_id="a", counter=0))
+    store.push(NodeUpdate(params(0.0), num_examples=1, node_id="a", counter=1))
+    before = [u for u in store.pull(exclude="a")
+              if u.node_id == f"{GROUP_PEER_PREFIX}1"]
+    assert before and np.allclose(before[0].params["w"], 111.0)
+
+    store.clear()
+    store.push(NodeUpdate(params(222.0), num_examples=1, node_id="b", counter=0))
+    store.push(NodeUpdate(params(0.0), num_examples=1, node_id="a", counter=0))
+    store.push(NodeUpdate(params(0.0), num_examples=1, node_id="a", counter=1))
+    after = [u for u in store.pull(exclude="a")
+             if u.node_id == f"{GROUP_PEER_PREFIX}1"]
+    assert after and np.allclose(after[0].params["w"], 222.0)
+
+
+def test_summary_index_breaks_version_ties_deterministically():
+    """Racing refreshes can land the same version scalar with different
+    content; the content-hash suffix makes the keys distinct and every folder
+    pick the same winner."""
+    from repro.core.gossip import ShardedWeightStore as S
+
+    keys = ["summary/0001/000000000010-aaaa1111",
+            "summary/0001/000000000010-bbbb2222",
+            "summary/0001/000000000009-cccc3333"]
+    index = S._summary_index(keys)
+    version, winner, stale = index["0001"]
+    assert winner == "summary/0001/000000000010-bbbb2222"
+    assert set(stale) == set(keys) - {winner}
+    # and a higher version always beats any hash
+    index2 = S._summary_index(keys + ["summary/0001/000000000011-0000aaaa"])
+    assert index2["0001"][1] == "summary/0001/000000000011-0000aaaa"
+
+
+def test_forward_seeds_empty_groups_once_not_per_push():
+    """Per-push cost must not scale with the number of empty groups: holes on
+    the ring are seeded once per origin (and skipped between rechecks), not
+    rewritten on every push."""
+
+    class CountingFolder(InMemoryFolder):
+        def __init__(self):
+            super().__init__()
+            self.puts = 0
+            self.lists = 0
+
+        def put(self, key, blob):
+            self.puts += 1
+            super().put(key, blob)
+
+        def keys(self):
+            self.lists += 1
+            return super().keys()
+
+    folders = [CountingFolder() for _ in range(6)]
+    store = ShardedWeightStore(ShardedFolders.from_folders(folders),
+                               group_of={"solo": 0})
+    for i in range(40):
+        store.push(NodeUpdate(params(float(i)), num_examples=1, node_id="solo",
+                              counter=i))
+    for empty in folders[1:]:
+        assert empty.puts <= 2, empty.puts          # seeded, not kept fresh
+        assert empty.lists <= 10, empty.lists       # memoized between rechecks
+
+
+def test_newly_populated_group_joins_the_ring():
+    """A group that gains its first member after being memoized empty starts
+    receiving forwards again within the recheck window."""
+    store = fresh_sharded(3, group_of={"a": 0, "late": 2})
+    counters = {"a": -1}
+    for _ in range(3):
+        _run_round(store, counters, ["a"])  # group 2 memoized empty
+    counters["late"] = -1
+    for _ in range(20):  # within the recheck window + a propagation round
+        _run_round(store, counters, ["a", "late"])
+    s = store.load_summary(2, 0)
+    assert s is not None
+    assert s.version_vector.get("a", -1) >= counters["a"] - 2  # fresh, not the seed
+
+
+# --- explicit keep_history on shared stores ----------------------------------
+
+
+def test_sync_warns_when_flipping_keep_history_on_shared_store():
+    store = WeightStore(InMemoryFolder())
+    with pytest.warns(UserWarning, match="keep_history"):
+        SyncFederatedNode(strategy=FedAvg(), store=store, node_id="s",
+                          num_nodes=1, timeout=1)
+    assert store.keep_history
+
+
+def test_sync_no_warning_when_store_is_private_or_explicit():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        SyncFederatedNode(strategy=FedAvg(), shared_folder=InMemoryFolder(),
+                          node_id="s1", num_nodes=1, timeout=1)
+        SyncFederatedNode(strategy=FedAvg(),
+                          store=WeightStore(InMemoryFolder(), keep_history=True),
+                          node_id="s2", num_nodes=1, timeout=1)

@@ -17,9 +17,11 @@ from repro.core import (
     DiskFolder,
     NodeUpdate,
     ProcessCrashed,
+    ShardedWeightStore,
     WeightStore,
     run_multiprocess,
 )
+from repro.core.gossip import GROUP_PEER_PREFIX
 from repro.core.strategies import FedAvg
 
 pytestmark = pytest.mark.multiprocess
@@ -97,6 +99,54 @@ def _fed_client(directory, node_id, target, *, epochs, peers_required,
         "aggregations": node.num_aggregations,
         "seen_peers": sorted(seen_peers),
     }
+
+
+def _resumable_client(directory, node_id, epochs, die_after_pushes=None):
+    """Crash-and-restart client: reports whether it bootstrapped from its own
+    latest/ blob and where its counter started. ``die_after_pushes`` parks the
+    client mid-training so the harness SIGKILL lands deterministically."""
+    node = AsyncFederatedNode(strategy=FedAvg(), shared_folder=DiskFolder(directory),
+                              node_id=node_id)
+    start_counter = node.counter
+    resumed_from = None if node.resumed is None else float(node.resumed.params["w"][0])
+    w = (np.asarray(node.resumed.params["w"]) if node.resumed is not None
+         else np.zeros((4,), np.float32))
+    for _ in range(epochs):
+        w = w + np.float32(1.0)  # local "training": counts total progress
+        aggregated = node.update_parameters({"w": w}, num_examples=5)
+        if aggregated is not None:
+            w = aggregated["w"]
+        if die_after_pushes is not None and node.num_pushes >= die_after_pushes:
+            while True:  # park mid-training until the SIGKILL arrives
+                time.sleep(0.05)
+    return {"start_counter": start_counter, "resumed_from": resumed_from,
+            "final_counter": node.counter, "w0": float(w[0])}
+
+
+def _sharded_fed_client(directory, node_id, group_map, num_groups, target, *,
+                        epochs, max_wait=60.0):
+    """Quadratic consensus client over a sharded gossip store: same contract
+    as ``_fed_client`` but each process scans only its home group's folder;
+    cross-group information arrives as ``group:<g>`` pseudo-peers."""
+    store = ShardedWeightStore(f"shard{num_groups}+{directory}", group_of=group_map)
+    node = AsyncFederatedNode(strategy=FedAvg(), store=store, node_id=node_id)
+    w = np.zeros((4,), np.float32)
+    seen: set = set()
+    deadline = time.monotonic() + max_wait
+    epoch = 0
+    while epoch < epochs or (
+        not any(p.startswith(GROUP_PEER_PREFIX) for p in seen)
+        and time.monotonic() < deadline
+    ):
+        w = w + 0.3 * (np.float32(target) - w)
+        aggregated = node.update_parameters({"w": w}, num_examples=5)
+        seen.update(u.node_id for u in store.pull(exclude=node_id))
+        if aggregated is not None:
+            w = aggregated["w"]
+        time.sleep(0.05)
+        epoch += 1
+    return {"final": w.tolist(), "pushes": node.num_pushes,
+            "aggregations": node.num_aggregations, "seen_peers": sorted(seen)}
 
 
 # --- harness contract -------------------------------------------------------
@@ -216,6 +266,72 @@ def test_three_process_federation_survives_sigkill(tmp_path):
     for w, own in ((w0, 0.0), (w1, 1.0)):
         assert w.min() >= -0.1 and w.max() <= 2.1
     assert np.max(np.abs(w0)) > 0.05  # n0 was pulled off its own target (0.0)
+
+
+# --- restart/recovery: a SIGKILL'd client resumes, not restarts --------------
+
+
+def test_sigkilled_client_resumes_from_own_blob(tmp_path):
+    """Crash injection + restart: the reborn process (same node_id) bootstraps
+    counter and params from its own latest/ deposit instead of starting over."""
+    first = run_multiprocess(
+        [(_resumable_client, (str(tmp_path), "phoenix", 50),
+          {"die_after_pushes": 3})],
+        kill_after={0: 10.0}, join_timeout=60.0)
+    assert isinstance(first[0].error, ProcessCrashed)
+    assert first[0].exitcode == -signal.SIGKILL
+
+    reborn = run_multiprocess(
+        [(_resumable_client, (str(tmp_path), "phoenix", 2))], join_timeout=60.0)
+    assert reborn[0].error is None, reborn[0].traceback
+    r = reborn[0].result
+    # the victim deposited counters 0,1,2 before the kill → resume at 3
+    assert r["start_counter"] == 3
+    assert r["resumed_from"] is not None and r["resumed_from"] >= 3.0
+    assert r["final_counter"] == 5  # progress continued, not restarted
+    # training state carried over: w kept growing from the recovered value
+    assert r["w0"] > r["resumed_from"]
+
+
+def test_fresh_client_under_new_id_still_starts_at_zero(tmp_path):
+    run_multiprocess([(_resumable_client, (str(tmp_path), "other", 2))],
+                     join_timeout=60.0)
+    res = run_multiprocess([(_resumable_client, (str(tmp_path), "newborn", 1))],
+                           join_timeout=60.0)
+    assert res[0].error is None, res[0].traceback
+    assert res[0].result["start_counter"] == 0
+    assert res[0].result["resumed_from"] is None
+
+
+# --- sharded gossip store across real processes ------------------------------
+
+
+def test_sharded_federation_across_processes(tmp_path):
+    """4 OS processes, 2 groups, nothing shared but per-group disk folders:
+    every client federates within its group and hears the other group via
+    gossip summaries."""
+    group_map = {"n0": 0, "n1": 0, "n2": 1, "n3": 1}
+    targets = {"n0": 0.0, "n1": 1.0, "n2": 3.0, "n3": 4.0}
+    clients = [
+        (_sharded_fed_client, (str(tmp_path), nid, group_map, 2, targets[nid]),
+         dict(epochs=10))
+        for nid in group_map
+    ]
+    res = run_multiprocess(clients, names=list(group_map), join_timeout=120.0)
+    for r in res:
+        assert r.error is None, r.traceback
+        assert r.result["aggregations"] >= 1
+    by_id = {r.node_id: r.result for r in res}
+    # every client eventually saw the OTHER group's summary pseudo-peer
+    for nid, g in group_map.items():
+        other = 1 - g
+        assert f"{GROUP_PEER_PREFIX}{other}" in by_id[nid]["seen_peers"], by_id[nid]
+    # cross-group mixing actually moved weights: each final sits strictly
+    # inside the global target hull, not pinned at the group's own extreme
+    for nid in group_map:
+        w = np.asarray(by_id[nid]["final"])
+        assert w.min() >= -0.2 and w.max() <= 4.2
+    assert np.asarray(by_id["n0"]["final"]).max() > 0.3  # n0 pulled off target 0
 
 
 def test_run_multiprocess_rejects_bad_kill_index():

@@ -164,6 +164,71 @@ def test_make_folder_cache_prefix(tmp_path):
     assert isinstance(make_folder("cache+memory://"), CachingFolder)
 
 
+# --- WeightStore decoded-update cache ----------------------------------------
+
+
+@pytest.mark.parametrize("inner_factory", ["memory", "disk"])
+def test_weightstore_pull_skips_decode_for_unchanged_peers(inner_factory, tmp_path):
+    """The decode-side twin of CachingFolder: a peer whose deposit carries an
+    unchanged version token is served from the decoded-update cache — no npz
+    decode, exact counts asserted."""
+    folder = InMemoryFolder() if inner_factory == "memory" else DiskFolder(str(tmp_path))
+    writer = WeightStore(folder)
+    reader = WeightStore(folder)
+    rng = np.random.default_rng(11)
+    p1, p2 = _params(rng), _params(rng)
+    writer.push(NodeUpdate(p1, num_examples=1, node_id="n1", counter=0))
+    writer.push(NodeUpdate(p2, num_examples=1, node_id="n2", counter=0))
+
+    assert len(reader.pull()) == 2
+    assert (reader.decode_misses, reader.decode_hits) == (2, 0)
+    assert len(reader.pull()) == 2          # nothing changed: all hits
+    assert (reader.decode_misses, reader.decode_hits) == (2, 2)
+
+    writer.push(NodeUpdate(_sparse_step(p1, rng), num_examples=1, node_id="n1", counter=1))
+    pulled = {u.node_id: u for u in reader.pull()}
+    assert pulled["n1"].counter == 1        # fresh blob was decoded, not stale-served
+    assert (reader.decode_misses, reader.decode_hits) == (3, 3)  # n1 miss, n2 hit
+
+
+def test_weightstore_decode_cache_behind_caching_folder(tmp_path):
+    """Stacked fast paths: CachingFolder skips the download, the decode cache
+    skips the npz decode — the second pull costs neither."""
+    disk = DiskFolder(str(tmp_path))
+    cached = CachingFolder(disk)
+    writer = WeightStore(disk)
+    reader = WeightStore(cached)
+    rng = np.random.default_rng(12)
+    writer.push(NodeUpdate(_params(rng), num_examples=1, node_id="n", counter=0))
+    assert len(reader.pull()) == 1
+    fetched = cached.bytes_fetched
+    assert len(reader.pull()) == 1
+    assert reader.decode_hits == 1
+    assert cached.bytes_fetched == fetched  # decode hit never even touched get()
+
+
+def test_weightstore_decode_cache_is_bounded():
+    folder = InMemoryFolder()
+    store = WeightStore(folder, decode_cache_entries=2)
+    rng = np.random.default_rng(13)
+    for i in range(5):
+        store.push(NodeUpdate(_params(rng), num_examples=1, node_id=f"n{i}", counter=0))
+    store.pull()
+    assert len(store._decoded_latest) == 2  # LRU-bounded, not fleet-sized
+    store.clear()
+    assert len(store._decoded_latest) == 0
+
+
+def test_weightstore_decode_cache_disabled():
+    folder = InMemoryFolder()
+    store = WeightStore(folder, decode_cache_entries=0)
+    store.push(NodeUpdate({"w": np.ones((3,), np.float32)}, num_examples=1,
+                          node_id="n", counter=0))
+    store.pull()
+    store.pull()
+    assert store.decode_hits == 0
+
+
 # --- WeightStore delta transport --------------------------------------------
 
 
