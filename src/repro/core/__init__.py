@@ -19,6 +19,7 @@ from .gossip import (
 from .node import AsyncFederatedNode, FederationTimeout, SyncFederatedNode
 from .partition import partition_dataset, partition_sequence_dataset, skewed_assignment
 from .serialize import (
+    FlatUpdate,
     GroupSummary,
     NodeUpdate,
     deserialize_group_summary,
@@ -29,6 +30,7 @@ from .serialize import (
     serialize_update,
     serialize_update_delta,
 )
+from .tree import LeafSpec
 from .simulation import (
     ClientResult,
     ProcessCrashed,
@@ -68,6 +70,8 @@ __all__ = [
     "Callback",
     "FederatedCallback",
     "NodeUpdate",
+    "FlatUpdate",
+    "LeafSpec",
     "GroupSummary",
     "serialize_update",
     "deserialize_update",

@@ -52,10 +52,16 @@ import re
 import threading
 from typing import Callable, Iterable, Mapping, Sequence
 
+import numpy as np
+
 from .serialize import (
+    COMPRESSIONS,
+    FlatDecodeUnsupported,
+    FlatUpdate,
     GroupSummary,
     NodeUpdate,
     content_hash,
+    decode_params_flat,
     deserialize_group_summary,
     serialize_group_summary,
 )
@@ -246,6 +252,8 @@ class ShardedWeightStore:
         keep_history: bool = False,
         rebase_every: int = 10,
         delta_density_threshold: float = 0.5,
+        topk_fraction: float = 0.01,
+        compress: str = "none",
         decode_cache_entries: int = 256,
     ):
         if isinstance(folders, str):
@@ -259,6 +267,17 @@ class ShardedWeightStore:
         if transport not in TRANSPORTS:
             raise ValueError(f"unknown transport {transport!r}; options: {TRANSPORTS}")
         self.transport = transport
+        # fail fast, like WeightStore: per-group stores are built lazily on
+        # first push, far too late to learn compress= was misspelled
+        if compress not in COMPRESSIONS:
+            raise ValueError(f"unknown compress {compress!r}; options: {COMPRESSIONS}")
+        if compress == "zstd":
+            from .serialize import _zstd_module
+
+            if _zstd_module() is None:
+                raise ImportError("compress='zstd' requires a zstd module (zstandard)")
+        if not 0.0 < topk_fraction <= 1.0:
+            raise ValueError(f"topk_fraction must be in (0, 1], got {topk_fraction}")
         if gossip_fanout < 1:
             raise ValueError(f"gossip_fanout must be >= 1, got {gossip_fanout}")
         self.gossip_fanout = gossip_fanout
@@ -270,8 +289,14 @@ class ShardedWeightStore:
         self._store_kwargs = dict(
             rebase_every=rebase_every,
             delta_density_threshold=delta_density_threshold,
+            topk_fraction=topk_fraction,
+            compress=compress,
             decode_cache_entries=decode_cache_entries,
         )
+        # interned LeafSpecs for summary decode (shared across group folders —
+        # a summary key names its exact bytes, so layouts interned here are
+        # valid wherever the blob was copied by gossip)
+        self._specs: dict = {}
         self._stores: dict[int, WeightStore] = {}
         self._lock = threading.Lock()
         self._push_seq = 0  # paces the empty-group rechecks in _forward
@@ -299,6 +324,9 @@ class ShardedWeightStore:
         # instrumentation
         self.num_summary_refreshes = 0
         self.num_summary_forwards = 0
+        # summary-layer wire traffic (refresh deposits + ring-forward copies);
+        # per-group latest/base/history bytes live on the per-group stores
+        self.summary_bytes_written = 0
 
     # -- routing -------------------------------------------------------------
     def group_of(self, node_id: str) -> int:
@@ -393,6 +421,29 @@ class ShardedWeightStore:
                     continue
         return None
 
+    @staticmethod
+    def _group_mean(updates: list[NodeUpdate], weights: list[int]):
+        """Example-weighted mean of the group's latest params. When the store
+        pulled spec-sharing FlatUpdates (the steady state), this is one
+        vectorized matvec over stacked flats; mixed structures fall back to
+        the per-leaf tree mean."""
+        first = updates[0]
+        spec = getattr(first, "spec", None)
+        if spec is not None and all(
+            getattr(u, "spec", None) is not None and spec.compatible(u.spec)
+            for u in updates
+        ):
+            coeffs = np.asarray(weights, np.float64)
+            coeffs = (coeffs / coeffs.sum()).astype(np.float32)
+            # in-place accumulation: no (K, N) stack transient on the push path
+            out = np.multiply(updates[0].flat, coeffs[0])
+            scratch = np.empty_like(out)
+            for c, u in zip(coeffs[1:], updates[1:]):
+                np.multiply(u.flat, c, out=scratch)
+                out += scratch
+            return spec.unflatten(out)
+        return tree_weighted_mean([u.params for u in updates], weights)
+
     def _refresh_summary(self, group: int) -> None:
         """Recompute ``group``'s own summary from its latest set and deposit it
         if fresher than what the folder already holds. Every pushing node runs
@@ -412,15 +463,16 @@ class ShardedWeightStore:
             return
         weights = [max(1, u.num_examples) for u in updates]
         summary = GroupSummary(
-            params=tree_weighted_mean([u.params for u in updates], weights),
+            params=self._group_mean(updates, weights),
             num_examples=sum(weights),
             origin=group,
             version=version,
             version_vector=vv,
             timestamp=max(u.timestamp for u in updates),
         )
-        blob = serialize_group_summary(summary)
+        blob = serialize_group_summary(summary, compress=self._store_kwargs["compress"])
         folder.put(_summary_key(group, version, content_hash(blob)), blob)
+        self.summary_bytes_written += len(blob)
         self._replace_summaries(folder, current)
         self.num_summary_refreshes += 1
 
@@ -462,6 +514,7 @@ class ShardedWeightStore:
                 if blob is None:  # GC'd under us — a racing writer is fresher
                     continue
                 target_folder.put(key, blob)
+                self.summary_bytes_written += len(blob)
                 self._replace_summaries(target_folder, have)
                 self.num_summary_forwards += 1
             if populated:
@@ -471,6 +524,50 @@ class ShardedWeightStore:
                     break
             else:
                 self._assumed_empty.add(target)
+
+    def _decode_summary(self, blob: bytes) -> NodeUpdate | None:
+        """Summary blob → pseudo-peer update, decoded straight into a flat
+        vector (a ``FlatUpdate`` sharing this store's interned specs) so that
+        downstream client-side aggregation stays on the flat hot path; falls
+        back to the tree decode for non-f32-embeddable params."""
+        try:
+            spec, flat, meta = decode_params_flat(blob, self._specs)
+            if "summary_of" not in meta:
+                return None
+            origin = int(meta["summary_of"])
+            version_vector = meta.get("version_vector", {})
+            return FlatUpdate(
+                flat, spec,
+                num_examples=int(meta["num_examples"]),
+                node_id=f"{GROUP_PEER_PREFIX}{origin}",
+                # Node-counter units (freshest member's counter), NOT the
+                # version scalar: staleness-aware strategies (FedAsync)
+                # compare this against their own epoch counter.
+                counter=max((int(v) for v in version_vector.values()), default=0),
+                timestamp=float(meta.get("timestamp", 0.0)),
+                metrics={"summary_of": origin,
+                         "summary_version": int(meta["version"])},
+            )
+        except FlatDecodeUnsupported:
+            pass
+        except (ValueError, KeyError, ImportError):
+            # ImportError: a zstd-wrapped summary forwarded from a group whose
+            # writer has a zstd module, read by a node without one — skip it
+            # (eventual consistency), never crash the pull.
+            return None
+        try:
+            summary = deserialize_group_summary(blob)
+        except (ValueError, KeyError, ImportError):
+            return None
+        return NodeUpdate(
+            params=summary.params,
+            num_examples=summary.num_examples,
+            node_id=f"{GROUP_PEER_PREFIX}{summary.origin}",
+            counter=max(summary.version_vector.values(), default=0),
+            timestamp=summary.timestamp,
+            metrics={"summary_of": summary.origin,
+                     "summary_version": summary.version},
+        )
 
     def _peer_summaries(self, group: int, exclude: str) -> list[NodeUpdate]:
         """Foreign-group summaries in ``group``'s folder as pseudo-peer
@@ -505,22 +602,9 @@ class ShardedWeightStore:
             blob = folder.get(key)
             if blob is None:
                 continue
-            try:
-                summary = deserialize_group_summary(blob)
-            except (ValueError, KeyError):
+            update = self._decode_summary(blob)
+            if update is None:
                 continue
-            update = NodeUpdate(
-                params=summary.params,
-                num_examples=summary.num_examples,
-                node_id=f"{GROUP_PEER_PREFIX}{summary.origin}",
-                # Node-counter units (freshest member's counter), NOT the
-                # version scalar: staleness-aware strategies (FedAsync)
-                # compare this against their own epoch counter.
-                counter=max(summary.version_vector.values(), default=0),
-                timestamp=summary.timestamp,
-                metrics={"summary_of": summary.origin,
-                         "summary_version": summary.version},
-            )
             self._summary_cache.put(key, update)
             out.append(update)
         self._served[exclude] = served
@@ -616,13 +700,20 @@ class ShardedWeightStore:
         self._window.clear()
         self._served.clear()
         self._rotation_pending.clear()
+        self._specs.clear()
 
     def cache_stats(self) -> dict[str, int]:
-        """Aggregate decode-cache counters across the per-group stores."""
+        """Aggregate decode-cache + byte counters across the per-group stores,
+        including the gossip summary traffic (refreshes + ring forwards) —
+        often the dominant wire cost at fleet scale."""
         hits = misses = 0
+        written = self.summary_bytes_written
         with self._lock:
             stores = list(self._stores.values())
         for store in stores:
             hits += store.decode_hits
             misses += store.decode_misses
-        return {"decode_hits": hits, "decode_misses": misses}
+            written += store.bytes_written
+        return {"decode_hits": hits, "decode_misses": misses,
+                "bytes_written": written,
+                "summary_bytes_written": self.summary_bytes_written}

@@ -10,6 +10,11 @@ after pushing round-t weights the client blocks until all K participants have
 deposited round-t weights, then everybody aggregates the identical set
 locally. A ``timeout`` makes single-node failure observable instead of a
 deadlock (the paper's operational criticism of synchronous FL).
+
+Nodes are transparent to the flat-vector hot path: the store pulls
+``FlatUpdate``s (contiguous f32 vectors sharing an interned ``LeafSpec``),
+the strategies aggregate them vectorized, and the pytree the trainer receives
+back is materialized exactly once at this boundary.
 """
 from __future__ import annotations
 
@@ -77,6 +82,19 @@ class _BaseNode:
         self.num_pulls = 0
         self.num_skipped_pulls = 0
         self.num_aggregations = 0
+
+    def transport_stats(self) -> dict[str, int]:
+        """Wire-level counters from the underlying store — bytes deposited and
+        decode-cache hits/misses — in one shape regardless of store kind, so
+        transport experiments read a single dict per node."""
+        store = self.store
+        if hasattr(store, "cache_stats"):  # ShardedWeightStore aggregates
+            return store.cache_stats()
+        return {
+            "decode_hits": store.decode_hits,
+            "decode_misses": store.decode_misses,
+            "bytes_written": store.bytes_written,
+        }
 
     def _push(self, params: PyTree, num_examples: int, metrics: dict | None = None) -> NodeUpdate:
         update = NodeUpdate(

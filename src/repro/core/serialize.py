@@ -18,10 +18,59 @@ from typing import Any
 import jax
 import numpy as np
 
-from .tree import PyTree, path_str
+from .tree import LeafSpec, PyTree, path_str
 
 _META_KEY = "__meta__"
 _SEP = "|"  # npz keys cannot contain '/' reliably across tools; use '|'
+
+# zstd frame magic — lets deserializers sniff a zstd-wrapped npz envelope
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+COMPRESSIONS = ("none", "npz", "zstd")
+
+
+_ZSTD_MODULE: object = None  # cached binding; False = probed and absent
+
+
+def _zstd_module():
+    """The first importable zstd binding, or None (offline containers).
+    Cached: the import probe runs once per process, not per blob. Compressor
+    contexts are still built per call — zstandard contexts are not
+    thread-safe, and stores are shared across threads."""
+    global _ZSTD_MODULE
+    if _ZSTD_MODULE is None:
+        import importlib
+
+        for name in ("zstandard", "zstd", "compression.zstd"):
+            try:
+                _ZSTD_MODULE = importlib.import_module(name)
+                break
+            except ImportError:
+                continue
+        else:
+            _ZSTD_MODULE = False
+    return _ZSTD_MODULE or None
+
+
+def _zstd_compress(blob: bytes) -> bytes:
+    mod = _zstd_module()
+    if mod is None:
+        raise ImportError("compress='zstd' requires a zstd module (zstandard)")
+    if hasattr(mod, "ZstdCompressor"):  # zstandard
+        return mod.ZstdCompressor().compress(blob)
+    return mod.compress(blob)
+
+def maybe_decompress(blob: bytes) -> bytes:
+    """Undo the optional zstd wire wrapping; readers stay format-agnostic.
+    (``savez_compressed`` needs no sniffing — np.load handles it natively.)"""
+    if blob[:4] != _ZSTD_MAGIC:
+        return blob
+    mod = _zstd_module()
+    if mod is None:
+        raise ImportError("blob is zstd-compressed but no zstd module is available")
+    if hasattr(mod, "ZstdDecompressor"):  # zstandard
+        return mod.ZstdDecompressor().decompress(blob)
+    return mod.decompress(blob)
 
 
 @dataclass
@@ -34,6 +83,40 @@ class NodeUpdate:
     counter: int = 0  # client-local epoch counter (no global round exists)
     timestamp: float = 0.0  # virtual or wall time, for staleness strategies
     metrics: dict = field(default_factory=dict)
+
+
+class FlatUpdate(NodeUpdate):
+    """A ``NodeUpdate`` whose params live as one contiguous f32 vector plus a
+    shared ``LeafSpec``. ``params`` materializes the pytree lazily (and caches
+    it), so every existing reader keeps working; flat-aware consumers (the
+    vectorized strategies) grab ``flat``/``spec`` directly and never touch a
+    nested dict. Treat both the flat vector and the materialized tree as
+    read-only — they may be shared via the store's decode cache."""
+
+    def __init__(self, flat: np.ndarray, spec: LeafSpec, *, num_examples: int,
+                 node_id: str, counter: int = 0, timestamp: float = 0.0,
+                 metrics: dict | None = None):
+        self.flat = np.asarray(flat, np.float32).reshape(-1)
+        self.spec = spec
+        self._tree: PyTree | None = None
+        NodeUpdate.__init__(
+            self, params=None, num_examples=num_examples, node_id=node_id,
+            counter=counter, timestamp=timestamp, metrics=metrics or {},
+        )
+
+    @property
+    def params(self) -> PyTree:
+        if self._tree is None:
+            self._tree = self.spec.unflatten(self.flat)
+        return self._tree
+
+    @params.setter
+    def params(self, value) -> None:  # dataclass __init__ assigns params=None
+        self._tree = value
+
+    def __repr__(self) -> str:  # avoid materializing the tree for debugging
+        return (f"FlatUpdate(node_id={self.node_id!r}, counter={self.counter}, "
+                f"num_examples={self.num_examples}, spec={self.spec!r})")
 
 
 def _wire_leaf(leaf) -> tuple[np.ndarray, str | None]:
@@ -65,20 +148,30 @@ def _rebuild_tree(order, dtypes, get_leaf) -> dict:
 
 
 def _pack_npz(arrays: dict[str, np.ndarray], order: list[str], dtypes: dict[str, str],
-              meta: dict[str, Any] | None) -> bytes:
+              meta: dict[str, Any] | None, *, compress: str = "none") -> bytes:
     """The one wire envelope: leaf arrays + __order__/__dtypes__ under a JSON
     __meta__ entry, zipped into an npz. Full and delta blobs both go through
-    here so envelope changes cannot desynchronize the two formats."""
+    here so envelope changes cannot desynchronize the two formats.
+
+    ``compress``: 'none' (stored npz), 'npz' (deflate via savez_compressed —
+    np.load decodes it natively), or 'zstd' (whole-blob zstd frame, sniffed by
+    ``maybe_decompress``)."""
+    if compress not in COMPRESSIONS:
+        raise ValueError(f"unknown compress {compress!r}; options: {COMPRESSIONS}")
     meta_blob = dict(meta or {})
     meta_blob["__order__"] = order
     meta_blob["__dtypes__"] = dtypes
     arrays[_META_KEY] = np.frombuffer(json.dumps(meta_blob).encode(), dtype=np.uint8)
     buf = io.BytesIO()
-    np.savez(buf, **arrays)
-    return buf.getvalue()
+    (np.savez_compressed if compress == "npz" else np.savez)(buf, **arrays)
+    blob = buf.getvalue()
+    if compress == "zstd":
+        blob = _zstd_compress(blob)
+    return blob
 
 
-def serialize_params(params: PyTree, meta: dict[str, Any] | None = None) -> bytes:
+def serialize_params(params: PyTree, meta: dict[str, Any] | None = None, *,
+                     compress: str = "none") -> bytes:
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(params)[0]
     arrays: dict[str, np.ndarray] = {}
     order: list[str] = []
@@ -90,17 +183,153 @@ def serialize_params(params: PyTree, meta: dict[str, Any] | None = None) -> byte
             dtypes[key] = original_dtype
         arrays[key] = arr
         order.append(key)
-    return _pack_npz(arrays, order, dtypes, meta)
+    return _pack_npz(arrays, order, dtypes, meta, compress=compress)
 
 
 def deserialize_params(blob: bytes) -> tuple[PyTree, dict[str, Any]]:
     """Returns (nested-dict params, meta). Key paths 'a|b|c' rebuild nesting."""
-    with np.load(io.BytesIO(blob)) as data:
+    with np.load(io.BytesIO(maybe_decompress(blob))) as data:
         meta = json.loads(bytes(data[_META_KEY].tobytes()).decode())
         order = meta.pop("__order__")
         dtypes = meta.pop("__dtypes__", {})
         tree = _rebuild_tree(order, dtypes, lambda key: data[key])
     return tree, meta
+
+
+# --- flat decode: npz blob → one preallocated f32 vector ---------------------
+#
+# The read side of the flat hot path. Instead of rebuilding a nested dict leaf
+# by leaf, a blob is decoded *directly into one flat f32 vector* laid out by a
+# LeafSpec derived from the blob's own __order__/__dtypes__ metadata. Specs are
+# interned in a caller-owned table, so every update a store decodes for the
+# same model shares one spec instance and aggregation can stack flats with an
+# identity check instead of a structural comparison.
+
+
+class FlatDecodeUnsupported(ValueError):
+    """Blob holds leaves a flat f32 vector cannot represent losslessly
+    (int/f64 wire arrays) — callers fall back to the per-leaf tree decode."""
+
+
+def _restored_dtype(name: str) -> np.dtype:
+    import ml_dtypes
+
+    return np.dtype(getattr(ml_dtypes, name))
+
+
+def _spec_table_key(order, dtypes, quantized, wire_dtypes=()) -> tuple:
+    """Structure identity for spec interning. ``wire_dtypes`` (the native
+    npz array dtypes, in leaf order) must participate: same-structure f16 and
+    f32 models are indistinguishable by order + ``__dtypes__`` alone (that
+    map only records ml_dtypes restores), and sharing one spec across them
+    would silently retype leaves on unflatten."""
+    return ("q" if quantized else "f", tuple(order),
+            tuple(sorted(dtypes.items())), tuple(wire_dtypes))
+
+
+def _build_wire_spec(order, dtypes, shapes_by_key, quantized) -> LeafSpec:
+    """LeafSpec for a wire structure, in the *canonical* (rebuilt-dict flatten)
+    leaf order — identical to the order a tree-path reader's pytree would
+    flatten to, so flat and tree readers agree on layout byte-for-byte."""
+    skeleton = _rebuild_tree(list(shapes_by_key), {}, lambda key: 0)
+    canon_paths, treedef = jax.tree_util.tree_flatten_with_path(skeleton)
+    paths, shapes, dts = [], [], []
+    for path, _ in canon_paths:
+        p = path_str(path)
+        key = p.replace("/", _SEP)
+        paths.append(p)
+        shapes.append(shapes_by_key[key][0])
+        if quantized:
+            dts.append(np.dtype(np.float32))  # dequantized leaves are f32
+        elif key in dtypes:
+            dts.append(_restored_dtype(dtypes[key]))
+        else:
+            dts.append(shapes_by_key[key][1])
+    return LeafSpec(paths, shapes, dts, treedef)
+
+
+def _wire_keys(spec: LeafSpec) -> tuple[str, ...]:
+    """Spec paths in wire ('|'-separated) form, cached on the spec object."""
+    keys = getattr(spec, "_wire_keys", None)
+    if keys is None:
+        keys = tuple(p.replace("/", _SEP) for p in spec.paths)
+        spec._wire_keys = keys
+    return keys
+
+
+def decode_params_flat(blob: bytes, specs: dict) -> tuple[LeafSpec, np.ndarray, dict]:
+    """Decode a full or quantized npz blob straight into one preallocated flat
+    f32 vector — no nested-dict rebuild. ``specs`` is a caller-owned interning
+    table (structure key → LeafSpec); pass the same dict across calls so all
+    updates of one model share a spec. Raises ``FlatDecodeUnsupported`` for
+    blobs whose wire arrays don't embed losslessly in f32."""
+    with np.load(io.BytesIO(maybe_decompress(blob))) as data:
+        meta = json.loads(bytes(data[_META_KEY].tobytes()).decode())
+        order = meta.pop("__order__")
+        dtypes = meta.pop("__dtypes__", {})
+        if "delta_of" in meta:
+            raise ValueError("delta blob: use deserialize_update_delta_flat")
+        quantized = bool(meta.get("quantized"))
+        if quantized:
+            # order lists the packed {"q":..., "s":...} tree; the spec
+            # describes the original structure (q-keys with prefix stripped)
+            leaf_keys = [k[2:] for k in order if k.startswith("q" + _SEP)]
+            arrays = {k: data["q" + _SEP + k] for k in leaf_keys}
+        else:
+            leaf_keys = list(order)
+            arrays = {k: data[k] for k in leaf_keys}
+            for k, a in arrays.items():
+                if a.dtype.kind != "f" or a.dtype.itemsize > 4:
+                    raise FlatDecodeUnsupported(
+                        f"leaf {k!r} has wire dtype {a.dtype} (not f32-exact)")
+        wire_dtypes = () if quantized else tuple(arrays[k].dtype.str for k in leaf_keys)
+        skey = _spec_table_key(order, dtypes, quantized, wire_dtypes)
+        spec = specs.get(skey)
+        if spec is not None:
+            # verify shapes still match the interned layout; drift → rebuild
+            # (dtypes are part of the table key, so only shapes can drift)
+            wire = _wire_keys(spec)
+            if len(wire) != len(leaf_keys) or any(
+                tuple(arrays[k].shape) != spec.shapes[spec.index[k.replace(_SEP, "/")]]
+                for k in leaf_keys
+            ):
+                spec = None
+        if spec is None:
+            shapes_by_key = {k: (tuple(a.shape), a.dtype) for k, a in arrays.items()}
+            spec = _build_wire_spec(order, dtypes, shapes_by_key, quantized)
+            specs[skey] = spec
+        flat = spec.empty_flat()
+        index, offsets, sizes = spec.index, spec.offsets, spec.sizes
+        if quantized:
+            for k in leaf_keys:
+                i = index[k.replace(_SEP, "/")]
+                o, n = offsets[i], sizes[i]
+                np.multiply(arrays[k].reshape(-1), np.float32(data["s" + _SEP + k]),
+                            out=flat[o:o + n], dtype=np.float32, casting="unsafe")
+        else:
+            for k in leaf_keys:
+                i = index[k.replace(_SEP, "/")]
+                o, n = offsets[i], sizes[i]
+                flat[o:o + n] = arrays[k].reshape(-1)
+    return spec, flat, meta
+
+
+def flat_update_from_meta(spec: LeafSpec, flat: np.ndarray,
+                          meta: dict[str, Any]) -> FlatUpdate:
+    return FlatUpdate(
+        flat, spec,
+        num_examples=int(meta["num_examples"]),
+        node_id=str(meta["node_id"]),
+        counter=int(meta["counter"]),
+        timestamp=float(meta["timestamp"]),
+        metrics=meta.get("metrics", {}),
+    )
+
+
+def deserialize_update_flat(blob: bytes, specs: dict) -> FlatUpdate:
+    """Full/quantized blob → FlatUpdate (see ``decode_params_flat``)."""
+    spec, flat, meta = decode_params_flat(blob, specs)
+    return flat_update_from_meta(spec, flat, meta)
 
 
 def canonicalize_params(params: PyTree) -> PyTree:
@@ -135,8 +364,8 @@ def _update_from_meta(params: PyTree, meta: dict[str, Any]) -> NodeUpdate:
     )
 
 
-def serialize_update(update: NodeUpdate) -> bytes:
-    return serialize_params(update.params, meta=_update_meta(update))
+def serialize_update(update: NodeUpdate, *, compress: str = "none") -> bytes:
+    return serialize_params(update.params, meta=_update_meta(update), compress=compress)
 
 
 def deserialize_update(blob: bytes) -> NodeUpdate:
@@ -151,7 +380,7 @@ def content_hash(blob: bytes) -> str:
 def peek_meta(blob: bytes) -> dict[str, Any]:
     """Read only the ``__meta__`` entry of a serialized blob (cheap dispatch:
     full vs quantized vs delta) without materializing the weight arrays."""
-    with np.load(io.BytesIO(blob)) as data:
+    with np.load(io.BytesIO(maybe_decompress(blob))) as data:
         return json.loads(bytes(data[_META_KEY].tobytes()).decode())
 
 
@@ -178,9 +407,10 @@ class GroupSummary:
     timestamp: float = 0.0      # newest member timestamp (staleness strategies)
 
 
-def serialize_group_summary(summary: GroupSummary) -> bytes:
+def serialize_group_summary(summary: GroupSummary, *, compress: str = "none") -> bytes:
     return serialize_params(
         summary.params,
+        compress=compress,
         meta={
             "summary_of": int(summary.origin),
             "num_examples": int(summary.num_examples),
@@ -220,11 +450,12 @@ def dequantize_leaf(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
     return q.astype(np.float32) * np.float32(scale)
 
 
-def serialize_update_quantized(update: NodeUpdate) -> bytes:
+def serialize_update_quantized(update: NodeUpdate, *, compress: str = "none") -> bytes:
     qtree = jax.tree.map(lambda x: quantize_leaf(np.asarray(x))[0], update.params)
     stree = jax.tree.map(lambda x: quantize_leaf(np.asarray(x))[1], update.params)
     return serialize_params(
-        {"q": qtree, "s": stree}, meta=_update_meta(update, quantized=True)
+        {"q": qtree, "s": stree}, meta=_update_meta(update, quantized=True),
+        compress=compress
     )
 
 
@@ -279,6 +510,95 @@ def delta_density(params: PyTree, base_params: PyTree) -> float:
     return changed / max(total, 1)
 
 
+def deserialize_update_delta_flat(blob: bytes, spec: LeafSpec,
+                                  base_flat: np.ndarray) -> FlatUpdate:
+    """Reconstruct a FlatUpdate from a delta blob by applying its sparse
+    entries in place on a copy of the *flat* base vector — no nested-dict
+    rebuild, no per-leaf tree traversal. Raises ValueError when the blob's
+    structure does not match ``spec`` (caller falls back to the tree path)."""
+    with np.load(io.BytesIO(maybe_decompress(blob))) as data:
+        meta = json.loads(bytes(data[_META_KEY].tobytes()).decode())
+        if "delta_of" not in meta:
+            raise ValueError("not a delta blob")
+        order = meta.pop("__order__")
+        meta.pop("__dtypes__", None)
+        wire = _wire_keys(spec)
+        if len(order) != len(wire) or set(order) != set(wire):
+            raise ValueError("delta structure does not match the base spec")
+        files = set(data.files)
+        flat = np.array(base_flat, dtype=np.float32, copy=True)
+        index, offsets, sizes = spec.index, spec.offsets, spec.sizes
+        for key in order:
+            i = index[key.replace(_SEP, "/")]
+            o, n = offsets[i], sizes[i]
+            if _DENSE + key in files:
+                arr = data[_DENSE + key]
+                if arr.size != n:
+                    raise ValueError(f"dense leaf {key!r}: {arr.size} vs {n}")
+                if arr.dtype.kind != "f" or arr.dtype.itemsize > 4:
+                    raise FlatDecodeUnsupported(
+                        f"leaf {key!r} has wire dtype {arr.dtype} (not f32-exact)")
+                flat[o:o + n] = arr.reshape(-1)
+                continue
+            idx = data[_IDX + key]
+            vals = data[_VAL + key]
+            if _SCALE + key in files:
+                vals = dequantize_leaf(vals, data[_SCALE + key])
+            elif vals.size and (vals.dtype.kind != "f" or vals.dtype.itemsize > 4):
+                raise FlatDecodeUnsupported(
+                    f"leaf {key!r} delta values have wire dtype {vals.dtype}")
+            flat[o + idx] = vals
+    return flat_update_from_meta(spec, flat, meta)
+
+
+def serialize_update_delta_from_flat(
+    update: NodeUpdate,
+    spec: LeafSpec,
+    flat: np.ndarray,
+    base_flat: np.ndarray,
+    base_hash: str,
+    *,
+    changed: np.ndarray | None = None,
+    density_threshold: float = 0.5,
+    compress: str = "none",
+) -> bytes:
+    """Encode ``flat`` as a sparse per-leaf diff against ``base_flat`` — the
+    exact wire format of ``serialize_update_delta``, so any reader reconstructs
+    it with zero knowledge of how the writer chose the changed set (this is
+    what makes writer-side top-k/error-feedback policies transparent).
+    ``changed`` (sorted flat indices that differ from the base) may be passed
+    when the caller already computed it. Vectorized: the only per-leaf work is
+    emitting npz entries, which the wire format requires anyway."""
+    flat = np.asarray(flat, np.float32).reshape(-1)
+    if flat.size != spec.num_params:
+        raise ValueError(f"{flat.size} params vs spec's {spec.num_params}")
+    if changed is None:
+        changed = np.flatnonzero(flat != np.asarray(base_flat).reshape(-1))
+    arrays: dict[str, np.ndarray] = {}
+    order: list[str] = []
+    dtypes: dict[str, str] = {}
+    keys = _wire_keys(spec)
+    # one vectorized split of the changed set into per-leaf segments
+    cuts = np.searchsorted(changed, spec.bounds)
+    for i, key in enumerate(keys):
+        order.append(key)
+        dt = spec.dtypes[i]
+        wire_dt, restored = _wire_leaf(np.empty((0,), dt))
+        if restored:
+            dtypes[key] = restored
+        o, n = spec.offsets[i], spec.sizes[i]
+        seg = changed[cuts[i]:cuts[i + 1]]
+        if seg.size > density_threshold * n:
+            arrays[_DENSE + key] = np.asarray(
+                flat[o:o + n], dtype=wire_dt.dtype).reshape(spec.shapes[i])
+            continue
+        idx = (seg - o).astype(np.int64 if n > 2**31 else np.int32)
+        arrays[_IDX + key] = idx
+        arrays[_VAL + key] = np.asarray(flat[seg], dtype=wire_dt.dtype)
+    return _pack_npz(arrays, order, dtypes,
+                     _update_meta(update, delta_of=base_hash), compress=compress)
+
+
 def serialize_update_delta(
     update: NodeUpdate,
     base_params: PyTree,
@@ -286,6 +606,7 @@ def serialize_update_delta(
     *,
     quantize: bool = False,
     density_threshold: float = 0.5,
+    compress: str = "none",
 ) -> bytes:
     """Encode ``update`` as a sparse diff against ``base_params`` (whose full
     serialized blob hashes to ``base_hash``). Leaves denser than
@@ -319,7 +640,8 @@ def serialize_update_delta(
             arrays[_SCALE + key] = np.asarray(scale)
         else:
             arrays[_VAL + key] = vals
-    return _pack_npz(arrays, order, dtypes, _update_meta(update, delta_of=base_hash))
+    return _pack_npz(arrays, order, dtypes, _update_meta(update, delta_of=base_hash),
+                     compress=compress)
 
 
 def deserialize_update_delta(blob: bytes, base_params: PyTree) -> NodeUpdate:
@@ -327,7 +649,7 @@ def deserialize_update_delta(blob: bytes, base_params: PyTree) -> NodeUpdate:
     was diffed against (the caller is responsible for matching ``delta_of`` to
     the base blob's content hash; see WeightStore)."""
     base = _flat_wire(base_params)
-    with np.load(io.BytesIO(blob)) as data:
+    with np.load(io.BytesIO(maybe_decompress(blob))) as data:
         meta = json.loads(bytes(data[_META_KEY].tobytes()).decode())
         if "delta_of" not in meta:
             raise ValueError("not a delta blob")

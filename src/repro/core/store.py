@@ -35,19 +35,28 @@ import urllib.parse
 from abc import ABC, abstractmethod
 from typing import Any
 
+import numpy as np
+
 from .serialize import (
+    COMPRESSIONS,
+    FlatDecodeUnsupported,
     NodeUpdate,
     canonicalize_params,
     content_hash,
+    decode_params_flat,
     deserialize_update,
     deserialize_update_delta,
+    deserialize_update_delta_flat,
     deserialize_update_quantized,
+    flat_update_from_meta,
+    maybe_decompress,
     peek_meta,
     serialize_update,
     serialize_update_delta,
+    serialize_update_delta_from_flat,
     serialize_update_quantized,
 )
-from .tree import tree_size_bytes
+from .tree import LeafSpec, tree_size_bytes
 
 def _exclusion(exclude: "str | tuple[str, ...] | None"):
     """Normalize a state_hash exclusion — None, one exact key, or a tuple of
@@ -429,7 +438,7 @@ class CachingFolder(SharedFolder):
             }
 
 
-TRANSPORTS = ("full", "quantized", "delta", "delta_q")
+TRANSPORTS = ("full", "quantized", "delta", "delta_q", "topk")
 
 
 class WeightStore:
@@ -450,16 +459,30 @@ class WeightStore:
         smaller than a full deposit (``delta_density_threshold`` governs the
         per-leaf dense fallback inside the wire format).
       * ``"delta_q"``   — delta with int8-quantized changed values (lossy).
+      * ``"topk"``      — writer-side top-k sparsification with client-side
+        error feedback, computed on flat vectors (one ``argpartition`` per
+        push): only the ``topk_fraction`` largest-magnitude entry changes ship
+        each push, and everything unsent accumulates in a residual that is
+        flushed by later pushes / the periodic rebase. On the wire these are
+        ordinary delta blobs — readers need no top-k awareness.
 
-    Blobs are self-describing (dispatch on ``__meta__``), so readers decode
-    any transport regardless of their own setting.
+    ``compress`` wraps every deposited blob: ``"none"`` (stored npz, the
+    default), ``"npz"`` (deflate), or ``"zstd"`` (whole-blob zstd frame,
+    requires a zstd module). Readers sniff the format, so heterogeneous
+    compression settings coexist in one folder. ``bytes_written`` counts every
+    blob this store deposited (the write-side twin of ``CachingFolder``'s
+    ``bytes_fetched``).
 
     ``pull``/``pull_node`` keep a bounded decoded-update cache keyed on the
     folder's per-key ``version`` token, so a peer whose deposit is unchanged
     costs one metadata lookup instead of an npz decode (the decode-side twin
-    of ``CachingFolder``'s download skip). Cached ``NodeUpdate`` objects are
-    returned by reference — treat pulled params as read-only, as every caller
-    in this repo already does.
+    of ``CachingFolder``'s download skip). Decodes land *directly in flat
+    f32 vectors* (``FlatUpdate`` with a shared per-structure ``LeafSpec``):
+    no nested-dict rebuild, and the vectorized strategies aggregate the
+    pulled flats without any per-leaf hop. Blobs whose leaves cannot embed
+    losslessly in f32 (int/f64) fall back to the per-leaf tree decode.
+    Cached update objects are returned by reference — treat pulled params
+    as read-only, as every caller in this repo already does.
     """
 
     def __init__(
@@ -471,22 +494,41 @@ class WeightStore:
         transport: str | None = None,
         rebase_every: int = 10,
         delta_density_threshold: float = 0.5,
+        topk_fraction: float = 0.01,
+        compress: str = "none",
         decode_cache_entries: int = 64,
     ):
         if transport is None:
             transport = "quantized" if quantized else "full"
         if transport not in TRANSPORTS:
             raise ValueError(f"unknown transport {transport!r}; options: {TRANSPORTS}")
+        if compress not in COMPRESSIONS:
+            raise ValueError(f"unknown compress {compress!r}; options: {COMPRESSIONS}")
+        if compress == "zstd":
+            from .serialize import _zstd_module
+
+            if _zstd_module() is None:
+                raise ImportError("compress='zstd' requires a zstd module (zstandard)")
+        if not 0.0 < topk_fraction <= 1.0:
+            raise ValueError(f"topk_fraction must be in (0, 1], got {topk_fraction}")
         self.folder = folder
         self.transport = transport
         self.quantized = transport == "quantized"
         self.keep_history = keep_history
         self.rebase_every = rebase_every
         self.delta_density_threshold = delta_density_threshold
+        self.topk_fraction = topk_fraction
+        self.compress = compress
         # writer state: node -> (base_hash, base_params, pushes since rebase)
         self._bases: dict[str, tuple[str, Any, int]] = {}
-        # reader state: base_hash -> decoded base params (bounded)
+        # topk writer state: node -> (base_hash, spec, base_flat, acc_flat, age)
+        # where acc is the error-feedback accumulator = what readers see.
+        self._topk: dict[str, tuple] = {}
+        # reader state: base_hash -> (spec, base_flat) | (None, base_params)
         self._decoded_bases: dict[str, Any] = {}
+        # interned LeafSpecs: one per decoded structure, shared by every
+        # FlatUpdate this store returns (spec identity == layout identity)
+        self._specs: dict = {}
         # decoded-update cache: latest/<node> key -> (version token, update).
         # Companion to CachingFolder: that layer skips the *download* of an
         # unchanged blob, this one skips the npz *decode* — keyed on the same
@@ -495,20 +537,28 @@ class WeightStore:
         self._decoded_latest = _LruCache(decode_cache_entries)  # key -> (version, update)
         self.decode_hits = 0
         self.decode_misses = 0
+        self.bytes_written = 0
+
+    def _put(self, key: str, blob: bytes) -> None:
+        self.folder.put(key, blob)
+        self.bytes_written += len(blob)
 
     # -- push ---------------------------------------------------------------
     def push(self, update: NodeUpdate) -> None:
         is_delta = False
-        if self.transport in ("delta", "delta_q"):
+        if self.transport == "topk":
+            blob, is_delta = self._push_topk(update)
+        elif self.transport in ("delta", "delta_q"):
             blob, is_delta = self._push_delta(update)
         else:
             ser = serialize_update_quantized if self.quantized else serialize_update
-            blob = ser(update)
-            self.folder.put(f"latest/{update.node_id}", blob)
+            blob = ser(update, compress=self.compress)
+            self._put(f"latest/{update.node_id}", blob)
         if self.keep_history:
             if is_delta:
-                blob = serialize_update(update)  # history stays self-contained
-            self.folder.put(f"history/{update.node_id}/{update.counter:06d}", blob)
+                # history stays self-contained (and, for topk, exact)
+                blob = serialize_update(update, compress=self.compress)
+            self._put(f"history/{update.node_id}/{update.counter:06d}", blob)
 
     def _push_delta(self, update: NodeUpdate) -> tuple[bytes, bool]:
         """Deposit a delta when worthwhile, else rebase with a full blob;
@@ -524,6 +574,7 @@ class WeightStore:
                     h,
                     quantize=self.transport == "delta_q",
                     density_threshold=self.delta_density_threshold,
+                    compress=self.compress,
                 )
             except ValueError:  # tree structure changed vs the base → rebase
                 blob = None
@@ -531,22 +582,30 @@ class WeightStore:
             # than a full deposit (dense drift — e.g. aggregated params were
             # adopted), rebase instead of shipping a delta that saves nothing.
             if blob is not None and len(blob) < tree_size_bytes(update.params):
-                self.folder.put(f"latest/{node}", blob)
+                self._put(f"latest/{node}", blob)
                 self._bases[node] = (h, base_params, age + 1)
                 return blob, True
-        full = serialize_update(update)
+        full, h = self._deposit_base(node, update, base[0] if base is not None else None)
+        self._bases[node] = (h, canonicalize_params(update.params), 0)
+        return full, False
+
+    def _deposit_base(self, node: str, update: NodeUpdate,
+                      old_hash: str | None) -> tuple[bytes, str]:
+        """Rebase: deposit a full blob under base/<node>/<hash> AND latest/,
+        GC superseded bases. Shared by the delta and topk writers."""
+        full = serialize_update(update, compress=self.compress)
         h = content_hash(full)
         # Base first, then latest: a reader that sees the new latest can
         # always resolve its base. Old bases are GC'd only after the new
         # full latest is in place (readers of the old delta retry into
         # the new full blob).
-        self.folder.put(f"base/{node}/{h}", full)
-        self.folder.put(f"latest/{node}", full)
-        if base is not None:
+        self._put(f"base/{node}/{h}", full)
+        self._put(f"latest/{node}", full)
+        if old_hash is not None:
             # common case: we know the one base we deposited — delete it
             # directly instead of listing the whole folder
-            if base[0] != h:
-                self.folder.delete(f"base/{node}/{base[0]}")
+            if old_hash != h:
+                self.folder.delete(f"base/{node}/{old_hash}")
         else:
             # first rebase in this process: sweep leftovers from a previous
             # incarnation (e.g. a crashed client restarting under its id)
@@ -555,7 +614,64 @@ class WeightStore:
                 # contain '/', so a plain startswith would cross node borders
                 if key.rpartition("/")[0] == f"base/{node}" and key != f"base/{node}/{h}":
                     self.folder.delete(key)
-        self._bases[node] = (h, canonicalize_params(update.params), 0)
+        return full, h
+
+    def _push_topk(self, update: NodeUpdate) -> tuple[bytes, bool]:
+        """Error-feedback top-k on flat vectors. The writer tracks ``acc`` —
+        the state readers reconstruct (base + every shipped change). Each push
+        ships only the ``topk_fraction`` largest entries of ``new - acc``; the
+        rest stays in the implicit residual and is drained by later pushes.
+        Wire format: ordinary delta blobs against the content-hashed base, so
+        readers are oblivious to the selection policy. Non-f32-embeddable
+        models (int/f64 leaves) rebase on every push (lossless, just not
+        sparse)."""
+        node = update.node_id
+        state = self._topk.get(node)
+        spec = None
+        if state is not None:
+            spec = state[1]
+            if not spec.describes(update.params):
+                spec, state = None, None
+        if spec is None:
+            spec = LeafSpec.of(update.params)
+        if state is not None and state[4] < self.rebase_every and spec.f32_exact:
+            h, _, base_flat, acc, age = state
+            try:
+                new_flat = spec.flatten(update.params)
+            except ValueError:  # shape drift under the same treedef → rebase
+                new_flat = None
+            if new_flat is not None:
+                v = new_flat - acc
+                k = max(1, int(self.topk_fraction * v.size))
+                nz = int(np.count_nonzero(v))
+                if nz > k:
+                    keep = np.argpartition(np.abs(v), v.size - k)[v.size - k:]
+                    acc[keep] = new_flat[keep]
+                else:
+                    # all changes fit the budget: ship everything (where
+                    # v == 0, acc already equals new_flat — one flat copy)
+                    np.copyto(acc, new_flat)
+                changed = np.flatnonzero(acc != base_flat)
+                blob = serialize_update_delta_from_flat(
+                    update, spec, acc, base_flat, h,
+                    changed=changed,
+                    density_threshold=self.delta_density_threshold,
+                    compress=self.compress,
+                )
+                if len(blob) < tree_size_bytes(update.params):
+                    self._put(f"latest/{node}", blob)
+                    self._topk[node] = (h, spec, base_flat, acc, age + 1)
+                    return blob, True
+        full, h = self._deposit_base(node, update,
+                                     state[0] if state is not None else None)
+        if spec.f32_exact:
+            # acc starts at the wire view of the params — exactly what a
+            # reader decodes from the base blob (f32-exact dtypes guarantee
+            # spec.flatten == the decoded wire values).
+            flat = spec.flatten(update.params)
+            self._topk[node] = (h, spec, flat, flat.copy(), 0)
+        else:
+            self._topk[node] = (h, spec, None, None, self.rebase_every)
         return full, False
 
     # -- state hash fast path -------------------------------------------------
@@ -580,20 +696,48 @@ class WeightStore:
 
     def _decode(self, blob: bytes, node_id: str) -> NodeUpdate | None:
         """Decode a self-describing blob; None when a delta's base cannot be
-        resolved yet (caller refetches — the writer is mid-rebase)."""
+        resolved yet (caller refetches — the writer is mid-rebase).
+
+        The hot path lands in a flat f32 vector (``FlatUpdate`` sharing an
+        interned ``LeafSpec``); blobs that cannot embed losslessly in f32
+        (int/f64 leaves) take the per-leaf tree decode instead."""
+        # Decompress exactly once up front: peek_meta and every decode below
+        # call maybe_decompress themselves, which is a no-op on raw npz bytes
+        # but a full second (or third) zstd pass on a still-wrapped blob.
+        blob = maybe_decompress(blob)
         meta = peek_meta(blob)
         base_hash = meta.get("delta_of")
         if base_hash:
-            base_params = self._decoded_bases.get(base_hash)
-            if base_params is None:
+            base = self._decoded_bases.get(base_hash)
+            if base is None:
                 base_blob = self.folder.get(f"base/{node_id}/{base_hash}")
+                # hash the RAW fetched bytes — writers hash what they deposit
                 if base_blob is None or content_hash(base_blob) != base_hash:
                     return None
-                base_params = deserialize_update(base_blob).params
+                base_blob = maybe_decompress(base_blob)
+                try:
+                    spec, base_flat, _ = decode_params_flat(base_blob, self._specs)
+                    base = (spec, base_flat)
+                except FlatDecodeUnsupported:
+                    base = (None, deserialize_update(base_blob).params)
                 if len(self._decoded_bases) > 16:
                     self._decoded_bases.pop(next(iter(self._decoded_bases)))
-                self._decoded_bases[base_hash] = base_params
-            return deserialize_update_delta(blob, base_params)
+                self._decoded_bases[base_hash] = base
+            spec, base_state = base
+            if spec is not None:
+                try:
+                    return deserialize_update_delta_flat(blob, spec, base_state)
+                except FlatDecodeUnsupported:
+                    pass  # odd-dtype delta values: fall through to tree path
+                except ValueError:
+                    pass  # structure drift vs the base spec: tree path
+                return deserialize_update_delta(blob, spec.unflatten(base_state))
+            return deserialize_update_delta(blob, base_state)
+        try:
+            spec, flat, meta = decode_params_flat(blob, self._specs)
+            return flat_update_from_meta(spec, flat, meta)
+        except FlatDecodeUnsupported:
+            pass
         if meta.get("quantized"):
             return deserialize_update_quantized(blob)
         return deserialize_update(blob)
@@ -659,8 +803,10 @@ class WeightStore:
         for key in self.folder.keys():
             self.folder.delete(key)
         self._bases.clear()
+        self._topk.clear()
         self._decoded_bases.clear()
         self._decoded_latest.clear()
+        self._specs.clear()
 
 
 def make_folder(uri: str):

@@ -8,54 +8,182 @@ Reddi et al. 2021) therefore keep their momentum/moment buffers *on the
 client*, which is exactly the paper's "each client may implement its own
 aggregation strategy" property.
 
+Flat-vector hot path (this module's execution model): the store pulls
+``FlatUpdate``s — contiguous f32 vectors sharing one interned ``LeafSpec``
+per model structure — and every strategy aggregates them *vectorized over
+stacked flats*. There is no per-leaf Python loop anywhere on the steady-state
+path: peers' rows are copied into a reusable (K, N) stack only when their
+flat actually changed (decode-cache hits contribute zero copies), every
+combine is one BLAS matvec or one Pallas ``fed_agg`` kernel launch
+(``use_kernel=True``, plumbed through the ``Strategy`` base so *every*
+strategy honors it), and adaptive strategies keep their momentum/moment
+buffers as flat vectors with a fused pseudo-gradient+moment kernel
+(``fed_opt``). The aggregate is unflattened into the model's pytree exactly
+once, at the trainer boundary. The per-leaf reference implementations live in
+``strategies_ref.py`` (property-tested to match within 1e-6).
+
+Aggregation arithmetic is float32 — the same contract as the Pallas kernels
+and the wire transports (quantized/delta values are f32-centric). Models with
+leaves that don't embed exactly in f32 (int, f64) still aggregate (cast in,
+cast back out), matching the PR-2 ``use_kernel`` behavior; PartialFedAvg
+additionally passes such *personal* leaves through untouched.
+
 Beyond-paper extensions (paper §5 limitations #2, and future work):
-  * ``FedAsync``   — staleness-discounted mixing (Xie et al. 2019).
+  * ``FedAsync``   — staleness-discounted mixing (Xie et al. 2019), executed
+    as a single linear combination (the per-peer lerp chain factorizes into
+    per-client coefficients — one fused pass instead of K).
   * ``FedBuff``    — buffered aggregation (Nguyen et al. 2022).
   * ``PartialFedAvg`` — partial model updates (Pillutla et al. 2022): only a
-    filtered subset of leaves federates; the rest stay personal.
+    filtered subset of leaves federates; the rest stay personal (a cached
+    boolean mask over the flat index space).
 """
 from __future__ import annotations
 
-import math
 import re
 from abc import ABC, abstractmethod
 from typing import Sequence
 
-import jax
 import numpy as np
 
 from .serialize import NodeUpdate
-from .tree import (
-    PyTree,
-    tree_scale,
-    tree_sub,
-    tree_weighted_mean,
-    tree_zeros_like,
-)
+from .tree import LeafSpec, PyTree
 
 
-def _weighted_mean_updates(updates: Sequence[NodeUpdate], *, use_kernel: bool = False) -> PyTree:
-    trees = [u.params for u in updates]
-    weights = [max(1, u.num_examples) for u in updates]
-    if use_kernel and len(trees) > 1:
-        # Hot path: fused Pallas weighted aggregation over stacked flats.
+def _combine_flat(stacked: np.ndarray, coeffs: np.ndarray, *,
+                  use_kernel: bool = False,
+                  out: np.ndarray | None = None) -> np.ndarray:
+    """Σ_k coeffs[k]·stacked[k] — THE aggregation primitive. One BLAS matvec
+    (single pass over the (K, N) stack) or one generalized ``fed_agg`` kernel
+    launch; the coefficients need not be normalized, which is what lets
+    FedAsync's lerp chain and weighted means share this code. ``out`` (a warm
+    buffer) skips the fresh-page allocation, which at 10^8 params costs more
+    than the matvec itself."""
+    if use_kernel and stacked.shape[0] > 1:
         from repro.kernels.fed_agg import ops as fed_agg_ops
 
-        return fed_agg_ops.aggregate_pytrees(trees, weights)
-    return tree_weighted_mean(trees, weights)
+        return np.asarray(fed_agg_ops.aggregate_flat(stacked, coeffs))
+    if out is None:
+        out = np.empty(stacked.shape[1], np.float32)
+    return np.dot(coeffs, stacked, out=out)
+
+
+class _StackCache:
+    """Reusable (K, N) stacked-flats buffer. A row is recopied only when its
+    source flat is a *different array object* than last round — the store's
+    decode cache returns the same ndarray for an unchanged peer, so in steady
+    state stacking costs zero copies (only the caller's own fresh row moves).
+    Tree-only updates (no flat) are flattened straight into their row — the
+    allocation-free trainer boundary."""
+
+    def __init__(self):
+        self._rows: list = []  # source ndarray per row (held → ids stay valid)
+        self._buf: np.ndarray | None = None
+
+    def stack(self, spec: LeafSpec, updates: Sequence[NodeUpdate]) -> np.ndarray:
+        k, n = len(updates), spec.num_params
+        buf = self._buf
+        if buf is None or buf.shape != (k, n):
+            buf = np.empty((k, n), np.float32)
+            self._buf = buf
+            self._rows = [None] * k
+        for i, u in enumerate(updates):
+            flat = getattr(u, "flat", None)
+            if flat is not None and spec.compatible(u.spec):
+                if self._rows[i] is not flat:
+                    buf[i] = flat
+                self._rows[i] = flat
+            else:
+                spec.flatten_into(u.params, buf[i])
+                self._rows[i] = None  # trees are rewritten every round
+        return buf
 
 
 class Strategy(ABC):
-    """Client-side aggregation strategy."""
+    """Client-side aggregation strategy (flat-vector execution).
+
+    ``use_kernel`` lives on the base class so every subclass — not just
+    FedAvg — routes its linear combinations through the Pallas ``fed_agg`` /
+    ``fed_opt`` kernels when asked.
+    """
 
     name: str = "strategy"
+
+    def __init__(self, *, use_kernel: bool = False, reuse_output: bool = False):
+        self.use_kernel = use_kernel
+        # reuse_output=True returns trees that VIEW a strategy-owned buffer,
+        # valid only until the next aggregate() call — the steady-state fast
+        # path for trainers that consume the aggregate immediately (e.g. copy
+        # it to device). Default False: every aggregate returns fresh storage.
+        self.reuse_output = reuse_output
+        self._spec: LeafSpec | None = None
+        self._stack = _StackCache()
+        self._bufs: dict[str, np.ndarray] = {}
+
+    # -- flat plumbing -------------------------------------------------------
+    def _resolve_spec(self, own: NodeUpdate) -> LeafSpec:
+        """The layout everything is aggregated in: own's spec when the store
+        handed us a FlatUpdate, else a spec built once and reused while own's
+        structure is stable."""
+        spec = getattr(own, "spec", None)
+        if spec is not None:
+            self._spec = spec
+            return spec
+        spec = self._spec
+        if spec is not None and spec.describes(own.params):
+            return spec
+        spec = LeafSpec.of(own.params)
+        self._spec = spec
+        return spec
+
+    def _flat_of(self, u: NodeUpdate, spec: LeafSpec) -> np.ndarray:
+        flat = getattr(u, "flat", None)
+        if flat is not None and spec.compatible(u.spec):
+            return flat
+        return spec.flatten(u.params)
+
+    def _stacked(self, spec: LeafSpec, updates: Sequence[NodeUpdate]) -> np.ndarray:
+        return self._stack.stack(spec, updates)
+
+    def _buffer(self, name: str, spec: LeafSpec) -> np.ndarray:
+        """Named warm scratch vector (internal use — never escapes unless
+        ``reuse_output`` opted in)."""
+        buf = self._bufs.get(name)
+        if buf is None or buf.size != spec.num_params:
+            buf = np.empty(spec.num_params, np.float32)
+            self._bufs[name] = buf
+        return buf
+
+    def _out_buf(self, spec: LeafSpec) -> np.ndarray | None:
+        return self._buffer("out", spec) if self.reuse_output else None
+
+    def _emit(self, spec: LeafSpec, state: np.ndarray) -> np.ndarray:
+        """Detach internal state for the caller: a fresh copy by default, the
+        reusable out buffer under ``reuse_output``."""
+        if self.reuse_output:
+            out = self._buffer("out", spec)
+            np.copyto(out, state)
+            return out
+        return state.copy()
+
+    def _mean_coeffs(self, updates: Sequence[NodeUpdate]) -> np.ndarray:
+        weights = np.asarray([max(1, u.num_examples) for u in updates], np.float32)
+        return weights / weights.sum()
+
+    def _weighted_mean(self, spec: LeafSpec, updates: Sequence[NodeUpdate], *,
+                       out: np.ndarray | None = None) -> np.ndarray:
+        """Example-count weighted mean (FedAvg, eq. 1) over stacked flats."""
+        return _combine_flat(self._stacked(spec, updates),
+                             self._mean_coeffs(updates),
+                             use_kernel=self.use_kernel, out=out)
 
     @abstractmethod
     def aggregate(self, own: NodeUpdate, peers: Sequence[NodeUpdate]) -> PyTree:
         """Combine own latest params with peer updates → new local params."""
 
-    def reset(self) -> None:  # stateful subclasses override
-        pass
+    def reset(self) -> None:  # stateful subclasses extend
+        self._spec = None
+        self._stack = _StackCache()
+        self._bufs.clear()
 
 
 class FedAvg(Strategy):
@@ -63,11 +191,10 @@ class FedAvg(Strategy):
 
     name = "fedavg"
 
-    def __init__(self, *, use_kernel: bool = False):
-        self.use_kernel = use_kernel
-
     def aggregate(self, own: NodeUpdate, peers: Sequence[NodeUpdate]) -> PyTree:
-        return _weighted_mean_updates([own, *peers], use_kernel=self.use_kernel)
+        spec = self._resolve_spec(own)
+        return spec.unflatten(
+            self._weighted_mean(spec, [own, *peers], out=self._out_buf(spec)))
 
 
 class _FedOpt(Strategy):
@@ -75,38 +202,63 @@ class _FedOpt(Strategy):
 
     Maintains a client-local estimate x of the global model. Each aggregation
     computes the pseudo-gradient Δ = x − avg(updates) and applies a server
-    optimizer step to x. ``x`` is lazily initialized from the first own update.
+    optimizer step to x. ``x``/``m``/``v`` are flat f32 vectors, lazily
+    initialized from the first own update; with ``use_kernel`` the whole
+    avg→Δ→moments→step chain runs as the fused ``fed_opt`` Pallas kernel
+    (one pass over the stack, no (K, N) temporaries).
     """
 
-    def __init__(self, server_lr: float = 1.0, beta1: float = 0.9, beta2: float = 0.99, tau: float = 1e-3):
+    variant: str = "adam"
+
+    def __init__(self, server_lr: float = 1.0, beta1: float = 0.9,
+                 beta2: float = 0.99, tau: float = 1e-3, *, use_kernel: bool = False):
+        super().__init__(use_kernel=use_kernel)
         self.server_lr = server_lr
         self.beta1 = beta1
         self.beta2 = beta2
         self.tau = tau
-        self.x: PyTree | None = None
-        self.m: PyTree | None = None
-        self.v: PyTree | None = None
+        self.x: np.ndarray | None = None
+        self.m: np.ndarray | None = None
+        self.v: np.ndarray | None = None
 
     def reset(self) -> None:
+        super().reset()
         self.x = self.m = self.v = None
 
     def _update_v(self, v: np.ndarray, d2: np.ndarray) -> np.ndarray:
         raise NotImplementedError
 
     def aggregate(self, own: NodeUpdate, peers: Sequence[NodeUpdate]) -> PyTree:
-        avg = _weighted_mean_updates([own, *peers])
+        spec = self._resolve_spec(own)
+        if self.x is not None and self.x.size != spec.num_params:
+            self.x = self.m = self.v = None  # structure changed → reinit
+        updates = [own, *peers]
+        stacked = self._stacked(spec, updates)
+        coeffs = self._mean_coeffs(updates)
         if self.x is None:
-            self.x = jax.tree.map(np.asarray, own.params)
-            self.m = tree_zeros_like(self.x)
-            self.v = tree_zeros_like(self.x)
-        delta = tree_sub(self.x, avg)  # pseudo-gradient
-        self.m = jax.tree.map(lambda m, d: self.beta1 * m + (1 - self.beta1) * d, self.m, delta)
-        self.v = jax.tree.map(lambda v, d: self._update_v(v, d * d), self.v, delta)
-        self.x = jax.tree.map(
-            lambda x, m, v: x - self.server_lr * m / (np.sqrt(v) + self.tau),
-            self.x, self.m, self.v,
-        )
-        return jax.tree.map(np.copy, self.x)
+            self.x = np.array(self._flat_of(own, spec), np.float32, copy=True)
+            self.m = np.zeros_like(self.x)
+            self.v = np.zeros_like(self.x)
+        if self.use_kernel:
+            from repro.kernels.fed_agg import ops as fed_agg_ops
+
+            self.x, self.m, self.v = fed_agg_ops.fed_opt_flat(
+                stacked, coeffs, self.x, self.m, self.v,
+                variant=self.variant, server_lr=self.server_lr,
+                beta1=self.beta1, beta2=self.beta2, tau=self.tau,
+            )
+            # fed_opt_flat returned freshly allocated state nothing aliases,
+            # and the kernel path replaces (never mutates) it next round — no
+            # detach copy needed
+            return spec.unflatten(self.x)
+        else:
+            avg = _combine_flat(stacked, coeffs, out=self._buffer("avg", spec))
+            d = self.x - avg  # pseudo-gradient
+            self.m *= self.beta1
+            self.m += (1.0 - self.beta1) * d
+            self.v = self._update_v(self.v, d * d)
+            self.x -= self.server_lr * self.m / (np.sqrt(self.v) + self.tau)
+        return spec.unflatten(self._emit(spec, self.x))  # in-place state: detach
 
 
 class FedAvgM(Strategy):
@@ -114,28 +266,37 @@ class FedAvgM(Strategy):
 
     name = "fedavgm"
 
-    def __init__(self, server_lr: float = 1.0, momentum: float = 0.9):
+    def __init__(self, server_lr: float = 1.0, momentum: float = 0.9, *,
+                 use_kernel: bool = False):
+        super().__init__(use_kernel=use_kernel)
         self.server_lr = server_lr
         self.momentum = momentum
-        self.x: PyTree | None = None
-        self.buf: PyTree | None = None
+        self.x: np.ndarray | None = None
+        self.buf: np.ndarray | None = None
 
     def reset(self) -> None:
+        super().reset()
         self.x = self.buf = None
 
     def aggregate(self, own: NodeUpdate, peers: Sequence[NodeUpdate]) -> PyTree:
-        avg = _weighted_mean_updates([own, *peers])
+        spec = self._resolve_spec(own)
+        if self.x is not None and self.x.size != spec.num_params:
+            self.x = self.buf = None
+        avg = self._weighted_mean(spec, [own, *peers], out=self._buffer("avg", spec))
         if self.x is None:
-            self.x = jax.tree.map(np.asarray, own.params)
-            self.buf = tree_zeros_like(self.x)
-        delta = tree_sub(self.x, avg)
-        self.buf = jax.tree.map(lambda b, d: self.momentum * b + d, self.buf, delta)
-        self.x = jax.tree.map(lambda x, b: x - self.server_lr * b, self.x, self.buf)
-        return jax.tree.map(np.copy, self.x)
+            self.x = np.array(self._flat_of(own, spec), np.float32, copy=True)
+            self.buf = np.zeros_like(self.x)
+        # buf = momentum·buf + (x − avg);  x -= lr·buf   (all in place)
+        self.buf *= self.momentum
+        self.buf += self.x
+        self.buf -= avg
+        self.x -= self.server_lr * self.buf
+        return spec.unflatten(self._emit(spec, self.x))
 
 
 class FedAdam(_FedOpt):
     name = "fedadam"
+    variant = "adam"
 
     def _update_v(self, v, d2):
         return self.beta2 * v + (1 - self.beta2) * d2
@@ -143,6 +304,7 @@ class FedAdam(_FedOpt):
 
 class FedYogi(_FedOpt):
     name = "fedyogi"
+    variant = "yogi"
 
     def _update_v(self, v, d2):
         return v - (1 - self.beta2) * d2 * np.sign(v - d2)
@@ -150,6 +312,7 @@ class FedYogi(_FedOpt):
 
 class FedAdagrad(_FedOpt):
     name = "fedadagrad"
+    variant = "adagrad"
 
     def _update_v(self, v, d2):
         return v + d2
@@ -158,14 +321,21 @@ class FedAdagrad(_FedOpt):
 class FedAsync(Strategy):
     """Staleness-aware asynchronous mixing (Xie et al. 2019, FedAsync).
 
-    new = (1 - α_k) * own + α_k * peer, applied per peer in arrival order,
-    with α_k = alpha * s(staleness) and s a polynomial/hinge discount.
+    new = (1 − α_k)·current + α_k·peer_k, applied per peer in arrival order,
+    with α_k = alpha·s(staleness) and s a polynomial/hinge discount.
     Staleness is measured in counter lag (peer.counter vs own.counter).
+
+    The sequential lerp chain factorizes exactly into one linear combination:
+    c_own = Π_j (1 − α_j) and c_k = α_k·Π_{j>k} (1 − α_j), so the whole chain
+    is a single fused pass over the stacked flats (per-*client* work stays a
+    trivial K-length Python loop computing coefficients).
     """
 
     name = "fedasync"
 
-    def __init__(self, alpha: float = 0.6, staleness_fn: str = "poly", a: float = 0.5, b: int = 4):
+    def __init__(self, alpha: float = 0.6, staleness_fn: str = "poly",
+                 a: float = 0.5, b: int = 4, *, use_kernel: bool = False):
+        super().__init__(use_kernel=use_kernel)
         self.alpha = alpha
         self.staleness_fn = staleness_fn
         self.a = a
@@ -182,15 +352,23 @@ class FedAsync(Strategy):
         raise ValueError(f"unknown staleness_fn {self.staleness_fn}")
 
     def aggregate(self, own: NodeUpdate, peers: Sequence[NodeUpdate]) -> PyTree:
-        current = own.params
+        if not peers:
+            return own.params
+        spec = self._resolve_spec(own)
+        alphas = []
         for peer in peers:
-            staleness = float(own.counter - peer.counter)
-            a_eff = self.alpha * self._discount(staleness)
-            a_eff = min(max(a_eff, 0.0), 1.0)
-            current = jax.tree.map(
-                lambda c, p, a=a_eff: (1.0 - a) * c + a * p, current, peer.params
-            )
-        return current
+            a_eff = self.alpha * self._discount(float(own.counter - peer.counter))
+            alphas.append(min(max(a_eff, 0.0), 1.0))
+        coeffs = np.empty(len(peers) + 1, np.float32)
+        suffix = 1.0  # Π_{j>k} (1 − α_j), built back to front
+        for k in range(len(peers) - 1, -1, -1):
+            coeffs[k + 1] = alphas[k] * suffix
+            suffix *= 1.0 - alphas[k]
+        coeffs[0] = suffix
+        stacked = self._stacked(spec, [own, *peers])
+        return spec.unflatten(
+            _combine_flat(stacked, coeffs, use_kernel=self.use_kernel,
+                          out=self._out_buf(spec)))
 
 
 class FedBuff(Strategy):
@@ -203,52 +381,94 @@ class FedBuff(Strategy):
 
     name = "fedbuff"
 
-    def __init__(self, buffer_size: int = 3):
+    def __init__(self, buffer_size: int = 3, *, use_kernel: bool = False):
+        super().__init__(use_kernel=use_kernel)
         self.buffer_size = buffer_size
-        self._buffer: dict[str, NodeUpdate] = {}
+        self._pending: dict[str, NodeUpdate] = {}
         self._seen_counters: dict[str, int] = {}
 
     def reset(self) -> None:
-        self._buffer.clear()
+        super().reset()
+        self._pending.clear()
         self._seen_counters.clear()
 
     def aggregate(self, own: NodeUpdate, peers: Sequence[NodeUpdate]) -> PyTree:
         for peer in peers:
             if self._seen_counters.get(peer.node_id, -1) < peer.counter:
-                self._buffer[peer.node_id] = peer
+                self._pending[peer.node_id] = peer
                 self._seen_counters[peer.node_id] = peer.counter
-        self._buffer[own.node_id] = own
-        if len(self._buffer) < self.buffer_size:
+        self._pending[own.node_id] = own
+        if len(self._pending) < self.buffer_size:
             return own.params
-        updates = list(self._buffer.values())
-        self._buffer.clear()
-        return _weighted_mean_updates(updates)
+        updates = list(self._pending.values())
+        self._pending.clear()
+        spec = self._resolve_spec(own)
+        return spec.unflatten(
+            self._weighted_mean(spec, updates, out=self._out_buf(spec)))
 
 
 class PartialFedAvg(Strategy):
     """Partial model personalization (Pillutla et al. 2022): only leaves whose
     path matches ``shared_pattern`` federate; everything else stays personal.
+
+    The leaf filter compiles once per spec into a boolean mask over the flat
+    index space (per-leaf work at spec-construction time only); each aggregate
+    is then the usual fused weighted mean plus one vectorized select.
     """
 
     name = "partial_fedavg"
 
-    def __init__(self, shared_pattern: str = ".*", *, use_kernel: bool = False):
+    def __init__(self, shared_pattern: str = ".*", *, use_kernel: bool = False,
+                 reuse_output: bool = False):
+        super().__init__(use_kernel=use_kernel, reuse_output=reuse_output)
         self.pattern = re.compile(shared_pattern)
-        self.base = FedAvg(use_kernel=use_kernel)
+        self._mask: np.ndarray | None = None
+        self._leaf_mask: list[bool] | None = None
+        self._mask_key: str | None = None
+
+    def _mask_for(self, spec: LeafSpec) -> np.ndarray:
+        if self._mask_key != spec.key:
+            mask = np.zeros(spec.num_params, bool)
+            leaf_mask = []
+            for path, off, n in zip(spec.paths, spec.offsets, spec.sizes):
+                shared = bool(self.pattern.search(path))
+                leaf_mask.append(shared)
+                if shared:
+                    mask[off:off + n] = True
+            self._mask = mask
+            self._leaf_mask = leaf_mask
+            self._mask_key = spec.key
+        return self._mask
 
     def aggregate(self, own: NodeUpdate, peers: Sequence[NodeUpdate]) -> PyTree:
-        avg = self.base.aggregate(own, peers)
-        flat_own = jax.tree_util.tree_flatten_with_path(own.params)
-        flat_avg = jax.tree.flatten(avg)[0]
-        out_leaves = []
-        from .tree import path_str
+        spec = self._resolve_spec(own)
+        updates = [own, *peers]
+        stacked = self._stacked(spec, updates)
+        avg = _combine_flat(stacked, self._mean_coeffs(updates),
+                            use_kernel=self.use_kernel,
+                            out=self._buffer("avg", spec))
+        # stacked[0] is own's flat (just written by the stack fill) — reuse it
+        # for the personal entries instead of re-flattening own
+        out = self._out_buf(spec)
+        if out is None:
+            out = np.empty(spec.num_params, np.float32)
+        np.copyto(out, stacked[0])
+        np.copyto(out, avg, where=self._mask_for(spec))
+        out_tree = spec.unflatten(out)
+        if spec.f32_exact:
+            return out_tree
+        # Personal leaves of non-f32-embeddable models (int/f64) must pass
+        # through untouched — never rounded through the f32 flat. Swap own's
+        # original leaf objects back in (per-leaf, but only on this exact-
+        # dtype fallback, never on the f32 hot path).
+        import jax
 
-        for (path, own_leaf), avg_leaf in zip(flat_own[0], flat_avg):
-            if self.pattern.search(path_str(path)):
-                out_leaves.append(avg_leaf)
-            else:
-                out_leaves.append(own_leaf)
-        return jax.tree.unflatten(flat_own[1], out_leaves)
+        agg_leaves = jax.tree.leaves(out_tree)
+        own_leaves = jax.tree.leaves(own.params)
+        return jax.tree.unflatten(spec.treedef, [
+            a if shared else o
+            for a, o, shared in zip(agg_leaves, own_leaves, self._leaf_mask)
+        ])
 
 
 STRATEGIES = {

@@ -1,0 +1,232 @@
+"""Per-leaf (tree-path) reference implementations of the aggregation
+strategies — the PR-2 semantics, kept verbatim as the oracle.
+
+``core/strategies.py`` now runs every strategy vectorized over flat parameter
+vectors (the federation hot path). This module preserves the original
+per-leaf ``jax.tree.map`` implementations so that
+
+  * property tests can assert the flat path matches the tree path within
+    1e-6 over multi-round stateful sequences (momentum/moment buffers,
+    FedBuff buffering, FedAsync staleness), and
+  * ``benchmarks/run.py --only agg`` can measure the speedup of the flat
+    path against exactly the code it replaced.
+
+Do not grow this module: it is a frozen reference, not a second backend.
+"""
+from __future__ import annotations
+
+import re
+from abc import ABC, abstractmethod
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from .serialize import NodeUpdate
+from .tree import (
+    PyTree,
+    tree_sub,
+    tree_weighted_mean,
+    tree_zeros_like,
+)
+
+
+def _weighted_mean_updates(updates: Sequence[NodeUpdate], *, use_kernel: bool = False) -> PyTree:
+    trees = [u.params for u in updates]
+    weights = [max(1, u.num_examples) for u in updates]
+    if use_kernel and len(trees) > 1:
+        # PR-2 kernel hot path: re-flattens every tree on every call.
+        from repro.kernels.fed_agg import ops as fed_agg_ops
+
+        return fed_agg_ops.aggregate_pytrees(trees, weights)
+    return tree_weighted_mean(trees, weights)
+
+
+class RefStrategy(ABC):
+    """Client-side aggregation strategy (per-leaf reference)."""
+
+    name: str = "strategy"
+
+    @abstractmethod
+    def aggregate(self, own: NodeUpdate, peers: Sequence[NodeUpdate]) -> PyTree:
+        """Combine own latest params with peer updates → new local params."""
+
+    def reset(self) -> None:  # stateful subclasses override
+        pass
+
+
+class FedAvgRef(RefStrategy):
+    name = "fedavg"
+
+    def __init__(self, *, use_kernel: bool = False):
+        self.use_kernel = use_kernel
+
+    def aggregate(self, own: NodeUpdate, peers: Sequence[NodeUpdate]) -> PyTree:
+        return _weighted_mean_updates([own, *peers], use_kernel=self.use_kernel)
+
+
+class _FedOptRef(RefStrategy):
+    def __init__(self, server_lr: float = 1.0, beta1: float = 0.9, beta2: float = 0.99, tau: float = 1e-3):
+        self.server_lr = server_lr
+        self.beta1 = beta1
+        self.beta2 = beta2
+        self.tau = tau
+        self.x: PyTree | None = None
+        self.m: PyTree | None = None
+        self.v: PyTree | None = None
+
+    def reset(self) -> None:
+        self.x = self.m = self.v = None
+
+    def _update_v(self, v: np.ndarray, d2: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def aggregate(self, own: NodeUpdate, peers: Sequence[NodeUpdate]) -> PyTree:
+        avg = _weighted_mean_updates([own, *peers])
+        if self.x is None:
+            self.x = jax.tree.map(np.asarray, own.params)
+            self.m = tree_zeros_like(self.x)
+            self.v = tree_zeros_like(self.x)
+        delta = tree_sub(self.x, avg)  # pseudo-gradient
+        self.m = jax.tree.map(lambda m, d: self.beta1 * m + (1 - self.beta1) * d, self.m, delta)
+        self.v = jax.tree.map(lambda v, d: self._update_v(v, d * d), self.v, delta)
+        self.x = jax.tree.map(
+            lambda x, m, v: x - self.server_lr * m / (np.sqrt(v) + self.tau),
+            self.x, self.m, self.v,
+        )
+        return jax.tree.map(np.copy, self.x)
+
+
+class FedAvgMRef(RefStrategy):
+    name = "fedavgm"
+
+    def __init__(self, server_lr: float = 1.0, momentum: float = 0.9):
+        self.server_lr = server_lr
+        self.momentum = momentum
+        self.x: PyTree | None = None
+        self.buf: PyTree | None = None
+
+    def reset(self) -> None:
+        self.x = self.buf = None
+
+    def aggregate(self, own: NodeUpdate, peers: Sequence[NodeUpdate]) -> PyTree:
+        avg = _weighted_mean_updates([own, *peers])
+        if self.x is None:
+            self.x = jax.tree.map(np.asarray, own.params)
+            self.buf = tree_zeros_like(self.x)
+        delta = tree_sub(self.x, avg)
+        self.buf = jax.tree.map(lambda b, d: self.momentum * b + d, self.buf, delta)
+        self.x = jax.tree.map(lambda x, b: x - self.server_lr * b, self.x, self.buf)
+        return jax.tree.map(np.copy, self.x)
+
+
+class FedAdamRef(_FedOptRef):
+    name = "fedadam"
+
+    def _update_v(self, v, d2):
+        return self.beta2 * v + (1 - self.beta2) * d2
+
+
+class FedYogiRef(_FedOptRef):
+    name = "fedyogi"
+
+    def _update_v(self, v, d2):
+        return v - (1 - self.beta2) * d2 * np.sign(v - d2)
+
+
+class FedAdagradRef(_FedOptRef):
+    name = "fedadagrad"
+
+    def _update_v(self, v, d2):
+        return v + d2
+
+
+class FedAsyncRef(RefStrategy):
+    name = "fedasync"
+
+    def __init__(self, alpha: float = 0.6, staleness_fn: str = "poly", a: float = 0.5, b: int = 4):
+        self.alpha = alpha
+        self.staleness_fn = staleness_fn
+        self.a = a
+        self.b = b
+
+    def _discount(self, staleness: float) -> float:
+        s = max(0.0, staleness)
+        if self.staleness_fn == "poly":
+            return (1.0 + s) ** (-self.a)
+        if self.staleness_fn == "hinge":
+            return 1.0 if s <= self.b else 1.0 / (self.a * (s - self.b) + 1.0)
+        if self.staleness_fn == "const":
+            return 1.0
+        raise ValueError(f"unknown staleness_fn {self.staleness_fn}")
+
+    def aggregate(self, own: NodeUpdate, peers: Sequence[NodeUpdate]) -> PyTree:
+        current = own.params
+        for peer in peers:
+            staleness = float(own.counter - peer.counter)
+            a_eff = self.alpha * self._discount(staleness)
+            a_eff = min(max(a_eff, 0.0), 1.0)
+            current = jax.tree.map(
+                lambda c, p, a=a_eff: (1.0 - a) * c + a * p, current, peer.params
+            )
+        return current
+
+
+class FedBuffRef(RefStrategy):
+    name = "fedbuff"
+
+    def __init__(self, buffer_size: int = 3):
+        self.buffer_size = buffer_size
+        self._buffer: dict[str, NodeUpdate] = {}
+        self._seen_counters: dict[str, int] = {}
+
+    def reset(self) -> None:
+        self._buffer.clear()
+        self._seen_counters.clear()
+
+    def aggregate(self, own: NodeUpdate, peers: Sequence[NodeUpdate]) -> PyTree:
+        for peer in peers:
+            if self._seen_counters.get(peer.node_id, -1) < peer.counter:
+                self._buffer[peer.node_id] = peer
+                self._seen_counters[peer.node_id] = peer.counter
+        self._buffer[own.node_id] = own
+        if len(self._buffer) < self.buffer_size:
+            return own.params
+        updates = list(self._buffer.values())
+        self._buffer.clear()
+        return _weighted_mean_updates(updates)
+
+
+class PartialFedAvgRef(RefStrategy):
+    name = "partial_fedavg"
+
+    def __init__(self, shared_pattern: str = ".*", *, use_kernel: bool = False):
+        self.pattern = re.compile(shared_pattern)
+        self.base = FedAvgRef(use_kernel=use_kernel)
+
+    def aggregate(self, own: NodeUpdate, peers: Sequence[NodeUpdate]) -> PyTree:
+        avg = self.base.aggregate(own, peers)
+        flat_own = jax.tree_util.tree_flatten_with_path(own.params)
+        flat_avg = jax.tree.flatten(avg)[0]
+        out_leaves = []
+        from .tree import path_str
+
+        for (path, own_leaf), avg_leaf in zip(flat_own[0], flat_avg):
+            if self.pattern.search(path_str(path)):
+                out_leaves.append(avg_leaf)
+            else:
+                out_leaves.append(own_leaf)
+        return jax.tree.unflatten(flat_own[1], out_leaves)
+
+
+REF_STRATEGIES = {
+    cls.name: cls
+    for cls in [FedAvgRef, FedAvgMRef, FedAdamRef, FedYogiRef, FedAdagradRef,
+                FedAsyncRef, FedBuffRef, PartialFedAvgRef]
+}
+
+
+def get_ref_strategy(name: str, **kwargs) -> RefStrategy:
+    if name not in REF_STRATEGIES:
+        raise KeyError(f"unknown strategy {name!r}; options: {sorted(REF_STRATEGIES)}")
+    return REF_STRATEGIES[name](**kwargs)

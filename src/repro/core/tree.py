@@ -3,15 +3,131 @@
 All federated aggregation ultimately reduces to weighted sums over pytrees of
 arrays. These helpers keep that logic in one place and let the Pallas
 ``fed_agg`` kernel slot in as the hot path for the flattened representation.
+
+``LeafSpec`` is the contract of the flat-vector federation hot path: the
+paths/shapes/dtypes/offsets of a model's leaves, computed once per structure
+and shared (content-hashed) by every flat vector that layout describes. In
+steady state a federation step touches parameters only as contiguous f32
+vectors — per-leaf Python work happens exactly twice: when a spec is first
+built, and at the trainer boundary where a flat aggregate is unflattened back
+into the model's pytree.
 """
 from __future__ import annotations
 
+import hashlib
 from typing import Any, Callable, Sequence
 
 import jax
 import numpy as np
 
 PyTree = Any
+
+# Dtypes whose every value survives a float32 round-trip: the store may decode
+# such leaves straight into a flat f32 vector and still reconstruct the exact
+# tree a per-leaf reader would (bf16/f8 ship as f32 on the wire already).
+_F32_EXACT = frozenset(
+    {"float32", "float16", "bfloat16", "float8_e4m3fn", "float8_e5m2"}
+)
+
+
+class LeafSpec:
+    """Flat layout of one pytree structure: paths, shapes, dtypes, offsets.
+
+    A spec is immutable once built and content-hashed (``key``), so two specs
+    with equal keys describe byte-compatible flat vectors even when built in
+    different stores or processes. All ``FlatUpdate``s pulled from one store
+    share a single spec instance per structure, which makes the compatibility
+    check on the aggregation hot path an identity comparison.
+    """
+
+    def __init__(self, paths, shapes, dtypes, treedef):
+        self.paths: tuple[str, ...] = tuple(paths)
+        self.shapes: tuple[tuple[int, ...], ...] = tuple(tuple(s) for s in shapes)
+        self.dtypes: tuple[np.dtype, ...] = tuple(np.dtype(d) for d in dtypes)
+        self.treedef = treedef
+        self.sizes: tuple[int, ...] = tuple(int(np.prod(s)) for s in self.shapes)
+        offsets = np.zeros(len(self.sizes) + 1, np.int64)
+        np.cumsum(self.sizes, out=offsets[1:])
+        self.offsets: np.ndarray = offsets[:-1]
+        self.bounds: np.ndarray = offsets  # offsets plus the total, for searchsorted
+        self.num_params: int = int(offsets[-1])
+        self.index: dict[str, int] = {p: i for i, p in enumerate(self.paths)}
+        # True when flatten→unflatten is value-exact (every leaf f32-embeddable)
+        self.f32_exact: bool = all(d.name in _F32_EXACT for d in self.dtypes)
+        self.key: str = hashlib.sha256(
+            repr((self.paths, self.shapes, tuple(d.name for d in self.dtypes))).encode()
+        ).hexdigest()[:16]
+
+    @classmethod
+    def of(cls, tree: PyTree) -> "LeafSpec":
+        leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        paths, shapes, dtypes = [], [], []
+        for path, leaf in leaves_with_paths:
+            arr = np.asarray(leaf)
+            paths.append(path_str(path))
+            shapes.append(arr.shape)
+            dtypes.append(arr.dtype)
+        return cls(paths, shapes, dtypes, treedef)
+
+    def compatible(self, other: "LeafSpec | None") -> bool:
+        return other is not None and (other is self or other.key == self.key)
+
+    def describes(self, tree: PyTree) -> bool:
+        """Cheap steady-state check: same treedef (C-level compare); shape
+        drift under an identical treedef is caught by ``flatten``'s size
+        check."""
+        return jax.tree.structure(tree) == self.treedef
+
+    def flatten(self, tree: PyTree) -> np.ndarray:
+        """One contiguous f32 vector in spec order (single concatenate pass).
+        Per-leaf sizes are validated, so a shape permutation under the same
+        treedef cannot silently produce a mislaid vector."""
+        leaves = jax.tree.leaves(tree)
+        if len(leaves) != len(self.sizes):
+            raise ValueError(f"{len(leaves)} leaves vs spec's {len(self.sizes)}")
+        parts = []
+        for n, leaf in zip(self.sizes, leaves):
+            arr = np.asarray(leaf, np.float32)
+            if arr.size != n:
+                raise ValueError(f"leaf size {arr.size} vs spec's {n}")
+            parts.append(arr.reshape(-1))
+        return np.concatenate(parts) if parts else np.zeros((0,), np.float32)
+
+    def flatten_into(self, tree: PyTree, out: np.ndarray) -> np.ndarray:
+        """Flatten ``tree`` into a caller-provided (warm) f32 buffer — the
+        allocation-free boundary for fresh trainer params entering the flat
+        hot path (fresh 10^8-element allocations cost more in page faults
+        than the aggregation itself)."""
+        leaves = jax.tree.leaves(tree)
+        if len(leaves) != len(self.sizes):
+            raise ValueError(f"{len(leaves)} leaves vs spec's {len(self.sizes)}")
+        if out.shape != (self.num_params,):
+            raise ValueError(f"out shape {out.shape} vs ({self.num_params},)")
+        for o, n, leaf in zip(self.offsets, self.sizes, leaves):
+            arr = np.asarray(leaf)
+            if arr.size != n:
+                raise ValueError(f"leaf size {arr.size} vs spec's {n}")
+            out[o:o + n] = arr.reshape(-1)
+        return out
+
+    def unflatten(self, vec: np.ndarray) -> PyTree:
+        """Flat vector → pytree with original shapes/dtypes. Float32 leaves are
+        *views* into ``vec`` (zero copy); treat them as read-only."""
+        vec = np.asarray(vec).reshape(-1)
+        if vec.size != self.num_params:
+            raise ValueError(f"{vec.size} params vs spec's {self.num_params}")
+        leaves = [
+            np.asarray(vec[o:o + n], dtype=d).reshape(s)
+            for o, n, d, s in zip(self.offsets, self.sizes, self.dtypes, self.shapes)
+        ]
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    def empty_flat(self) -> np.ndarray:
+        return np.empty((self.num_params,), np.float32)
+
+    def __repr__(self) -> str:
+        return (f"LeafSpec(leaves={len(self.paths)}, params={self.num_params}, "
+                f"key={self.key})")
 
 
 def tree_zeros_like(tree: PyTree) -> PyTree:
@@ -117,20 +233,8 @@ def tree_l2_distance(a: PyTree, b: PyTree) -> float:
 def tree_flatten_to_vector(tree: PyTree) -> tuple[np.ndarray, Callable[[np.ndarray], PyTree]]:
     """Flatten a pytree to a single 1-D float vector + an unflatten closure.
 
-    Used to hand aggregation to the Pallas fed_agg kernel, which operates on
-    (num_clients, num_params) stacked flats.
+    Convenience wrapper over ``LeafSpec`` for one-shot callers; code on the
+    federation hot path should build the spec once and reuse it.
     """
-    leaves, treedef = jax.tree.flatten(tree)
-    shapes = [np.shape(l) for l in leaves]
-    dtypes = [np.asarray(l).dtype for l in leaves]
-    sizes = [int(np.prod(s)) for s in shapes]
-    flat = np.concatenate([np.asarray(l, np.float32).reshape(-1) for l in leaves]) if leaves else np.zeros((0,), np.float32)
-
-    def unflatten(vec: np.ndarray) -> PyTree:
-        out, off = [], 0
-        for shape, dtype, size in zip(shapes, dtypes, sizes):
-            out.append(np.asarray(vec[off : off + size], dtype=dtype).reshape(shape))
-            off += size
-        return jax.tree.unflatten(treedef, out)
-
-    return flat, unflatten
+    spec = LeafSpec.of(tree)
+    return spec.flatten(tree), spec.unflatten

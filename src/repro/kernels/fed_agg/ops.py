@@ -1,25 +1,31 @@
-"""Public fed_agg ops: pytree-level weighted aggregation.
+"""Public fed_agg / fed_opt ops: flat-vector aggregation entry points.
 
-``aggregate_pytrees`` is what ``FedAvg(use_kernel=True)`` calls: flatten every
-client's params to one f32 vector, stack, run the kernel, unflatten. On CPU
-the jnp reference is used unless ``force_kernel`` (tests) — interpret-mode
-Pallas over 10^8 elements would be pointlessly slow.
+``aggregate_flat`` is what the vectorized strategies call with
+``use_kernel=True``: one generalized weighted-sum launch over the (K, N)
+stacked client flats. ``fed_opt_flat`` is the fused adaptive-strategy chain
+(FedAdam / FedYogi / FedAdagrad state update in one pass). On CPU the jnp
+references are used unless ``force_kernel`` (tests) — interpret-mode Pallas
+over 10^8 elements would be pointlessly slow.
+
+``aggregate_pytrees`` (the PR-2 entry point — re-flattens every tree on every
+call) is kept for the per-leaf reference path and the benchmark baseline; hot
+code should pull stacked flats from the store instead.
 """
 from __future__ import annotations
 
 from typing import Sequence
 
-import jax
 import numpy as np
 
-from repro.core.tree import PyTree, tree_flatten_to_vector
+from repro.core.tree import LeafSpec, PyTree
 from repro.kernels import on_tpu
 
-from .kernel import fed_agg
-from .ref import fed_agg_ref
+from .kernel import fed_agg, fed_opt
+from .ref import fed_agg_ref, fed_opt_ref
 
 
 def aggregate_flat(stacked, weights, *, force_kernel: bool = False):
+    """(K, N) stacked flats × (K,) coefficients → (N,) Σ_k w_k·x_k."""
     if on_tpu():
         return fed_agg(stacked, weights, interpret=False)
     if force_kernel:
@@ -27,15 +33,32 @@ def aggregate_flat(stacked, weights, *, force_kernel: bool = False):
     return fed_agg_ref(stacked, weights)
 
 
+def fed_opt_flat(stacked, weights, x, m, v, *, variant: str, server_lr: float,
+                 beta1: float, beta2: float, tau: float,
+                 force_kernel: bool = False) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Fused pseudo-gradient + moment + server-step chain over stacked flats;
+    returns numpy (x', m', v')."""
+    kwargs = dict(lr=float(server_lr), b1=float(beta1), b2=float(beta2),
+                  tau=float(tau), variant=variant)
+    if on_tpu():
+        out = fed_opt(stacked, weights, x, m, v, interpret=False, **kwargs)
+    elif force_kernel:
+        out = fed_opt(stacked, weights, x, m, v, interpret=True, **kwargs)
+    else:
+        out = fed_opt_ref(stacked, weights, x, m, v, **kwargs)
+    return tuple(np.asarray(a) for a in out)
+
+
 def aggregate_pytrees(trees: Sequence[PyTree], weights: Sequence[float], *,
                       force_kernel: bool = False) -> PyTree:
-    """Example-count-weighted mean of K parameter pytrees (FedAvg eq. 1)."""
+    """Example-count-weighted mean of K parameter pytrees (FedAvg eq. 1).
+
+    PR-2 compatibility path: flattens every tree per call. The flat hot path
+    (store-pulled ``FlatUpdate``s + ``Strategy`` stack cache) avoids exactly
+    this repeated concat-copy."""
     total = float(sum(weights))
     norm = np.asarray([float(w) / total for w in weights], np.float32)
-    flats, unflatten = [], None
-    for tree in trees:
-        flat, unflatten = tree_flatten_to_vector(tree)
-        flats.append(flat)
-    stacked = np.stack(flats)
+    spec = LeafSpec.of(trees[0])
+    stacked = np.stack([spec.flatten(tree) for tree in trees])
     out = aggregate_flat(stacked, norm, force_kernel=force_kernel)
-    return unflatten(np.asarray(out))
+    return spec.unflatten(np.asarray(out))

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for fed_agg."""
+"""Pure-jnp oracles for fed_agg / fed_opt."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -7,3 +7,22 @@ import jax.numpy as jnp
 def fed_agg_ref(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
     """(K,N) × (K,) → (N,): Σ_k w_k · x_k in f32."""
     return jnp.einsum("k,kn->n", weights.astype(jnp.float32), stacked.astype(jnp.float32))
+
+
+def fed_opt_ref(stacked, weights, x, m, v, *, lr, b1, b2, tau, variant="adam"):
+    """Unfused reference of the adaptive-aggregation chain (Reddi et al. 2021):
+    weighted mean → pseudo-gradient → moment updates → server step."""
+    avg = fed_agg_ref(stacked, weights)
+    d = x.astype(jnp.float32) - avg
+    m = b1 * m.astype(jnp.float32) + (1.0 - b1) * d
+    d2 = d * d
+    v = v.astype(jnp.float32)
+    if variant == "adam":
+        v = b2 * v + (1.0 - b2) * d2
+    elif variant == "yogi":
+        v = v - (1.0 - b2) * d2 * jnp.sign(v - d2)
+    elif variant == "adagrad":
+        v = v + d2
+    else:
+        raise ValueError(f"unknown fed_opt variant {variant!r}")
+    return x - lr * m / (jnp.sqrt(v) + tau), m, v

@@ -1,0 +1,516 @@
+"""Flat-vector hot path ≡ per-leaf tree path.
+
+The PR-3 contract: every strategy executed vectorized over stacked flats
+matches the PR-2 per-leaf reference (``strategies_ref``) within 1e-6 over
+multi-round *stateful* sequences (momentum/moment buffers, FedBuff buffering,
+FedAsync staleness), the store's flat decode reproduces the tree decode
+bitwise for every transport (full/quantized/delta/delta_q/topk), and
+flat↔tree round-trips preserve mixed-dtype pytrees exactly.
+"""
+import numpy as np
+import pytest
+from _hyp import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (
+    CachingFolder,
+    DiskFolder,
+    FlatUpdate,
+    InMemoryFolder,
+    LeafSpec,
+    NodeUpdate,
+    WeightStore,
+)
+from repro.core.serialize import (
+    content_hash,
+    decode_params_flat,
+    deserialize_update,
+    deserialize_update_delta,
+    deserialize_update_quantized,
+    peek_meta,
+    serialize_update,
+)
+from repro.core.strategies import STRATEGIES, FedAvg, FedAvgM, get_strategy
+from repro.core.strategies_ref import REF_STRATEGIES, get_ref_strategy
+
+
+def tree_of(vals, shift=0.0):
+    """A small multi-leaf nested model, deterministic in (vals, shift)."""
+    rng = np.random.default_rng(int(abs(vals[0]) * 1000) % 2**31)
+    return {
+        "enc": {
+            "w": (np.linspace(-1, 1, 12, dtype=np.float32).reshape(4, 3)
+                  * np.float32(vals[0]) + np.float32(shift)),
+            "b": np.full((3,), np.float32(vals[1] % 3.0)),
+        },
+        "head": (rng.normal(size=(5,)).astype(np.float32) * np.float32(0.1)
+                 + np.float32(vals[1])),
+    }
+
+
+def pair(vals, *, n=10, node="x", counter=0, spec=None):
+    """(tree NodeUpdate, FlatUpdate) with identical content — the tree one
+    feeds the reference path, the flat one the vectorized path."""
+    params = tree_of(vals)
+    tree_u = NodeUpdate(params, num_examples=n, node_id=node, counter=counter)
+    spec = spec or LeafSpec.of(params)
+    flat_u = FlatUpdate(spec.flatten(params), spec,
+                        num_examples=n, node_id=node, counter=counter)
+    return tree_u, flat_u, spec
+
+
+STRATEGY_KWARGS = {
+    "fedavg": {},
+    "fedavgm": dict(server_lr=0.7, momentum=0.85),
+    "fedadam": dict(server_lr=0.3, tau=0.05),
+    "fedyogi": dict(server_lr=0.3, tau=0.05),
+    "fedadagrad": dict(server_lr=0.3, tau=0.05),
+    "fedasync": dict(alpha=0.55, staleness_fn="poly", a=0.6),
+    "fedbuff": dict(buffer_size=2),
+    "partial_fedavg": dict(shared_pattern=r"^enc/"),
+}
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    rounds=st.lists(st.lists(st.floats(-2, 2), min_size=2, max_size=8),
+                    min_size=3, max_size=5),
+    ns=st.lists(st.integers(1, 50), min_size=8, max_size=8),
+    lags=st.lists(st.integers(0, 6), min_size=8, max_size=8),
+)
+def test_every_strategy_flat_matches_tree_over_stateful_rounds(rounds, ns, lags):
+    """Multi-round equivalence: the SAME strategy instance carries its state
+    (momentum buffers, FedBuff buffer, FedAsync staleness) across rounds on
+    both paths; results must stay within 1e-6 at every round."""
+    assert sorted(STRATEGIES) == sorted(REF_STRATEGIES)
+    for name in sorted(STRATEGIES):
+        flat_strat = get_strategy(name, **STRATEGY_KWARGS[name])
+        ref_strat = get_ref_strategy(name, **STRATEGY_KWARGS[name])
+        spec = None
+        for r, vals in enumerate(rounds):
+            own_vals, peer_vals = vals[:2], vals[2:]
+            own_t, own_f, spec = pair(own_vals, n=ns[0], node="me",
+                                      counter=r + 6, spec=spec)
+            peers_t, peers_f = [], []
+            for i in range(0, len(peer_vals), 2):
+                pv = peer_vals[i:i + 2]
+                if len(pv) < 2:
+                    pv = [pv[0], 0.5]
+                j = i // 2
+                pt, pf, spec = pair(pv, n=ns[1 + j], node=f"p{j}",
+                                    counter=max(0, r + 6 - lags[j]), spec=spec)
+                peers_t.append(pt)
+                peers_f.append(pf)
+            out_ref = ref_strat.aggregate(own_t, peers_t)
+            out_flat = flat_strat.aggregate(own_f, peers_f)
+            for leaf_path in (("enc", "w"), ("enc", "b"), ("head",)):
+                a, b = out_flat, out_ref
+                for k in leaf_path:
+                    a, b = a[k], b[k]
+                np.testing.assert_allclose(
+                    np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6,
+                    err_msg=f"{name} diverged at round {r}, leaf {leaf_path}")
+
+
+def test_flat_strategies_accept_plain_tree_updates():
+    """No store in the loop: strategies build their own spec from tree-only
+    NodeUpdates and still agree with the reference."""
+    own = NodeUpdate(tree_of([1.0, 2.0]), num_examples=3, node_id="a")
+    peer = NodeUpdate(tree_of([0.5, -1.0]), num_examples=9, node_id="b")
+    out = FedAvg().aggregate(own, [peer])
+    ref = get_ref_strategy("fedavg").aggregate(own, [peer])
+    np.testing.assert_allclose(out["enc"]["w"], ref["enc"]["w"], rtol=1e-6, atol=1e-6)
+    assert out["head"].dtype == np.float32
+
+
+def test_use_kernel_is_plumbed_through_every_strategy(monkeypatch):
+    """Satellite regression: FedAvgM/_FedOpt used to drop use_kernel on the
+    floor. Now every strategy's combine routes through the kernel ops when
+    asked — observed by counting aggregate_flat/fed_opt_flat calls."""
+    from repro.kernels.fed_agg import ops as fed_ops
+
+    calls = {"n": 0}
+    real_agg, real_opt = fed_ops.aggregate_flat, fed_ops.fed_opt_flat
+
+    def spy_agg(*a, **k):
+        calls["n"] += 1
+        return real_agg(*a, **k)
+
+    def spy_opt(*a, **k):
+        calls["n"] += 1
+        return real_opt(*a, **k)
+
+    monkeypatch.setattr(fed_ops, "aggregate_flat", spy_agg)
+    monkeypatch.setattr(fed_ops, "fed_opt_flat", spy_opt)
+    for name in sorted(STRATEGIES):
+        kwargs = dict(STRATEGY_KWARGS[name], use_kernel=True)
+        if name == "fedbuff":
+            kwargs["buffer_size"] = 1
+        strat = get_strategy(name, **kwargs)
+        before = calls["n"]
+        own, own_f, spec = pair([1.0, 0.5], node="me", counter=3)
+        _, p0, spec = pair([0.2, -0.3], node="p0", counter=2, spec=spec)
+        strat.aggregate(own_f, [p0])
+        assert calls["n"] > before, f"{name} never reached the kernel ops"
+
+
+def test_kernel_and_plain_flat_paths_agree():
+    for name in sorted(STRATEGIES):
+        plain = get_strategy(name, **STRATEGY_KWARGS[name])
+        kern = get_strategy(name, **dict(STRATEGY_KWARGS[name], use_kernel=True))
+        own_t, own_f, spec = pair([1.5, -0.5], node="me", counter=4)
+        _, p0, spec = pair([0.3, 0.9], node="p0", counter=3, spec=spec)
+        _, p1, spec = pair([-1.1, 0.1], node="p1", counter=1, spec=spec)
+        a = plain.aggregate(own_f, [p0, p1])
+        b = kern.aggregate(own_f, [p0, p1])
+        np.testing.assert_allclose(a["enc"]["w"], b["enc"]["w"],
+                                   rtol=1e-5, atol=1e-5, err_msg=name)
+
+
+# --- flat ↔ tree round-trips -------------------------------------------------
+
+
+def test_leafspec_roundtrip_mixed_dtypes():
+    """bf16 / f16 / int32 / f32 leaves all survive flatten→unflatten exactly
+    (ints small enough to embed in f32 — the store refuses the rest)."""
+    tree = {
+        "w32": np.linspace(-3, 3, 8, dtype=np.float32).reshape(2, 4),
+        "h": {"w16": np.linspace(-1, 1, 6, dtype=np.float16),
+              "steps": np.arange(5, dtype=np.int32)},
+        "wb": jnp.asarray(np.linspace(-2, 2, 7), jnp.bfloat16),
+    }
+    spec = LeafSpec.of(tree)
+    assert spec.num_params == 8 + 6 + 5 + 7
+    out = spec.unflatten(spec.flatten(tree))
+    assert out["w32"].dtype == np.float32 and out["w32"].shape == (2, 4)
+    assert out["h"]["w16"].dtype == np.float16
+    assert out["h"]["steps"].dtype == np.int32
+    assert out["wb"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(out["w32"], tree["w32"])
+    np.testing.assert_array_equal(out["h"]["w16"], tree["h"]["w16"])
+    np.testing.assert_array_equal(out["h"]["steps"], np.asarray(tree["h"]["steps"]))
+    np.testing.assert_array_equal(np.asarray(out["wb"], np.float32),
+                                  np.asarray(tree["wb"], np.float32))
+    # shared layout: a second tree of the same structure reuses the spec
+    assert spec.describes(out) and spec.f32_exact is False  # int leaf
+
+
+@settings(max_examples=15, deadline=None)
+@given(vals=st.lists(st.floats(-4, 4), min_size=2, max_size=2))
+def test_leafspec_flatten_matches_wire_decode(vals):
+    """spec.flatten(tree) == the flat vector the store decodes from that
+    tree's wire blob — the invariant the topk writer's error feedback rests
+    on."""
+    params = tree_of(vals)
+    spec = LeafSpec.of(params)
+    blob = serialize_update(NodeUpdate(params, num_examples=1, node_id="n"))
+    wire_spec, flat, _meta = decode_params_flat(blob, {})
+    assert wire_spec.key == spec.key
+    np.testing.assert_array_equal(flat, spec.flatten(params))
+
+
+def test_leafspec_shared_identity_across_store_pulls():
+    """Stacked-flat pulls: every FlatUpdate a store returns for one model
+    shares ONE spec instance, and unchanged peers' flats are the same array
+    object across pulls (zero-copy steady state for the stack cache)."""
+    store = WeightStore(InMemoryFolder())
+    for i in range(3):
+        store.push(NodeUpdate(tree_of([1.0 + i, -i * 0.5]), num_examples=1,
+                              node_id=f"n{i}", counter=0))
+    first = store.pull()
+    assert len(first) == 3
+    assert all(isinstance(u, FlatUpdate) for u in first)
+    specs = {id(u.spec) for u in first}
+    assert len(specs) == 1, "peers of one model must share a spec instance"
+    again = store.pull()
+    for a, b in zip(first, again):
+        assert a.flat is b.flat  # decode-cache hit: identical array object
+
+
+# --- transport equivalence: flat decode ≡ tree decode, bitwise ---------------
+
+
+def _run_store(tmp_path, transport, rounds=6, **kw):
+    folder = DiskFolder(str(tmp_path / transport))
+    store = WeightStore(folder, transport=transport, rebase_every=3, **kw)
+    rng = np.random.default_rng(7)
+    params = tree_of([1.0, 0.5])
+    history = []
+    for ctr in range(rounds):
+        # sparse local step: the regime delta/topk transports are for
+        flat_view = np.concatenate([params["enc"]["w"].ravel(),
+                                    params["enc"]["b"], params["head"]])
+        idx = rng.choice(flat_view.size, size=3, replace=False)
+        flat_view[idx] += rng.normal(size=3).astype(np.float32)
+        w = flat_view[:12].reshape(4, 3).copy()
+        params = {"enc": {"w": w, "b": flat_view[12:15].copy()},
+                  "head": flat_view[15:].copy()}
+        store.push(NodeUpdate(params, num_examples=1, node_id="n", counter=ctr))
+        history.append(params)
+    return folder, store, history
+
+
+@pytest.mark.parametrize("transport", ["full", "quantized", "delta", "delta_q", "topk"])
+def test_flat_decode_matches_tree_decode_bitwise(tmp_path, transport):
+    """For every transport: a fresh reader's flat-path pull reconstructs the
+    byte-identical params the per-leaf tree decode of the same blobs yields."""
+    folder, _writer, _history = _run_store(tmp_path, transport)
+    reader = WeightStore(folder)
+    pulled = reader.pull_node("n")
+    assert isinstance(pulled, FlatUpdate)
+    # decode the very same blobs through the PR-2 per-leaf path
+    blob = folder.get("latest/n")
+    meta = peek_meta(blob)
+    if meta.get("delta_of"):
+        base_blob = folder.get(f"base/n/{meta['delta_of']}")
+        assert content_hash(base_blob) == meta["delta_of"]
+        ref = deserialize_update_delta(blob, deserialize_update(base_blob).params)
+    elif meta.get("quantized"):
+        ref = deserialize_update_quantized(blob)
+    else:
+        ref = deserialize_update(blob)
+    for path in (("enc", "w"), ("enc", "b"), ("head",)):
+        a, b = pulled.params, ref.params
+        for k in path:
+            a, b = a[k], b[k]
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{transport} leaf {path}")
+    assert (pulled.counter, pulled.num_examples) == (ref.counter, ref.num_examples)
+
+
+def test_lossless_transports_reproduce_pushed_params_exactly(tmp_path):
+    for transport in ("full", "delta"):
+        folder, _store, history = _run_store(tmp_path, transport)
+        pulled = WeightStore(folder).pull_node("n")
+        np.testing.assert_array_equal(pulled.params["enc"]["w"], history[-1]["enc"]["w"])
+        np.testing.assert_array_equal(pulled.params["head"], history[-1]["head"])
+
+
+def test_int_params_fall_back_to_tree_decode_losslessly():
+    """Leaves that don't embed in f32 must NOT go flat: a big int64 value
+    survives the store bit-exactly via the tree fallback."""
+    store = WeightStore(InMemoryFolder())
+    big = np.asarray([2**40 + 3, 7], np.int64)
+    store.push(NodeUpdate({"ids": big, "w": np.ones((2,), np.float32)},
+                          num_examples=1, node_id="n", counter=0))
+    pulled = store.pull_node("n")
+    assert not isinstance(pulled, FlatUpdate)
+    np.testing.assert_array_equal(pulled.params["ids"], big)
+    # and strategies still aggregate such updates (via spec.flatten fallback)
+    out = FedAvg().aggregate(pulled, [pulled])
+    assert out["w"].shape == (2,)
+
+
+# --- top-k / error feedback ---------------------------------------------------
+
+
+def big_tree(fill) -> dict:
+    """Large enough that npz container overhead never trips the writer's
+    'delta must actually be smaller than a full deposit' rebase guard."""
+    return {"w": np.full((64, 64), np.float32(fill)),
+            "b": np.linspace(-1, 1, 512, dtype=np.float32) * np.float32(fill)}
+
+
+def test_topk_error_feedback_drains_residual():
+    """Pushing the SAME params repeatedly must converge the readers' view to
+    those params exactly: each push ships the top-k of what is still unsent,
+    so the residual drains to zero within ~1/fraction pushes."""
+    store = WeightStore(InMemoryFolder(), transport="topk", topk_fraction=0.25,
+                        rebase_every=100)
+    store.push(NodeUpdate(big_tree(1.0), num_examples=1, node_id="n", counter=0))
+    target = big_tree(-2.0)  # every entry differs from base
+    for ctr in range(1, 7):  # ceil(1/0.25) + slack
+        store.push(NodeUpdate(target, num_examples=1, node_id="n", counter=ctr))
+    pulled = WeightStore(store.folder).pull_node("n")
+    np.testing.assert_array_equal(pulled.params["w"], target["w"])
+    np.testing.assert_array_equal(pulled.params["b"], target["b"])
+
+
+def test_topk_ships_bounded_updates_and_reader_progresses():
+    """Each non-rebase push ships ≤ k new entries; intermediate reader views
+    move monotonically toward the target (lossy but convergent)."""
+    N = 4096
+    k = int(0.01 * N)
+    store = WeightStore(InMemoryFolder(), transport="topk", topk_fraction=0.01,
+                        rebase_every=100)
+    store.push(NodeUpdate({"w": np.zeros((N,), np.float32)}, num_examples=1,
+                          node_id="n", counter=0))
+    target = {"w": np.linspace(1, 2, N).astype(np.float32)}
+    errs = []
+    reader = WeightStore(store.folder)
+    for ctr in range(1, 5):
+        store.push(NodeUpdate(target, num_examples=1, node_id="n", counter=ctr))
+        pulled = reader.pull_node("n")
+        errs.append(float(np.abs(pulled.params["w"] - target["w"]).sum()))
+        changed = int(np.count_nonzero(pulled.params["w"]))
+        assert 0 < changed <= k * ctr
+    assert errs == sorted(errs, reverse=True)
+    assert errs[0] > errs[-1]
+
+
+def test_topk_blobs_are_smaller_than_full():
+    store = WeightStore(InMemoryFolder(), transport="topk", topk_fraction=0.01,
+                        rebase_every=100)
+    store.push(NodeUpdate(big_tree(1.0), num_examples=1, node_id="n", counter=0))
+    store.push(NodeUpdate(big_tree(1.5), num_examples=1, node_id="n", counter=1))
+    blob = store.folder.get("latest/n")
+    assert peek_meta(blob)["delta_of"]
+    full = store.folder.get(f"base/n/{peek_meta(blob)['delta_of']}")
+    assert len(blob) < 0.5 * len(full)
+
+
+# --- compressed wire envelope -------------------------------------------------
+
+
+def test_npz_compressed_envelope_roundtrips_and_counts_bytes(tmp_path):
+    compressible = {"w": np.zeros((4096,), np.float32),
+                    "b": np.ones((64,), np.float32)}
+    plain = WeightStore(DiskFolder(str(tmp_path / "plain")))
+    packed = WeightStore(DiskFolder(str(tmp_path / "packed")), compress="npz")
+    u = NodeUpdate(compressible, num_examples=1, node_id="n", counter=0)
+    plain.push(u)
+    packed.push(u)
+    assert plain.bytes_written > 0 and packed.bytes_written > 0
+    assert packed.bytes_written < 0.5 * plain.bytes_written
+    pulled = WeightStore(packed.folder).pull_node("n")  # readers sniff format
+    np.testing.assert_array_equal(pulled.params["w"], compressible["w"])
+    assert peek_meta(packed.folder.get("latest/n"))["node_id"] == "n"
+
+
+def test_zstd_envelope_gated_or_roundtrips(tmp_path):
+    from repro.core.serialize import _zstd_module
+
+    if _zstd_module() is None:
+        with pytest.raises(ImportError):
+            WeightStore(InMemoryFolder(), compress="zstd")
+        return
+    store = WeightStore(InMemoryFolder(), compress="zstd")
+    params = {"w": np.zeros((2048,), np.float32)}
+    store.push(NodeUpdate(params, num_examples=1, node_id="n", counter=0))
+    pulled = WeightStore(store.folder).pull_node("n")
+    np.testing.assert_array_equal(pulled.params["w"], params["w"])
+
+
+def test_compressed_delta_transport_stays_bitwise(tmp_path):
+    folder, _store, history = _run_store(tmp_path, "delta", compress="npz")
+    pulled = WeightStore(folder).pull_node("n")
+    np.testing.assert_array_equal(pulled.params["enc"]["w"], history[-1]["enc"]["w"])
+
+
+# --- steady-state shape of the hot path --------------------------------------
+
+
+def test_stack_cache_reuses_buffer_and_rows():
+    from repro.core.strategies import _StackCache
+
+    spec = LeafSpec.of(tree_of([1.0, 1.0]))
+    mk = lambda f: FlatUpdate(f, spec, num_examples=1, node_id="u")
+    f0, f1 = spec.flatten(tree_of([1.0, 1.0])), spec.flatten(tree_of([2.0, 0.0]))
+    u0, u1 = mk(f0), mk(f1)
+    cache = _StackCache()
+    buf1 = cache.stack(spec, [u0, u1])
+    np.testing.assert_array_equal(buf1[0], u0.flat)
+    buf1[0, 0] = 123.0  # poison: a reused row must be overwritten only if source changed
+    buf2 = cache.stack(spec, [u0, u1])
+    assert buf2 is buf1  # same buffer object, no realloc
+    assert buf2[0, 0] == 123.0  # row NOT recopied: same source flat object
+    u0b = mk(u0.flat.copy())
+    buf3 = cache.stack(spec, [u0b, u1])
+    assert buf3[0, 0] == u0.flat[0]  # new source object → row refreshed
+    # tree-only updates are flattened into their row every call
+    t = NodeUpdate(tree_of([3.0, 1.0]), num_examples=1, node_id="t")
+    buf4 = cache.stack(spec, [t, u1])
+    np.testing.assert_array_equal(buf4[0], spec.flatten(t.params))
+
+
+def test_partial_fedavg_personal_leaves_exact_for_nonf32_models():
+    """Personal (non-federated) leaves of int/f64 models must pass through
+    bit-exact — never rounded through the f32 flat."""
+    from repro.core.strategies import PartialFedAvg
+
+    big = np.asarray([2**53 + 1.0, 7.5], np.float64)  # not f32-representable
+    ids = np.asarray([2**40 + 3, 5], np.int64)
+    own = NodeUpdate({"enc": {"w": np.ones((4,), np.float32)},
+                      "head": big.copy(), "steps": ids.copy()},
+                     num_examples=1, node_id="a")
+    peer = NodeUpdate({"enc": {"w": np.zeros((4,), np.float32)},
+                       "head": big * 0.5, "steps": ids * 0},
+                      num_examples=1, node_id="b")
+    out = PartialFedAvg(shared_pattern=r"^enc/").aggregate(own, [peer])
+    np.testing.assert_allclose(out["enc"]["w"], 0.5)        # federated
+    np.testing.assert_array_equal(out["head"], big)         # exact, f64
+    np.testing.assert_array_equal(out["steps"], ids)        # exact, int64
+    assert out["head"].dtype == np.float64 and out["steps"].dtype == np.int64
+
+
+def test_leafspec_flatten_rejects_leaf_shape_permutation():
+    """Two leaves swapping sizes under the same treedef must not silently
+    produce a mislaid flat vector (same total, different offsets)."""
+    spec = LeafSpec.of({"a": np.zeros((10, 2), np.float32),
+                        "b": np.zeros((2, 10), np.float32),
+                        "c": np.zeros((5,), np.float32)})
+    permuted = {"a": np.zeros((4,), np.float32),        # 20 → 4
+                "b": np.zeros((21,), np.float32),       # 20 → 21
+                "c": np.zeros((20,), np.float32)}       # 5 → 20 (total 45 = 45)
+    with pytest.raises(ValueError):
+        spec.flatten(permuted)
+    with pytest.raises(ValueError):
+        spec.flatten_into(permuted, spec.empty_flat())
+
+
+def test_mixed_f16_f32_peers_keep_their_dtypes():
+    """Same-structure f16 and f32 models must not share a spec: each peer's
+    pulled params keep their native dtype and exact values (regression: the
+    interning key once ignored native wire dtypes)."""
+    store = WeightStore(InMemoryFolder())
+    p16 = {"w": np.linspace(-1, 1, 8, dtype=np.float16)}
+    p32 = {"w": np.linspace(-1, 1, 8, dtype=np.float32) * np.float32(0.1)}
+    store.push(NodeUpdate(p16, num_examples=1, node_id="h", counter=0))
+    store.push(NodeUpdate(p32, num_examples=1, node_id="s", counter=0))
+    pulled = {u.node_id: u for u in store.pull()}
+    assert pulled["h"].params["w"].dtype == np.float16
+    assert pulled["s"].params["w"].dtype == np.float32
+    np.testing.assert_array_equal(pulled["h"].params["w"], p16["w"])
+    np.testing.assert_array_equal(pulled["s"].params["w"], p32["w"])
+    assert pulled["h"].spec.key != pulled["s"].spec.key
+
+
+def test_sharded_bytes_written_includes_summary_traffic():
+    from repro.core.gossip import ShardedFolders, ShardedWeightStore
+
+    store = ShardedWeightStore(
+        ShardedFolders(2, factory=lambda g: InMemoryFolder()),
+        group_of=lambda nid: int(nid[1]) % 2)
+    for i in range(2):
+        store.push(NodeUpdate(tree_of([1.0 + i, 0.5]), num_examples=1,
+                              node_id=f"n{i}", counter=0))
+    stats = store.cache_stats()
+    assert stats["summary_bytes_written"] > 0  # refreshes + ring forwards
+    # total includes BOTH per-group latest traffic and the summary layer
+    assert stats["bytes_written"] > stats["summary_bytes_written"]
+
+
+def test_node_transport_stats_uniform_shape():
+    from repro.core import AsyncFederatedNode
+    from repro.core.gossip import ShardedFolders
+
+    flat_node = AsyncFederatedNode(shared_folder=InMemoryFolder(), node_id="a")
+    sharded_node = AsyncFederatedNode(
+        shared_folder=ShardedFolders(2, factory=lambda g: InMemoryFolder()),
+        node_id="b")
+    for node in (flat_node, sharded_node):
+        node.update_parameters(tree_of([1.0, 0.0]), num_examples=1)
+        stats = node.transport_stats()
+        assert set(stats) >= {"decode_hits", "decode_misses", "bytes_written"}
+        assert stats["bytes_written"] > 0
+
+
+def test_fedavgm_state_is_flat_vectors():
+    strat = FedAvgM()
+    own_t, own_f, spec = pair([1.0, 2.0], node="a")
+    _, p, spec = pair([0.0, 0.0], node="b", spec=spec)
+    strat.aggregate(own_f, [p])
+    assert isinstance(strat.x, np.ndarray) and strat.x.ndim == 1
+    assert strat.x.size == spec.num_params
+    assert isinstance(strat.buf, np.ndarray) and strat.buf.dtype == np.float32
