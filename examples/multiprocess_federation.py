@@ -63,7 +63,9 @@ def main(argv=None):
     ap.add_argument("--nodes", type=int, default=3)
     ap.add_argument("--epochs", type=int, default=10)
     ap.add_argument("--transport", default="full",
-                    choices=["full", "quantized", "delta", "delta_q"])
+                    help="legacy name (full/quantized/delta/delta_q/topk) or "
+                         "a pipeline spec string such as 'delta(chain=4)|npz' "
+                         "or 'topk(adaptive)'")
     ap.add_argument("--no-cache", action="store_true",
                     help="read the folder directly instead of through cache+")
     ap.add_argument("--crash", action="store_true",

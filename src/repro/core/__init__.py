@@ -49,6 +49,14 @@ from .store import (
     WeightStore,
     make_folder,
 )
+from .transport import (
+    PipelineStats,
+    Prefetcher,
+    TransportPipeline,
+    normalize_transport,
+    parse_folder_uri,
+    parse_pipeline_spec,
+)
 from .strategies import (
     STRATEGIES,
     FedAdagrad,
@@ -92,6 +100,12 @@ __all__ = [
     "WeightStore",
     "TRANSPORTS",
     "make_folder",
+    "TransportPipeline",
+    "PipelineStats",
+    "Prefetcher",
+    "normalize_transport",
+    "parse_pipeline_spec",
+    "parse_folder_uri",
     "Strategy",
     "FedAvg",
     "FedAvgM",

@@ -48,14 +48,12 @@ exactly as strong as the flat store.
 from __future__ import annotations
 
 import hashlib
-import re
 import threading
 from typing import Callable, Iterable, Mapping, Sequence
 
 import numpy as np
 
 from .serialize import (
-    COMPRESSIONS,
     FlatDecodeUnsupported,
     FlatUpdate,
     GroupSummary,
@@ -63,15 +61,17 @@ from .serialize import (
     content_hash,
     decode_params_flat,
     deserialize_group_summary,
-    serialize_group_summary,
 )
-from .store import TRANSPORTS, SharedFolder, WeightStore, _LruCache
+from .store import SharedFolder, WeightStore
+from .transport import TransportPipeline, _LruCache
 from .tree import tree_weighted_mean
 
 _SUMMARY_PREFIX = "summary/"
 GROUP_PEER_PREFIX = "group:"  # node_id prefix of summary pseudo-peers in pull()
 
-SHARD_URI_RE = re.compile(r"^shard(\d+)\+(.+)$", re.DOTALL)
+# one grammar owns all routing: the shard-wrapper syntax is defined once, in
+# transport.py, next to the rest of the folder-URI/pipeline grammar
+from .transport import _SHARD_RE as SHARD_URI_RE  # noqa: E402
 
 
 # --------------------------------------------------------------------------
@@ -262,22 +262,13 @@ class ShardedWeightStore:
             folders = ShardedFolders.from_folders(folders)
         self.folders = folders
         self.num_groups = folders.num_groups
-        if transport is None:
-            transport = "full"
-        if transport not in TRANSPORTS:
-            raise ValueError(f"unknown transport {transport!r}; options: {TRANSPORTS}")
-        self.transport = transport
         # fail fast, like WeightStore: per-group stores are built lazily on
-        # first push, far too late to learn compress= was misspelled
-        if compress not in COMPRESSIONS:
-            raise ValueError(f"unknown compress {compress!r}; options: {COMPRESSIONS}")
-        if compress == "zstd":
-            from .serialize import _zstd_module
-
-            if _zstd_module() is None:
-                raise ImportError("compress='zstd' requires a zstd module (zstandard)")
-        if not 0.0 < topk_fraction <= 1.0:
-            raise ValueError(f"topk_fraction must be in (0, 1], got {topk_fraction}")
+        # first push, far too late to learn transport= or compress= was
+        # misspelled (or zstd unavailable). The throwaway pipeline runs the
+        # full spec-grammar validation; per-group stores build their own.
+        probe = TransportPipeline.from_spec(
+            transport, compress=compress, topk_fraction=topk_fraction)
+        self.transport = probe.spec
         if gossip_fanout < 1:
             raise ValueError(f"gossip_fanout must be >= 1, got {gossip_fanout}")
         self.gossip_fanout = gossip_fanout
@@ -470,7 +461,8 @@ class ShardedWeightStore:
             version_vector=vv,
             timestamp=max(u.timestamp for u in updates),
         )
-        blob = serialize_group_summary(summary, compress=self._store_kwargs["compress"])
+        # summaries ride the same pipeline envelope as every other deposit
+        blob = store.pipeline.encode_summary(summary)
         folder.put(_summary_key(group, version, content_hash(blob)), blob)
         self.summary_bytes_written += len(blob)
         self._replace_summaries(folder, current)
@@ -632,14 +624,18 @@ class ShardedWeightStore:
         if exclude_node is None:
             h = hashlib.sha256()
             for g in range(self.num_groups):
-                h.update(self._folder(g).state_hash().encode())
+                # state/ blobs are optimizer recovery data, not federation
+                # signal — excluded here exactly as the flat store does
+                h.update(self._folder(g).state_hash(exclude=("state/",)).encode())
             return h.hexdigest()[:16]
         group = self.group_of(exclude_node)
         exclude = (
             f"latest/{exclude_node}",
             f"base/{exclude_node}/",
+            f"chain/{exclude_node}/",
             f"history/{exclude_node}/",
             f"{_SUMMARY_PREFIX}{group:04d}/",
+            "state/",
         )
         base = self._folder(group).state_hash(exclude=exclude)
         if self._rotation_pending.get(exclude_node):
@@ -677,6 +673,28 @@ class ShardedWeightStore:
     def pull_node(self, node_id: str) -> NodeUpdate | None:
         return self._store(self.group_of(node_id)).pull_node(node_id)
 
+    # -- strategy-state recovery + prefetch: route to the home group ----------
+    def push_strategy_state(self, node_id: str, strategy: str, counter: int,
+                            state: dict) -> None:
+        self._store(self.group_of(node_id)).push_strategy_state(
+            node_id, strategy, counter, state)
+
+    def pull_strategy_state(self, node_id: str) -> tuple[dict, dict] | None:
+        return self._store(self.group_of(node_id)).pull_strategy_state(node_id)
+
+    def start_prefetch(self, interval: float = 0.1, *, exclude: str):
+        """Background-warm the decoded-update cache of ``exclude``'s home
+        group (the only folder its pulls touch). Requires the node id —
+        sharded prefetch has no meaning without a home group."""
+        return self._store(self.group_of(exclude)).start_prefetch(
+            interval, exclude=exclude)
+
+    def stop_prefetch(self) -> None:
+        with self._lock:
+            stores = list(self._stores.values())
+        for store in stores:
+            store.stop_prefetch()
+
     def pull_round(self, counter: int, exclude: str | None = None) -> list[NodeUpdate]:
         """Sync-mode barrier set. With ``exclude`` this is the caller's home
         group only: synchronous federation is per-group under sharding (set
@@ -706,7 +724,7 @@ class ShardedWeightStore:
         """Aggregate decode-cache + byte counters across the per-group stores,
         including the gossip summary traffic (refreshes + ring forwards) —
         often the dominant wire cost at fleet scale."""
-        hits = misses = 0
+        hits = misses = read = 0
         written = self.summary_bytes_written
         with self._lock:
             stores = list(self._stores.values())
@@ -714,6 +732,7 @@ class ShardedWeightStore:
             hits += store.decode_hits
             misses += store.decode_misses
             written += store.bytes_written
+            read += store.bytes_read
         return {"decode_hits": hits, "decode_misses": misses,
-                "bytes_written": written,
+                "bytes_written": written, "bytes_read": read,
                 "summary_bytes_written": self.summary_bytes_written}

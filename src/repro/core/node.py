@@ -27,6 +27,7 @@ from .gossip import ShardedFolders, ShardedWeightStore
 from .serialize import NodeUpdate
 from .store import SharedFolder, WeightStore
 from .strategies import FedAvg, Strategy
+from .transport import normalize_transport
 from .tree import PyTree, tree_to_numpy
 
 
@@ -44,6 +45,8 @@ class _BaseNode:
         node_id: str | None = None,
         transport: str | None = None,
         resume: bool = True,
+        persist_strategy_state: bool = False,
+        prefetch_interval: float | None = None,
         clock: Callable[[], float] = time.monotonic,
     ):
         self._owns_store = store is None
@@ -54,15 +57,24 @@ class _BaseNode:
                 store = ShardedWeightStore(shared_folder, transport=transport)
             else:
                 store = WeightStore(shared_folder, transport=transport)
-        elif transport is not None and transport != store.transport:
-            raise ValueError(
-                f"store already configured with transport {store.transport!r}; "
-                "pass transport= only together with shared_folder"
-            )
+        elif transport is not None:
+            # store.transport is the canonical pipeline spec; compare specs,
+            # not raw strings, so "delta_q" matches a "delta(q)" store. A
+            # node spec with no envelope also matches a store that added one
+            # via compress= — the node is asserting the wire policy, and the
+            # envelope is a store-construction detail.
+            want = normalize_transport(transport)
+            have = store.transport
+            if want not in (have, have.rpartition("|")[0] or have):
+                raise ValueError(
+                    f"store already configured with transport {have!r}; "
+                    "pass transport= only together with shared_folder"
+                )
         self.store = store
         self.strategy = strategy or FedAvg()
         self.node_id = node_id or uuid.uuid4().hex[:8]
         self.clock = clock
+        self.persist_strategy_state = persist_strategy_state
         self.counter = 0  # local epoch counter; there is no global round
         self._last_state_hash: str | None = None
         # Restart/recovery (read-your-own-writes bootstrap): a node that comes
@@ -77,6 +89,19 @@ class _BaseNode:
             if previous is not None:
                 self.counter = previous.counter + 1
                 self.resumed = previous
+            # Strategy-state recovery: a resumed FedAvgM/FedAdam node
+            # restores its momentum/moment vectors from the state/ blob it
+            # (or its previous incarnation) deposited, so the server-
+            # optimizer trajectory survives a crash — not just the params.
+            if persist_strategy_state and previous is not None:
+                recovered = store.pull_strategy_state(node_id)
+                if (recovered is not None
+                        and recovered[1].get("strategy") == self.strategy.name):
+                    self.strategy.load_state_dict(recovered[0])
+        # Background prefetch: warm the decoded-update cache between
+        # federation steps so the step's pull is all cache hits.
+        if prefetch_interval is not None:
+            store.start_prefetch(prefetch_interval, exclude=self.node_id)
         # instrumentation
         self.num_pushes = 0
         self.num_pulls = 0
@@ -84,17 +109,21 @@ class _BaseNode:
         self.num_aggregations = 0
 
     def transport_stats(self) -> dict[str, int]:
-        """Wire-level counters from the underlying store — bytes deposited and
-        decode-cache hits/misses — in one shape regardless of store kind, so
-        transport experiments read a single dict per node."""
+        """Wire-level counters from the underlying store — the pipeline's
+        full stats dict (bytes written/read, decode-cache hits/misses, chain
+        depths, residual norms, prefetch activity) — in one shape regardless
+        of store kind, so transport experiments read a single dict per
+        node."""
         store = self.store
         if hasattr(store, "cache_stats"):  # ShardedWeightStore aggregates
             return store.cache_stats()
-        return {
-            "decode_hits": store.decode_hits,
-            "decode_misses": store.decode_misses,
-            "bytes_written": store.bytes_written,
-        }
+        return store.transport_stats()
+
+    def _persist_strategy_state(self) -> None:
+        state = self.strategy.state_dict()
+        if state:
+            self.store.push_strategy_state(
+                self.node_id, self.strategy.name, self.counter, state)
 
     def _push(self, params: PyTree, num_examples: int, metrics: dict | None = None) -> NodeUpdate:
         update = NodeUpdate(
@@ -140,6 +169,8 @@ class AsyncFederatedNode(_BaseNode):
             return None
         aggregated = self.strategy.aggregate(own, peers)
         self.num_aggregations += 1
+        if self.persist_strategy_state:
+            self._persist_strategy_state()
         return aggregated
 
 
@@ -180,13 +211,16 @@ class SyncFederatedNode(_BaseNode):
         round_id = self.counter
         self.counter += 1
 
-        deadline = time.monotonic() + self.timeout
+        # The injected clock drives the deadline, not time.monotonic():
+        # simulated-clock tests of timeout behavior (and virtual-time
+        # harnesses) must be able to age the barrier without real sleeping.
+        deadline = self.clock() + self.timeout
         while True:
             peers = self.store.pull_round(round_id, exclude=self.node_id)
             self.num_pulls += 1
             if len(peers) >= self.num_nodes - 1:
                 break
-            if time.monotonic() > deadline:
+            if self.clock() > deadline:
                 raise FederationTimeout(
                     f"node {self.node_id}: only {len(peers) + 1}/{self.num_nodes} "
                     f"nodes reached round {round_id} within {self.timeout}s"
@@ -196,4 +230,6 @@ class SyncFederatedNode(_BaseNode):
         peers.sort(key=lambda u: u.node_id)
         aggregated = self.strategy.aggregate(own, peers)
         self.num_aggregations += 1
+        if self.persist_strategy_state:
+            self._persist_strategy_state()
         return aggregated

@@ -285,6 +285,7 @@ def decode_params_flat(blob: bytes, specs: dict) -> tuple[LeafSpec, np.ndarray, 
         wire_dtypes = () if quantized else tuple(arrays[k].dtype.str for k in leaf_keys)
         skey = _spec_table_key(order, dtypes, quantized, wire_dtypes)
         spec = specs.get(skey)
+        drifted = False
         if spec is not None:
             # verify shapes still match the interned layout; drift → rebuild
             # (dtypes are part of the table key, so only shapes can drift)
@@ -293,11 +294,17 @@ def decode_params_flat(blob: bytes, specs: dict) -> tuple[LeafSpec, np.ndarray, 
                 tuple(arrays[k].shape) != spec.shapes[spec.index[k.replace(_SEP, "/")]]
                 for k in leaf_keys
             ):
-                spec = None
+                spec, drifted = None, True
         if spec is None:
             shapes_by_key = {k: (tuple(a.shape), a.dtype) for k, a in arrays.items()}
             spec = _build_wire_spec(order, dtypes, shapes_by_key, quantized)
-            specs[skey] = spec
+            if drifted:
+                specs[skey] = spec  # replace the stale layout
+            else:
+                # setdefault: a concurrent decode (the prefetch thread racing
+                # a pull) must not intern two spec instances for one structure
+                # — spec identity is what makes the stack cache zero-copy
+                spec = specs.setdefault(skey, spec)
         flat = spec.empty_flat()
         index, offsets, sizes = spec.index, spec.offsets, spec.sizes
         if quantized:
@@ -435,6 +442,36 @@ def deserialize_group_summary(blob: bytes) -> GroupSummary:
     )
 
 
+# --- strategy-state recovery blobs -------------------------------------------
+#
+# A node's optimizer state (FedAvgM momentum, FedAdam/FedYogi/FedAdagrad
+# moments) lives client-side; a crashed-and-restarted node that recovers its
+# params from ``latest/`` but restarts its strategy cold loses the server-
+# optimizer trajectory. These blobs persist the flat state vectors under
+# ``state/<node>`` — the same self-describing npz envelope as every other
+# deposit (``peek_meta`` dispatches on ``state_of``), riding the pipeline's
+# compressed envelope.
+
+
+def serialize_strategy_state(node_id: str, strategy: str, counter: int,
+                             state: dict[str, np.ndarray], *,
+                             compress: str = "none") -> bytes:
+    return serialize_params(
+        {k: np.asarray(v) for k, v in state.items()},
+        compress=compress,
+        meta={"state_of": node_id, "strategy": strategy,
+              "counter": int(counter)},
+    )
+
+
+def deserialize_strategy_state(blob: bytes) -> tuple[dict, dict]:
+    """-> (state arrays by name, meta with state_of/strategy/counter)."""
+    state, meta = deserialize_params(blob)
+    if "state_of" not in meta:
+        raise ValueError("not a strategy-state blob")
+    return state, meta
+
+
 # --- int8 compressed payloads (beyond-paper extension #4) -------------------
 
 
@@ -510,12 +547,14 @@ def delta_density(params: PyTree, base_params: PyTree) -> float:
     return changed / max(total, 1)
 
 
-def deserialize_update_delta_flat(blob: bytes, spec: LeafSpec,
-                                  base_flat: np.ndarray) -> FlatUpdate:
-    """Reconstruct a FlatUpdate from a delta blob by applying its sparse
-    entries in place on a copy of the *flat* base vector — no nested-dict
-    rebuild, no per-leaf tree traversal. Raises ValueError when the blob's
-    structure does not match ``spec`` (caller falls back to the tree path)."""
+def apply_update_delta_flat(blob: bytes, spec: LeafSpec,
+                            flat: np.ndarray) -> dict[str, Any]:
+    """Apply a delta blob's sparse entries *in place* on ``flat`` (which must
+    already hold the referenced base state); returns the blob's meta. The
+    in-place form is what lets a chain walk reconstruct K links with one base
+    copy instead of K. On a raised exception ``flat`` may be partially
+    mutated — callers discard it (the exceptions signal a structure/dtype
+    mismatch, never a transient)."""
     with np.load(io.BytesIO(maybe_decompress(blob))) as data:
         meta = json.loads(bytes(data[_META_KEY].tobytes()).decode())
         if "delta_of" not in meta:
@@ -526,7 +565,6 @@ def deserialize_update_delta_flat(blob: bytes, spec: LeafSpec,
         if len(order) != len(wire) or set(order) != set(wire):
             raise ValueError("delta structure does not match the base spec")
         files = set(data.files)
-        flat = np.array(base_flat, dtype=np.float32, copy=True)
         index, offsets, sizes = spec.index, spec.offsets, spec.sizes
         for key in order:
             i = index[key.replace(_SEP, "/")]
@@ -548,6 +586,17 @@ def deserialize_update_delta_flat(blob: bytes, spec: LeafSpec,
                 raise FlatDecodeUnsupported(
                     f"leaf {key!r} delta values have wire dtype {vals.dtype}")
             flat[o + idx] = vals
+    return meta
+
+
+def deserialize_update_delta_flat(blob: bytes, spec: LeafSpec,
+                                  base_flat: np.ndarray) -> FlatUpdate:
+    """Reconstruct a FlatUpdate from a delta blob by applying its sparse
+    entries in place on a copy of the *flat* base vector — no nested-dict
+    rebuild, no per-leaf tree traversal. Raises ValueError when the blob's
+    structure does not match ``spec`` (caller falls back to the tree path)."""
+    flat = np.array(base_flat, dtype=np.float32, copy=True)
+    meta = apply_update_delta_flat(blob, spec, flat)
     return flat_update_from_meta(spec, flat, meta)
 
 
@@ -561,14 +610,17 @@ def serialize_update_delta_from_flat(
     changed: np.ndarray | None = None,
     density_threshold: float = 0.5,
     compress: str = "none",
+    extra_meta: dict[str, Any] | None = None,
 ) -> bytes:
     """Encode ``flat`` as a sparse per-leaf diff against ``base_flat`` — the
     exact wire format of ``serialize_update_delta``, so any reader reconstructs
     it with zero knowledge of how the writer chose the changed set (this is
     what makes writer-side top-k/error-feedback policies transparent).
     ``changed`` (sorted flat indices that differ from the base) may be passed
-    when the caller already computed it. Vectorized: the only per-leaf work is
-    emitting npz entries, which the wire format requires anyway."""
+    when the caller already computed it; ``extra_meta`` adds writer-side meta
+    keys (e.g. the chain codec's ``chain_depth``). Vectorized: the only
+    per-leaf work is emitting npz entries, which the wire format requires
+    anyway."""
     flat = np.asarray(flat, np.float32).reshape(-1)
     if flat.size != spec.num_params:
         raise ValueError(f"{flat.size} params vs spec's {spec.num_params}")
@@ -595,8 +647,8 @@ def serialize_update_delta_from_flat(
         idx = (seg - o).astype(np.int64 if n > 2**31 else np.int32)
         arrays[_IDX + key] = idx
         arrays[_VAL + key] = np.asarray(flat[seg], dtype=wire_dt.dtype)
-    return _pack_npz(arrays, order, dtypes,
-                     _update_meta(update, delta_of=base_hash), compress=compress)
+    meta = _update_meta(update, delta_of=base_hash, **(extra_meta or {}))
+    return _pack_npz(arrays, order, dtypes, meta, compress=compress)
 
 
 def serialize_update_delta(

@@ -20,9 +20,9 @@ Backends:
 All backends implement the tiny ``SharedFolder`` byte-blob protocol; the
 ``WeightStore`` wrapper above them speaks ``NodeUpdate`` pytrees, keeps one
 *latest* blob per node (plus optional history), and exposes the state-hash
-fast path from Algorithm 1. ``WeightStore`` also owns the wire *transport*:
-full blobs, int8-quantized blobs, or sparse deltas against a content-hashed
-per-node base blob.
+fast path from Algorithm 1. The wire *transport* itself — how an update
+becomes deposited bytes — lives in ``transport.py`` as a codec pipeline
+(``TransportPipeline``); the store routes every push/decode through it.
 """
 from __future__ import annotations
 
@@ -35,28 +35,18 @@ import urllib.parse
 from abc import ABC, abstractmethod
 from typing import Any
 
-import numpy as np
-
 from .serialize import (
-    COMPRESSIONS,
-    FlatDecodeUnsupported,
     NodeUpdate,
-    canonicalize_params,
-    content_hash,
-    decode_params_flat,
-    deserialize_update,
-    deserialize_update_delta,
-    deserialize_update_delta_flat,
-    deserialize_update_quantized,
-    flat_update_from_meta,
-    maybe_decompress,
-    peek_meta,
-    serialize_update,
-    serialize_update_delta,
-    serialize_update_delta_from_flat,
-    serialize_update_quantized,
+    deserialize_strategy_state,
+    serialize_strategy_state,
 )
-from .tree import LeafSpec, tree_size_bytes
+from .transport import (
+    _LruCache,
+    Prefetcher,
+    StoreContext,
+    TransportPipeline,
+    parse_folder_uri,
+)
 
 def _exclusion(exclude: "str | tuple[str, ...] | None"):
     """Normalize a state_hash exclusion — None, one exact key, or a tuple of
@@ -72,48 +62,6 @@ def _exclusion(exclude: "str | tuple[str, ...] | None"):
     if prefixes:
         return lambda key: key in exact or key.startswith(prefixes)
     return exact.__contains__
-
-
-class _LruCache:
-    """Tiny insertion-ordered LRU (dict-backed) shared by the read-side
-    caches: CachingFolder's blob cache, WeightStore's decoded-update cache,
-    and ShardedWeightStore's decoded-summary cache. Internally locked: stores
-    are shared across threads (one ShardedWeightStore serving many threaded
-    nodes is an endorsed usage), and an unlocked eviction loop racing a
-    get()'s pop/reinsert would crash with 'dict changed size during
-    iteration'."""
-
-    def __init__(self, capacity: int):
-        self.capacity = capacity
-        self._data: dict = {}
-        self._lock = threading.Lock()
-
-    def get(self, key):
-        """Value for ``key`` (refreshing its LRU position), else None."""
-        with self._lock:
-            hit = self._data.get(key)
-            if hit is not None:
-                self._data.pop(key, None)
-                self._data[key] = hit
-            return hit
-
-    def put(self, key, value) -> None:
-        with self._lock:
-            self._data.pop(key, None)
-            self._data[key] = value
-            while len(self._data) > self.capacity:
-                self._data.pop(next(iter(self._data)))
-
-    def pop(self, key) -> None:
-        with self._lock:
-            self._data.pop(key, None)
-
-    def clear(self) -> None:
-        with self._lock:
-            self._data.clear()
-
-    def __len__(self) -> int:
-        return len(self._data)
 
 
 class SharedFolder(ABC):
@@ -441,6 +389,8 @@ class CachingFolder(SharedFolder):
 TRANSPORTS = ("full", "quantized", "delta", "delta_q", "topk")
 
 
+
+
 class WeightStore:
     """Typed view over a SharedFolder: one latest NodeUpdate per node.
 
@@ -448,41 +398,34 @@ class WeightStore:
     ``keep_history`` additionally retains per-counter blobs so experiments can
     audit the full federation trace.
 
-    ``transport`` selects the wire format for ``latest/`` deposits:
+    The wire path is a ``TransportPipeline`` (see ``transport.py``) selected
+    by ``transport=`` — either a legacy name (``full`` / ``quantized`` /
+    ``delta`` / ``delta_q`` / ``topk``, wire-compatible with earlier
+    revisions) or a full pipeline spec string such as::
 
-      * ``"full"``      — one complete npz blob per push (the default).
-      * ``"quantized"`` — int8-quantized blob (lossy, ~4x smaller).
-      * ``"delta"``     — sparse diff against a per-node content-hashed base
-        blob stored under ``base/<node>/<hash>``; lossless (bitwise-equal
-        reconstruction). The node re-deposits a full base every
-        ``rebase_every`` pushes, or whenever the encoded delta would not be
-        smaller than a full deposit (``delta_density_threshold`` governs the
-        per-leaf dense fallback inside the wire format).
-      * ``"delta_q"``   — delta with int8-quantized changed values (lossy).
-      * ``"topk"``      — writer-side top-k sparsification with client-side
-        error feedback, computed on flat vectors (one ``argpartition`` per
-        push): only the ``topk_fraction`` largest-magnitude entry changes ship
-        each push, and everything unsent accumulates in a residual that is
-        flushed by later pushes / the periodic rebase. On the wire these are
-        ordinary delta blobs — readers need no top-k awareness.
+        "delta(chain=4)|zstd"      # delta-against-delta chains + zstd frames
+        "topk(adaptive)"           # error-feedback top-k, k ∝ residual norm
+        "quantized|npz"            # int8 blobs inside deflate envelopes
 
-    ``compress`` wraps every deposited blob: ``"none"`` (stored npz, the
-    default), ``"npz"`` (deflate), or ``"zstd"`` (whole-blob zstd frame,
-    requires a zstd module). Readers sniff the format, so heterogeneous
-    compression settings coexist in one folder. ``bytes_written`` counts every
-    blob this store deposited (the write-side twin of ``CachingFolder``'s
-    ``bytes_fetched``).
+    ``compress=`` ("none" / "npz" / "zstd") appends the envelope stage for
+    callers using legacy names. Readers are policy-oblivious: blobs are
+    self-describing, so heterogeneous pipelines coexist in one folder.
 
     ``pull``/``pull_node`` keep a bounded decoded-update cache keyed on the
     folder's per-key ``version`` token, so a peer whose deposit is unchanged
-    costs one metadata lookup instead of an npz decode (the decode-side twin
-    of ``CachingFolder``'s download skip). Decodes land *directly in flat
-    f32 vectors* (``FlatUpdate`` with a shared per-structure ``LeafSpec``):
-    no nested-dict rebuild, and the vectorized strategies aggregate the
-    pulled flats without any per-leaf hop. Blobs whose leaves cannot embed
-    losslessly in f32 (int/f64) fall back to the per-leaf tree decode.
-    Cached update objects are returned by reference — treat pulled params
-    as read-only, as every caller in this repo already does.
+    costs one metadata lookup instead of an npz decode. Decodes land
+    *directly in flat f32 vectors* (``FlatUpdate`` with a shared per-structure
+    ``LeafSpec``); blobs whose leaves cannot embed losslessly in f32
+    (int/f64) fall back to the per-leaf tree decode. Cached update objects
+    are returned by reference — treat pulled params as read-only, as every
+    caller in this repo already does.
+
+    ``prefetch_interval`` (or ``start_prefetch()``) runs a background thread
+    that warms the decoded-update cache from cheap ``version()`` listings
+    between federation steps. Wire counters (bytes written/read, chain
+    depths, residual norms, rebases) live on ``pipeline.stats``; the
+    ``bytes_written`` / ``decode_hits`` / ``decode_misses`` properties remain
+    as views onto it.
     """
 
     def __init__(
@@ -497,194 +440,128 @@ class WeightStore:
         topk_fraction: float = 0.01,
         compress: str = "none",
         decode_cache_entries: int = 64,
+        prefetch_interval: float | None = None,
     ):
-        if transport is None:
-            transport = "quantized" if quantized else "full"
-        if transport not in TRANSPORTS:
-            raise ValueError(f"unknown transport {transport!r}; options: {TRANSPORTS}")
-        if compress not in COMPRESSIONS:
-            raise ValueError(f"unknown compress {compress!r}; options: {COMPRESSIONS}")
-        if compress == "zstd":
-            from .serialize import _zstd_module
-
-            if _zstd_module() is None:
-                raise ImportError("compress='zstd' requires a zstd module (zstandard)")
-        if not 0.0 < topk_fraction <= 1.0:
-            raise ValueError(f"topk_fraction must be in (0, 1], got {topk_fraction}")
         self.folder = folder
-        self.transport = transport
-        self.quantized = transport == "quantized"
+        self.pipeline = TransportPipeline.from_spec(
+            transport,
+            quantized=quantized,
+            compress=compress,
+            rebase_every=rebase_every,
+            delta_density_threshold=delta_density_threshold,
+            topk_fraction=topk_fraction,
+        )
+        self.transport = self.pipeline.spec
         self.keep_history = keep_history
-        self.rebase_every = rebase_every
-        self.delta_density_threshold = delta_density_threshold
-        self.topk_fraction = topk_fraction
-        self.compress = compress
-        # writer state: node -> (base_hash, base_params, pushes since rebase)
-        self._bases: dict[str, tuple[str, Any, int]] = {}
-        # topk writer state: node -> (base_hash, spec, base_flat, acc_flat, age)
-        # where acc is the error-feedback accumulator = what readers see.
-        self._topk: dict[str, tuple] = {}
-        # reader state: base_hash -> (spec, base_flat) | (None, base_params)
-        self._decoded_bases: dict[str, Any] = {}
-        # interned LeafSpecs: one per decoded structure, shared by every
-        # FlatUpdate this store returns (spec identity == layout identity)
-        self._specs: dict = {}
+        self._ctx = StoreContext(folder, self.pipeline.stats)
         # decoded-update cache: latest/<node> key -> (version token, update).
         # Companion to CachingFolder: that layer skips the *download* of an
         # unchanged blob, this one skips the npz *decode* — keyed on the same
         # cheap folder.version() token. 0 disables.
         self.decode_cache_entries = decode_cache_entries
-        self._decoded_latest = _LruCache(decode_cache_entries)  # key -> (version, update)
-        self.decode_hits = 0
-        self.decode_misses = 0
-        self.bytes_written = 0
+        self._decoded_latest = _LruCache(decode_cache_entries)
+        self._prefetcher: Prefetcher | None = None
+        if prefetch_interval is not None:
+            self.start_prefetch(prefetch_interval)
 
-    def _put(self, key: str, blob: bytes) -> None:
-        self.folder.put(key, blob)
-        self.bytes_written += len(blob)
+    # -- legacy views onto the pipeline --------------------------------------
+    @property
+    def quantized(self) -> bool:
+        return self.pipeline.policy.name == "quantized"
+
+    @property
+    def compress(self) -> str:
+        return self.pipeline.compress
+
+    @property
+    def rebase_every(self) -> int:
+        return self.pipeline.policy.rebase_every
+
+    @rebase_every.setter
+    def rebase_every(self, value: int) -> None:
+        self.pipeline.policy.rebase_every = value
+
+    @property
+    def delta_density_threshold(self) -> float:
+        return self.pipeline.policy.density_threshold
+
+    @delta_density_threshold.setter
+    def delta_density_threshold(self, value: float) -> None:
+        self.pipeline.policy.density_threshold = value
+
+    @property
+    def topk_fraction(self) -> float:
+        return self.pipeline.policy.topk_fraction
+
+    @topk_fraction.setter
+    def topk_fraction(self, value: float) -> None:
+        self.pipeline.policy.topk_fraction = value
+
+    @property
+    def bytes_written(self) -> int:
+        return self.pipeline.stats.bytes_written
+
+    @property
+    def bytes_read(self) -> int:
+        return self.pipeline.stats.bytes_read
+
+    @property
+    def decode_hits(self) -> int:
+        return self.pipeline.stats.decode_hits
+
+    @property
+    def decode_misses(self) -> int:
+        return self.pipeline.stats.decode_misses
+
+    def transport_stats(self) -> dict:
+        """Every wire counter of this store's pipeline, one dict."""
+        return self.pipeline.stats.as_dict()
 
     # -- push ---------------------------------------------------------------
     def push(self, update: NodeUpdate) -> None:
-        is_delta = False
-        if self.transport == "topk":
-            blob, is_delta = self._push_topk(update)
-        elif self.transport in ("delta", "delta_q"):
-            blob, is_delta = self._push_delta(update)
-        else:
-            ser = serialize_update_quantized if self.quantized else serialize_update
-            blob = ser(update, compress=self.compress)
-            self._put(f"latest/{update.node_id}", blob)
+        blob, is_delta = self.pipeline.push(update, self._ctx)
         if self.keep_history:
             if is_delta:
                 # history stays self-contained (and, for topk, exact)
-                blob = serialize_update(update, compress=self.compress)
-            self._put(f"history/{update.node_id}/{update.counter:06d}", blob)
+                blob = self.pipeline.encode_history(update)
+            self._ctx.put(f"history/{update.node_id}/{update.counter:06d}", blob)
 
-    def _push_delta(self, update: NodeUpdate) -> tuple[bytes, bool]:
-        """Deposit a delta when worthwhile, else rebase with a full blob;
-        returns (deposited blob, whether it is a delta)."""
-        node = update.node_id
-        base = self._bases.get(node)
-        if base is not None and base[2] < self.rebase_every:
-            h, base_params, age = base
-            try:
-                blob = serialize_update_delta(
-                    update,
-                    base_params,
-                    h,
-                    quantize=self.transport == "delta_q",
-                    density_threshold=self.delta_density_threshold,
-                    compress=self.compress,
-                )
-            except ValueError:  # tree structure changed vs the base → rebase
-                blob = None
-            # One scan decides: if the encoded delta is not actually smaller
-            # than a full deposit (dense drift — e.g. aggregated params were
-            # adopted), rebase instead of shipping a delta that saves nothing.
-            if blob is not None and len(blob) < tree_size_bytes(update.params):
-                self._put(f"latest/{node}", blob)
-                self._bases[node] = (h, base_params, age + 1)
-                return blob, True
-        full, h = self._deposit_base(node, update, base[0] if base is not None else None)
-        self._bases[node] = (h, canonicalize_params(update.params), 0)
-        return full, False
+    # -- strategy-state recovery blobs ---------------------------------------
+    def push_strategy_state(self, node_id: str, strategy: str, counter: int,
+                            state: dict) -> None:
+        """Persist a node's optimizer state under ``state/<node>`` (riding
+        the pipeline's envelope) so a restarted node can resume its server-
+        optimizer trajectory, not just its params."""
+        blob = serialize_strategy_state(
+            node_id, strategy, counter, state,
+            compress=self.pipeline.compress_arg)
+        self._ctx.put(f"state/{node_id}", blob)
 
-    def _deposit_base(self, node: str, update: NodeUpdate,
-                      old_hash: str | None) -> tuple[bytes, str]:
-        """Rebase: deposit a full blob under base/<node>/<hash> AND latest/,
-        GC superseded bases. Shared by the delta and topk writers."""
-        full = serialize_update(update, compress=self.compress)
-        h = content_hash(full)
-        # Base first, then latest: a reader that sees the new latest can
-        # always resolve its base. Old bases are GC'd only after the new
-        # full latest is in place (readers of the old delta retry into
-        # the new full blob).
-        self._put(f"base/{node}/{h}", full)
-        self._put(f"latest/{node}", full)
-        if old_hash is not None:
-            # common case: we know the one base we deposited — delete it
-            # directly instead of listing the whole folder
-            if old_hash != h:
-                self.folder.delete(f"base/{node}/{old_hash}")
-        else:
-            # first rebase in this process: sweep leftovers from a previous
-            # incarnation (e.g. a crashed client restarting under its id)
-            for key in self.folder.keys():
-                # match on (prefix, hash) split from the right: node ids may
-                # contain '/', so a plain startswith would cross node borders
-                if key.rpartition("/")[0] == f"base/{node}" and key != f"base/{node}/{h}":
-                    self.folder.delete(key)
-        return full, h
-
-    def _push_topk(self, update: NodeUpdate) -> tuple[bytes, bool]:
-        """Error-feedback top-k on flat vectors. The writer tracks ``acc`` —
-        the state readers reconstruct (base + every shipped change). Each push
-        ships only the ``topk_fraction`` largest entries of ``new - acc``; the
-        rest stays in the implicit residual and is drained by later pushes.
-        Wire format: ordinary delta blobs against the content-hashed base, so
-        readers are oblivious to the selection policy. Non-f32-embeddable
-        models (int/f64 leaves) rebase on every push (lossless, just not
-        sparse)."""
-        node = update.node_id
-        state = self._topk.get(node)
-        spec = None
-        if state is not None:
-            spec = state[1]
-            if not spec.describes(update.params):
-                spec, state = None, None
-        if spec is None:
-            spec = LeafSpec.of(update.params)
-        if state is not None and state[4] < self.rebase_every and spec.f32_exact:
-            h, _, base_flat, acc, age = state
-            try:
-                new_flat = spec.flatten(update.params)
-            except ValueError:  # shape drift under the same treedef → rebase
-                new_flat = None
-            if new_flat is not None:
-                v = new_flat - acc
-                k = max(1, int(self.topk_fraction * v.size))
-                nz = int(np.count_nonzero(v))
-                if nz > k:
-                    keep = np.argpartition(np.abs(v), v.size - k)[v.size - k:]
-                    acc[keep] = new_flat[keep]
-                else:
-                    # all changes fit the budget: ship everything (where
-                    # v == 0, acc already equals new_flat — one flat copy)
-                    np.copyto(acc, new_flat)
-                changed = np.flatnonzero(acc != base_flat)
-                blob = serialize_update_delta_from_flat(
-                    update, spec, acc, base_flat, h,
-                    changed=changed,
-                    density_threshold=self.delta_density_threshold,
-                    compress=self.compress,
-                )
-                if len(blob) < tree_size_bytes(update.params):
-                    self._put(f"latest/{node}", blob)
-                    self._topk[node] = (h, spec, base_flat, acc, age + 1)
-                    return blob, True
-        full, h = self._deposit_base(node, update,
-                                     state[0] if state is not None else None)
-        if spec.f32_exact:
-            # acc starts at the wire view of the params — exactly what a
-            # reader decodes from the base blob (f32-exact dtypes guarantee
-            # spec.flatten == the decoded wire values).
-            flat = spec.flatten(update.params)
-            self._topk[node] = (h, spec, flat, flat.copy(), 0)
-        else:
-            self._topk[node] = (h, spec, None, None, self.rebase_every)
-        return full, False
+    def pull_strategy_state(self, node_id: str) -> tuple[dict, dict] | None:
+        """-> (state arrays, meta) from ``state/<node>``, or None."""
+        blob = self._ctx.get(f"state/{node_id}")
+        if blob is None:
+            return None
+        try:
+            return deserialize_strategy_state(blob)
+        except (ValueError, KeyError):
+            return None
 
     # -- state hash fast path -------------------------------------------------
     def state_hash(self, exclude_node: str | None = None) -> str:
-        # A node's deposits span latest/, base/ (delta rebases) and history/;
-        # all of them must be excluded or the node's own push would defeat its
-        # own skip check.
-        exclude = None
+        # A node's deposits span latest/, base/ + chain/ (delta rebases and
+        # chain links) and history/; all of them must be excluded or the
+        # node's own push would defeat its own skip check. state/ blobs are
+        # optimizer recovery data, not federation signal — excluded for
+        # every node so strategy-state deposits never trigger re-pulls.
+        exclude: tuple[str, ...] = ("state/",)
         if exclude_node:
             exclude = (
                 f"latest/{exclude_node}",
                 f"base/{exclude_node}/",
+                f"chain/{exclude_node}/",
                 f"history/{exclude_node}/",
+                "state/",
             )
         return self.folder.state_hash(exclude=exclude)
 
@@ -695,55 +572,14 @@ class WeightStore:
         )
 
     def _decode(self, blob: bytes, node_id: str) -> NodeUpdate | None:
-        """Decode a self-describing blob; None when a delta's base cannot be
-        resolved yet (caller refetches — the writer is mid-rebase).
-
-        The hot path lands in a flat f32 vector (``FlatUpdate`` sharing an
-        interned ``LeafSpec``); blobs that cannot embed losslessly in f32
-        (int/f64 leaves) take the per-leaf tree decode instead."""
-        # Decompress exactly once up front: peek_meta and every decode below
-        # call maybe_decompress themselves, which is a no-op on raw npz bytes
-        # but a full second (or third) zstd pass on a still-wrapped blob.
-        blob = maybe_decompress(blob)
-        meta = peek_meta(blob)
-        base_hash = meta.get("delta_of")
-        if base_hash:
-            base = self._decoded_bases.get(base_hash)
-            if base is None:
-                base_blob = self.folder.get(f"base/{node_id}/{base_hash}")
-                # hash the RAW fetched bytes — writers hash what they deposit
-                if base_blob is None or content_hash(base_blob) != base_hash:
-                    return None
-                base_blob = maybe_decompress(base_blob)
-                try:
-                    spec, base_flat, _ = decode_params_flat(base_blob, self._specs)
-                    base = (spec, base_flat)
-                except FlatDecodeUnsupported:
-                    base = (None, deserialize_update(base_blob).params)
-                if len(self._decoded_bases) > 16:
-                    self._decoded_bases.pop(next(iter(self._decoded_bases)))
-                self._decoded_bases[base_hash] = base
-            spec, base_state = base
-            if spec is not None:
-                try:
-                    return deserialize_update_delta_flat(blob, spec, base_state)
-                except FlatDecodeUnsupported:
-                    pass  # odd-dtype delta values: fall through to tree path
-                except ValueError:
-                    pass  # structure drift vs the base spec: tree path
-                return deserialize_update_delta(blob, spec.unflatten(base_state))
-            return deserialize_update_delta(blob, base_state)
-        try:
-            spec, flat, meta = decode_params_flat(blob, self._specs)
-            return flat_update_from_meta(spec, flat, meta)
-        except FlatDecodeUnsupported:
-            pass
-        if meta.get("quantized"):
-            return deserialize_update_quantized(blob)
-        return deserialize_update(blob)
+        """Decode a self-describing blob; None when a delta's reference chain
+        cannot be resolved yet (caller refetches — the writer is mid-rebase
+        or mid-GC)."""
+        return self.pipeline.decode(blob, node_id, self._ctx)
 
     def _pull_latest(self, node_id: str) -> NodeUpdate | None:
         key = f"latest/{node_id}"
+        stats = self.pipeline.stats
         # Version token read BEFORE the blob (same ordering as CachingFolder):
         # a writer landing in between can only cache a fresh update under a
         # stale token — one redundant decode next time, never a stale hit.
@@ -751,19 +587,19 @@ class WeightStore:
         if v is not None:
             hit = self._decoded_latest.get(key)  # refreshes LRU position
             if hit is not None and hit[0] == v:
-                self.decode_hits += 1
+                stats.decode_hits += 1
                 return hit[1]
         for _ in range(3):
-            blob = self.folder.get(key)
+            blob = self._ctx.get(key)
             if blob is None:
                 return None
             update = self._decode(blob, node_id)
             if update is not None:
-                self.decode_misses += 1
+                stats.decode_misses += 1
                 if v is not None:
                     self._decoded_latest.put(key, (v, update))
                 return update
-            time.sleep(0.01)  # writer mid-rebase; refetch latest + base
+            time.sleep(0.01)  # writer mid-rebase; refetch latest + bases
         return None
 
     def pull(self, exclude: str | None = None) -> list[NodeUpdate]:
@@ -794,19 +630,57 @@ class WeightStore:
             node_id, _, ctr = key[len(prefix):].rpartition("/")
             if not ctr.isdigit() or int(ctr) != counter or node_id == exclude:
                 continue
-            blob = self.folder.get(key)
+            blob = self._ctx.get(key)
             if blob is not None:
                 out.append(self._decode(blob, node_id))
         return [u for u in out if u is not None]
 
+    # -- background prefetch --------------------------------------------------
+    def warm_cache(self, exclude: str | None = None) -> int:
+        """One prefetch sweep: decode every ``latest/`` blob whose cheap
+        ``version()`` token is missing from (or stale in) the decoded-update
+        cache. Returns how many peers were warmed. Safe to call from a
+        background thread concurrently with pulls (all caches are locked)."""
+        if not self.decode_cache_entries:
+            return 0
+        stats = self.pipeline.stats
+        warmed = 0
+        for node_id in self.node_ids():
+            if node_id == exclude:
+                continue
+            key = f"latest/{node_id}"
+            v = self.folder.version(key)
+            hit = self._decoded_latest.get(key)
+            if v is not None and hit is not None and hit[0] == v:
+                continue
+            if self._pull_latest(node_id) is not None:
+                warmed += 1
+        stats.prefetch_cycles += 1
+        stats.prefetched += warmed
+        return warmed
+
+    def start_prefetch(self, interval: float = 0.1, *,
+                       exclude: str | None = None) -> Prefetcher:
+        """Run ``warm_cache`` on a daemon thread every ``interval`` seconds
+        (``exclude`` skips the owning node's own key). Returns the
+        ``Prefetcher`` handle; ``stop_prefetch()`` (or handle.stop()) ends
+        it."""
+        if self._prefetcher is not None:
+            self._prefetcher.stop()
+        self._prefetcher = Prefetcher(self, interval=interval, exclude=exclude)
+        return self._prefetcher
+
+    def stop_prefetch(self) -> None:
+        if self._prefetcher is not None:
+            self._prefetcher.stop()
+            self._prefetcher = None
+
     def clear(self) -> None:
         for key in self.folder.keys():
             self.folder.delete(key)
-        self._bases.clear()
-        self._topk.clear()
-        self._decoded_bases.clear()
+        self.pipeline.reset()
+        self._ctx.clear()
         self._decoded_latest.clear()
-        self._specs.clear()
 
 
 def make_folder(uri: str):
@@ -818,16 +692,25 @@ def make_folder(uri: str):
     per-group folders of the inner kind (e.g. 'shard16+/mnt/shared/exp1',
     'shard8+cache+s3://bucket/exp1') — which the federated nodes turn into a
     gossip-sharded ``ShardedWeightStore`` instead of a flat ``WeightStore``.
-    """
-    if uri.startswith("shard"):
-        from .gossip import SHARD_URI_RE, ShardedFolders  # circular-import guard
 
-        if SHARD_URI_RE.match(uri):
+    The URI grammar is the folder-side half of the transport spec grammar;
+    ``transport.parse_folder_uri`` owns the parse.
+    """
+    wrappers, base = parse_folder_uri(uri)
+    for i, (name, _args) in enumerate(wrappers):
+        if name == "shard":
+            if i != 0:
+                raise ValueError(
+                    f"shard<G>+ must be the outermost wrapper in {uri!r}")
+            from .gossip import ShardedFolders  # circular-import guard
+
             return ShardedFolders.from_uri(uri)
-    if uri.startswith("cache+"):
-        return CachingFolder(make_folder(uri[len("cache+"):]))
-    if uri.startswith("memory://"):
-        return InMemoryFolder()
-    if uri.startswith("s3://"):
-        return S3Folder(uri[len("s3://"):])
-    return DiskFolder(uri)
+    if base.startswith("memory://"):
+        folder: SharedFolder = InMemoryFolder()
+    elif base.startswith("s3://"):
+        folder = S3Folder(base[len("s3://"):])
+    else:
+        folder = DiskFolder(base)
+    for _name, _args in wrappers:  # only cache+ wrappers remain
+        folder = CachingFolder(folder)
+    return folder

@@ -180,6 +180,32 @@ class Strategy(ABC):
     def aggregate(self, own: NodeUpdate, peers: Sequence[NodeUpdate]) -> PyTree:
         """Combine own latest params with peer updates → new local params."""
 
+    # -- recoverable optimizer state ------------------------------------------
+    def state_dict(self) -> dict[str, np.ndarray] | None:
+        """Named flat vectors a restarted node needs to resume this
+        strategy's server-optimizer trajectory (momentum/moment buffers).
+        ``None`` when stateless (nothing worth persisting); the node ships
+        the dict as a ``state/<node>`` recovery blob through the transport
+        pipeline. Stateful subclasses override both hooks."""
+        return None
+
+    def load_state_dict(self, state: dict) -> None:
+        """Restore ``state_dict`` output (a best-effort no-op on mismatch:
+        a recovered blob from an older structure must never crash a fresh
+        node — it just starts cold)."""
+
+    @staticmethod
+    def _flat_state(state: dict, *names: str) -> "list[np.ndarray] | None":
+        """Validate + normalize recovery arrays: all present, equal sizes."""
+        try:
+            vecs = [np.asarray(state[n], np.float32).reshape(-1).copy()
+                    for n in names]
+        except (KeyError, TypeError, ValueError):
+            return None
+        if len({v.size for v in vecs}) != 1:
+            return None
+        return vecs
+
     def reset(self) -> None:  # stateful subclasses extend
         self._spec = None
         self._stack = _StackCache()
@@ -224,6 +250,16 @@ class _FedOpt(Strategy):
     def reset(self) -> None:
         super().reset()
         self.x = self.m = self.v = None
+
+    def state_dict(self) -> dict[str, np.ndarray] | None:
+        if self.x is None:
+            return None
+        return {"x": self.x, "m": self.m, "v": self.v}
+
+    def load_state_dict(self, state: dict) -> None:
+        vecs = self._flat_state(state, "x", "m", "v")
+        if vecs is not None:
+            self.x, self.m, self.v = vecs
 
     def _update_v(self, v: np.ndarray, d2: np.ndarray) -> np.ndarray:
         raise NotImplementedError
@@ -277,6 +313,16 @@ class FedAvgM(Strategy):
     def reset(self) -> None:
         super().reset()
         self.x = self.buf = None
+
+    def state_dict(self) -> dict[str, np.ndarray] | None:
+        if self.x is None:
+            return None
+        return {"x": self.x, "buf": self.buf}
+
+    def load_state_dict(self, state: dict) -> None:
+        vecs = self._flat_state(state, "x", "buf")
+        if vecs is not None:
+            self.x, self.buf = vecs
 
     def aggregate(self, own: NodeUpdate, peers: Sequence[NodeUpdate]) -> PyTree:
         spec = self._resolve_spec(own)

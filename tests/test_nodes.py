@@ -126,3 +126,24 @@ def test_async_node_survives_peer_crash():
     assert res[0].error is not None
     assert res[1].error is None
     assert any(r is not None for r in res[1].result)  # still aggregated crash's deposit
+
+
+def test_sync_timeout_deadline_uses_injected_clock():
+    """The barrier deadline must run on the node's injected clock (satellite
+    fix: it used time.monotonic() directly), so simulated-clock harnesses can
+    age the barrier without real sleeping: a 500-virtual-second timeout with
+    a fast virtual clock must raise in well under a real second."""
+    t = {"now": 0.0}
+
+    def clock():
+        t["now"] += 100.0
+        return t["now"]
+
+    node = SyncFederatedNode(num_nodes=2, timeout=500.0, poll_interval=0.0,
+                             shared_folder=InMemoryFolder(), node_id="solo",
+                             clock=clock)
+    t0 = time.monotonic()
+    with pytest.raises(FederationTimeout):
+        node.update_parameters(params(1.0), num_examples=1)
+    assert time.monotonic() - t0 < 5.0  # virtual deadline, not 500 real s
+    assert t["now"] > 500.0  # the virtual clock is what expired

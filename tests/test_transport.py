@@ -367,3 +367,385 @@ def test_diskfolder_state_hash_changes_on_same_size_rewrite(tmp_path):
     h1 = folder.state_hash()
     folder.put("latest/a", b"same-bytes")
     assert folder.state_hash() != h1
+
+
+# --- the composable pipeline: spec grammar --------------------------------
+
+
+def _pipe():
+    from repro.core import normalize_transport
+    return normalize_transport
+
+
+def test_pipeline_spec_grammar_and_legacy_mapping():
+    from repro.core import normalize_transport, parse_folder_uri
+
+    # all five legacy names map onto pipeline specs
+    assert normalize_transport("full") == "full"
+    assert normalize_transport("quantized") == "quantized"
+    assert normalize_transport("delta") == "delta"
+    assert normalize_transport("delta_q") == "delta(q)"
+    assert normalize_transport("topk") == "topk"
+    assert normalize_transport(None) == "full"
+    assert normalize_transport(None, quantized=True) == "quantized"
+    # compress= appends the envelope stage
+    assert normalize_transport("delta", compress="npz") == "delta|npz"
+    # explicit pipeline specs canonicalize deterministically
+    assert normalize_transport("topk|delta") == "topk"
+    assert normalize_transport("delta(chain=4)") == "delta(chain=4)"
+    assert normalize_transport("topk(adaptive)") == "topk(adaptive)"
+    assert normalize_transport("delta(chain=1)") == "delta"
+    # the folder-URI side of the grammar is the same parser family
+    wrappers, base = parse_folder_uri("shard8+cache+/mnt/x")
+    assert wrappers == [("shard", {"groups": 8}), ("cache", {})]
+    assert base == "/mnt/x"
+    assert parse_folder_uri("memory://") == ([], "memory://")
+
+
+def test_pipeline_spec_rejects_garbage():
+    from repro.core import normalize_transport
+
+    for bad in ("gzip", "delta(chain=0)", "delta(q,chain=2)", "npz|delta",
+                "delta|npz|zstd", "full(x=1)", "topk(fraction=2.0)",
+                "delta(wat=1)", "full|delta", "topk|delta(chain=2)", ""):
+        with pytest.raises(ValueError):
+            normalize_transport(bad)
+    with pytest.raises(ValueError):
+        WeightStore(InMemoryFolder(), transport="delta", compress="gzip")
+
+
+def test_store_and_nodes_accept_pipeline_specs(tmp_path):
+    """A full spec string flows through WeightStore, AsyncFederatedNode, and
+    ShardedWeightStore; node-vs-store agreement compares canonical specs, so
+    'delta_q' matches a 'delta(q)' store."""
+    from repro.core.gossip import ShardedWeightStore
+
+    store = WeightStore(InMemoryFolder(), transport="delta(chain=3)|npz")
+    assert store.transport == "delta(chain=3)|npz"
+    assert store.compress == "npz"
+    AsyncFederatedNode(store=WeightStore(InMemoryFolder(), transport="delta_q"),
+                       transport="delta(q)")  # canonical match: no raise
+    sharded = ShardedWeightStore("shard2+memory://", transport="delta(chain=2)")
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        sharded.push(NodeUpdate(_params(rng), num_examples=1,
+                                node_id=f"n{i}", counter=0))
+    assert len(sharded.pull()) == 4
+    with pytest.raises(ValueError):
+        ShardedWeightStore("shard2+memory://", transport="gzip")
+
+
+# --- delta chains ----------------------------------------------------------
+
+
+def _chain_depth_of(folder, node="n"):
+    """Reconstruction depth the current latest blob advertises: 0 = full,
+    1 = plain delta (no chain_depth meta), else the chain_depth meta."""
+    from repro.core.serialize import maybe_decompress
+
+    meta = peek_meta(maybe_decompress(folder.get(f"latest/{node}")))
+    if "delta_of" not in meta:
+        return 0
+    return int(meta.get("chain_depth", 1))
+
+
+def _step(params, rng, kind):
+    """One adversarial local step: sparse drift, a dense rewrite (forces the
+    writer's rebase guard), a single-entry tweak, or a no-op re-push."""
+    if kind == "same":
+        return {k: (dict(v) if isinstance(v, dict) else v) for k, v in params.items()}
+    if kind == "dense":
+        return _params(rng)
+    return _sparse_step(params, rng, fraction=0.02 if kind == "sparse" else 0.0005)
+
+
+from _hyp import given, settings, strategies as hyp_st  # noqa: E402
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    chain=hyp_st.integers(1, 4),
+    rebase=hyp_st.integers(3, 9),
+    kinds=hyp_st.lists(hyp_st.sampled_from(["sparse", "dense", "tiny", "same"]),
+                       min_size=4, max_size=12),
+    seed=hyp_st.integers(0, 2**16),
+)
+def test_delta_chain_reconstructs_bitwise_through_bounded_hops(chain, rebase, kinds, seed):
+    """The chain-transport contract, under adversarial push orderings: after
+    EVERY push, (a) a fresh reader and a steady reader both reconstruct the
+    pushed params bit-exactly, (b) the advertised reconstruction depth never
+    exceeds ``chain``, and (c) re-anchoring fires exactly at the bound — a
+    depth-``chain`` blob is followed by depth 1 (re-anchor) or 0 (rebase)."""
+    rng = np.random.default_rng(seed)
+    folder = InMemoryFolder()
+    store = WeightStore(folder, transport=f"delta(chain={chain})",
+                        rebase_every=rebase)
+    steady = WeightStore(folder)
+    params = _params(rng)
+    depths = []
+    for ctr, kind in enumerate(kinds):
+        params = _step(params, rng, kind)
+        store.push(NodeUpdate(params, num_examples=1, node_id="n", counter=ctr))
+        depth = _chain_depth_of(folder)
+        assert depth <= chain, (depths, depth)
+        depths.append(depth)
+        for reader in (WeightStore(folder), steady):  # fresh + steady
+            got = reader.pull_node("n")
+            assert got is not None and got.counter == ctr
+            np.testing.assert_array_equal(got.params["layer"]["w"],
+                                          params["layer"]["w"])
+            np.testing.assert_array_equal(got.params["head"], params["head"])
+    for prev, nxt in zip(depths, depths[1:]):
+        if prev == chain:       # bound hit → re-anchor (or a full rebase)
+            assert nxt in (0, 1), depths
+        elif prev > 0 and nxt not in (0, 1):
+            assert nxt == prev + 1, depths  # links deepen one hop at a time
+    # chain links are GC'd as segments retire: never more than the current
+    # segment's referencable links, and exactly one base
+    chain_keys = [k for k in folder.keys() if k.startswith("chain/")]
+    base_keys = [k for k in folder.keys() if k.startswith("base/")]
+    assert len(chain_keys) <= max(chain - 1, 0) and len(base_keys) == 1
+
+
+def test_delta_chain_wire_bytes_strictly_below_plain_delta():
+    """The point of chains: per-push bytes track one step's sparsity instead
+    of the drift accumulated since the base. Same sparse-step schedule, same
+    rebase cadence → chain=4 moves strictly fewer bytes (writer deposits +
+    steady-reader reads) than plain delta."""
+    wire = {}
+    for transport in ("delta", "delta(chain=4)"):
+        rng = np.random.default_rng(42)
+        folder = InMemoryFolder()
+        writer = WeightStore(folder, transport=transport, rebase_every=50)
+        reader = WeightStore(folder)
+        params = _params(rng)
+        for ctr in range(12):
+            params = _sparse_step(params, rng, fraction=0.005)
+            writer.push(NodeUpdate(params, num_examples=1, node_id="n", counter=ctr))
+            got = reader.pull_node("n")
+            np.testing.assert_array_equal(got.params["head"], params["head"])
+        wire[transport] = writer.bytes_written + reader.bytes_read
+    assert wire["delta(chain=4)"] < wire["delta"], wire
+
+
+def test_async_skip_check_survives_chain_links(tmp_path):
+    """A node's own chain/ deposits (like its base/ rebases) must not defeat
+    its own state-hash skip check."""
+    folder = DiskFolder(str(tmp_path))
+    node = AsyncFederatedNode(strategy=FedAvg(), shared_folder=folder,
+                              node_id="solo", transport="delta(chain=3)")
+    rng = np.random.default_rng(3)
+    p = _params(rng)
+    assert node.update_parameters(p, num_examples=1) is None
+    pulls_before = node.num_pulls
+    for _ in range(4):
+        p = _sparse_step(p, rng)
+        assert node.update_parameters(p, num_examples=1) is None
+    assert node.num_pulls == pulls_before
+    assert node.num_skipped_pulls >= 4
+
+
+def test_chain_federation_matches_full_bitwise(tmp_path):
+    """End-to-end: a chained-delta federation produces bitwise-identical
+    aggregates to the full-blob path (the PR-3 equivalence bar, extended to
+    the new codec)."""
+    full_aggs, _ = _run_federation(str(tmp_path / "full"), "full", adopt=False)
+    chain_aggs, _ = _run_federation(str(tmp_path / "chain"), "delta(chain=3)",
+                                    adopt=False)
+    assert len(full_aggs) == len(chain_aggs) > 0
+    for pf, pc in zip(full_aggs, chain_aggs):
+        assert np.array_equal(pf["layer"]["w"], pc["layer"]["w"])
+        assert np.array_equal(pf["head"], pc["head"])
+
+
+# --- background prefetch ----------------------------------------------------
+
+
+def test_warm_cache_prefetches_stale_peers():
+    folder = InMemoryFolder()
+    writer = WeightStore(folder)
+    reader = WeightStore(folder)
+    rng = np.random.default_rng(5)
+    for i in range(3):
+        writer.push(NodeUpdate(_params(rng), num_examples=1,
+                               node_id=f"n{i}", counter=0))
+    assert reader.warm_cache() == 3
+    assert reader.warm_cache() == 0        # second sweep: everything warm
+    assert len(reader.pull()) == 3
+    stats = reader.transport_stats()
+    assert stats["decode_hits"] == 3       # the pull paid zero decodes
+    assert stats["prefetched"] == 3 and stats["prefetch_cycles"] == 2
+    # warm_cache(exclude=...) skips the owner's own deposit
+    assert reader.warm_cache(exclude="n0") == 0
+
+
+def test_prefetch_thread_warms_between_steps():
+    import time as _time
+
+    folder = InMemoryFolder()
+    writer = WeightStore(folder)
+    reader = WeightStore(folder)
+    handle = reader.start_prefetch(0.005)
+    try:
+        rng = np.random.default_rng(6)
+        writer.push(NodeUpdate(_params(rng), num_examples=1, node_id="p", counter=0))
+        deadline = _time.monotonic() + 5.0
+        while reader.transport_stats()["prefetched"] < 1:
+            assert _time.monotonic() < deadline, "prefetcher never warmed the cache"
+            _time.sleep(0.01)
+        misses_before = reader.decode_misses
+        assert len(reader.pull()) == 1
+        assert reader.decode_misses == misses_before  # pull was all hits
+    finally:
+        reader.stop_prefetch()
+    assert not handle.running
+
+
+def test_node_prefetch_kwarg_wires_through():
+    folder = InMemoryFolder()
+    node = AsyncFederatedNode(strategy=FedAvg(), shared_folder=folder,
+                              node_id="a", prefetch_interval=0.005)
+    try:
+        assert node.store._prefetcher is not None and node.store._prefetcher.running
+        assert node.store._prefetcher.exclude == "a"
+    finally:
+        node.store.stop_prefetch()
+
+
+# --- adaptive top-k ----------------------------------------------------------
+
+
+def test_adaptive_topk_scales_k_with_residual_norm():
+    """topk(adaptive): a burst of change (residual norm spiking above its
+    running mean) ships more entries than the steady state; quiet stretches
+    ship fewer than the configured fraction."""
+    N = 20_000
+    store = WeightStore(InMemoryFolder(), transport="topk(adaptive)",
+                        topk_fraction=0.01, rebase_every=1000)
+    rng = np.random.default_rng(7)
+    cur = np.zeros((N,), np.float32)
+    store.push(NodeUpdate({"w": cur}, num_examples=1, node_id="n", counter=0))
+    steady_k = None
+    for ctr in range(1, 6):
+        cur = cur.copy()
+        cur[rng.choice(N, 50, replace=False)] += 0.1
+        store.push(NodeUpdate({"w": cur}, num_examples=1, node_id="n", counter=ctr))
+        steady_k = store.pipeline.stats.topk_k
+    assert steady_k < int(0.01 * N)  # quiet regime: below the base fraction
+    cur = cur + rng.normal(size=N).astype(np.float32)  # dense burst
+    store.push(NodeUpdate({"w": cur}, num_examples=1, node_id="n", counter=99))
+    burst_k = store.pipeline.stats.topk_k
+    assert burst_k > steady_k
+    assert store.pipeline.stats.topk_fraction_effective > 0.01
+    assert store.pipeline.stats.residual_norm > 0.0
+
+
+def test_adaptive_topk_error_feedback_still_drains():
+    """Adaptivity must not break the error-feedback contract: repeatedly
+    pushing the same target converges readers to it exactly."""
+    store = WeightStore(InMemoryFolder(), transport="topk(adaptive)",
+                        topk_fraction=0.25, rebase_every=1000)
+    target = {"w": np.linspace(-2, 2, 4096).astype(np.float32)}
+    store.push(NodeUpdate({"w": np.zeros((4096,), np.float32)},
+                          num_examples=1, node_id="n", counter=0))
+    for ctr in range(1, 40):
+        store.push(NodeUpdate(target, num_examples=1, node_id="n", counter=ctr))
+    pulled = WeightStore(store.folder).pull_node("n")
+    np.testing.assert_array_equal(pulled.params["w"], target["w"])
+
+
+# --- strategy-state recovery blobs -------------------------------------------
+
+
+@pytest.mark.parametrize("strategy_name", ["fedavgm", "fedadam"])
+def test_strategy_state_survives_restart(strategy_name, tmp_path):
+    """A resumed node restores its server-optimizer state (momentum/moments)
+    from the state/ blob, so its next aggregation continues the trajectory
+    instead of starting cold."""
+    from repro.core.strategies import get_strategy
+
+    folder = DiskFolder(str(tmp_path))
+    mk = lambda: get_strategy(strategy_name, server_lr=0.5)
+    a = AsyncFederatedNode(strategy=mk(), shared_folder=folder, node_id="a",
+                           persist_strategy_state=True)
+    b = AsyncFederatedNode(strategy=mk(), shared_folder=folder, node_id="b",
+                           persist_strategy_state=True)
+    rng = np.random.default_rng(8)
+    pa, pb = _params(rng), _params(rng)
+    a.update_parameters(pa, num_examples=1)
+    b.update_parameters(pb, num_examples=1)
+    assert a.update_parameters(pa, num_examples=1) is not None
+    ref = {k: v.copy() for k, v in a.strategy.state_dict().items()}
+    # crash + restart under the same id: state restored bit-exactly
+    a2 = AsyncFederatedNode(strategy=mk(), shared_folder=folder, node_id="a",
+                            persist_strategy_state=True)
+    assert a2.resumed is not None
+    restored = a2.strategy.state_dict()
+    assert restored is not None and set(restored) == set(ref)
+    for k in ref:
+        np.testing.assert_array_equal(restored[k], ref[k], err_msg=k)
+    # and the restored node aggregates without error
+    pb2 = _sparse_step(pb, rng)
+    b.update_parameters(pb2, num_examples=1)
+    assert a2.update_parameters(pa, num_examples=1) is not None
+
+
+def test_stateless_strategy_persists_nothing():
+    folder = InMemoryFolder()
+    a = AsyncFederatedNode(strategy=FedAvg(), shared_folder=folder, node_id="a",
+                           persist_strategy_state=True)
+    b = AsyncFederatedNode(strategy=FedAvg(), shared_folder=folder, node_id="b")
+    a.update_parameters({"w": np.ones((4,), np.float32)}, num_examples=1)
+    b.update_parameters({"w": np.zeros((4,), np.float32)}, num_examples=1)
+    a.update_parameters({"w": np.ones((4,), np.float32)}, num_examples=1)
+    assert not [k for k in folder.keys() if k.startswith("state/")]
+
+
+def test_state_blobs_do_not_defeat_skip_checks():
+    """state/ deposits are recovery data, not federation signal: they are
+    excluded from every node's state hash, so a peer persisting its optimizer
+    state must not trigger redundant re-pulls fleet-wide."""
+    from repro.core.strategies import FedAvgM
+
+    folder = InMemoryFolder()
+    a = AsyncFederatedNode(strategy=FedAvgM(), shared_folder=folder, node_id="a",
+                           persist_strategy_state=True)
+    b = AsyncFederatedNode(strategy=FedAvgM(), shared_folder=folder, node_id="b",
+                           persist_strategy_state=True)
+    p = {"w": np.ones((8,), np.float32)}
+    a.update_parameters(p, num_examples=1)
+    b.update_parameters(p, num_examples=1)          # b aggregates + persists
+    assert a.update_parameters(p, num_examples=1) is not None  # a folds b in
+    skipped = a.num_skipped_pulls
+    # nothing but a's own pushes (and state blobs) changes now → all skips
+    for _ in range(3):
+        assert a.update_parameters(p, num_examples=1) is None
+    assert a.num_skipped_pulls == skipped + 3
+
+
+def test_node_transport_matches_store_with_compress_envelope():
+    """Regression: a node asserting the legacy wire policy must accept a
+    store that folded a compress= envelope into its canonical spec — the
+    envelope is a store-construction detail, not a policy disagreement."""
+    store = WeightStore(InMemoryFolder(), transport="delta", compress="npz")
+    AsyncFederatedNode(store=store, transport="delta")        # no raise
+    AsyncFederatedNode(store=store, transport="delta|npz")    # exact: no raise
+    with pytest.raises(ValueError):
+        AsyncFederatedNode(store=store, transport="full")
+
+
+def test_prefetcher_does_not_pin_its_store():
+    """The prefetch thread must hold only a weak reference: a short-lived
+    store that was never stop_prefetch()-ed stays collectable (its caches
+    hold model-sized decoded vectors) and the poller exits on its own."""
+    import gc
+    import weakref
+
+    store = WeightStore(InMemoryFolder(), prefetch_interval=0.01)
+    ref = weakref.ref(store)
+    handle = store._prefetcher
+    del store
+    gc.collect()
+    assert ref() is None, "prefetch thread kept the store alive"
+    handle._thread.join(timeout=5.0)
+    assert not handle.running
