@@ -1,0 +1,73 @@
+"""Shared schema for ``BENCH_*.json`` artifacts.
+
+Every benchmark writer (``--only agg`` / ``--only transport`` / ``--only
+soak``) funnels its payload through :func:`write_bench`, which stamps the
+machine-comparable header — schema version, git sha, UTC timestamp, the
+swept sizes — on top of the benchmark's own ``results`` / ``acceptance``
+fields. ``benchmarks.compare`` consumes two such files (a committed baseline
+and a fresh run) and renders the trend table the nightly workflow posts to
+its step summary; :func:`numeric_metrics` defines what "comparable" means:
+every numeric leaf, flattened to a ``/``-joined path.
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import subprocess
+
+SCHEMA_VERSION = 1
+
+
+def git_sha() -> str:
+    """Current commit sha, or 'unknown' outside a git checkout (the schema
+    must never make a benchmark run fail)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, check=False)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.SubprocessError):  # incl. TimeoutExpired
+        return "unknown"
+
+
+def finalize(payload: dict, *, benchmark: str, sizes=None) -> dict:
+    """Stamp the shared header onto a benchmark's own payload fields."""
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "benchmark": benchmark,
+        "git_sha": git_sha(),
+        "timestamp": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"),
+        "sizes": [int(s) for s in sizes] if sizes is not None else None,
+        **{k: v for k, v in payload.items() if k != "benchmark"},
+    }
+
+
+def write_bench(path: str, payload: dict, *, benchmark: str, sizes=None) -> dict:
+    """Finalize + write one BENCH_*.json; returns the finalized payload."""
+    final = finalize(payload, benchmark=benchmark, sizes=sizes)
+    with open(path, "w") as f:
+        json.dump(final, f, indent=2)
+    return final
+
+
+_HEADER_KEYS = ("schema_version", "git_sha", "timestamp", "sizes")
+
+
+def numeric_metrics(payload: dict, prefix: str = "") -> dict[str, float]:
+    """Flatten every numeric leaf of a BENCH payload into ``a/b/c`` paths —
+    the comparable surface of a benchmark file. Header fields and booleans
+    (acceptance flags are pass/fail, not trends) are skipped."""
+    out: dict[str, float] = {}
+    for key, value in payload.items():
+        if not prefix and key in _HEADER_KEYS:
+            continue
+        path = f"{prefix}/{key}" if prefix else str(key)
+        if isinstance(value, bool):
+            continue
+        if isinstance(value, (int, float)):
+            out[path] = float(value)
+        elif isinstance(value, dict):
+            out.update(numeric_metrics(value, path))
+    return out

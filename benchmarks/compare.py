@@ -1,0 +1,96 @@
+"""Render a trend table comparing fresh ``BENCH_*.json`` runs against
+committed baselines.
+
+    python -m benchmarks.compare --baseline-dir baseline --current-dir . \
+        [--names BENCH_agg.json,BENCH_transport.json,BENCH_soak.json]
+
+Prints a GitHub-flavored markdown table (the nightly workflow appends it to
+``$GITHUB_STEP_SUMMARY``). Report-only by design: shared CI runners are far
+too noisy for hard perf gates, so the exit code conveys file problems, never
+regressions. Metrics are the numeric leaves of the shared schema
+(``benchmarks._schema.numeric_metrics``); a missing baseline renders as new.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from ._schema import numeric_metrics
+
+DEFAULT_NAMES = ("BENCH_agg.json", "BENCH_transport.json", "BENCH_soak.json")
+
+
+def load(path: str) -> dict | None:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare_payloads(baseline: dict | None, current: dict) -> list[tuple[str, float | None, float, float | None]]:
+    """-> rows of (metric path, baseline value | None, current value, delta %
+    | None), ordered by metric path."""
+    base_metrics = numeric_metrics(baseline) if baseline else {}
+    cur_metrics = numeric_metrics(current)
+    rows = []
+    for path in sorted(cur_metrics):
+        cur = cur_metrics[path]
+        base = base_metrics.get(path)
+        delta = None
+        if base is not None and base != 0:
+            delta = 100.0 * (cur - base) / abs(base)
+        rows.append((path, base, cur, delta))
+    return rows
+
+
+def _fmt(v: float | None) -> str:
+    if v is None:
+        return "—"
+    if v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return f"{v:.4g}"
+
+
+def render_markdown(name: str, baseline: dict | None, current: dict) -> str:
+    lines = [f"### {name}"]
+    base_sha = (baseline or {}).get("git_sha", "—")
+    cur_sha = current.get("git_sha", "—")
+    lines.append(f"baseline `{str(base_sha)[:12]}` → current `{str(cur_sha)[:12]}` "
+                 f"({current.get('timestamp', '?')}) — report-only, no perf gate")
+    lines.append("")
+    lines.append("| metric | baseline | current | Δ% |")
+    lines.append("| --- | ---: | ---: | ---: |")
+    for path, base, cur, delta in compare_payloads(baseline, current):
+        delta_s = "new" if delta is None and base is None else _fmt(delta)
+        if delta is not None:
+            delta_s = f"{delta:+.1f}%"
+        lines.append(f"| `{path}` | {_fmt(base)} | {_fmt(cur)} | {delta_s} |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline-dir", default="baseline",
+                    help="directory holding the committed baseline BENCH_*.json")
+    ap.add_argument("--current-dir", default=".",
+                    help="directory holding the fresh BENCH_*.json")
+    ap.add_argument("--names", default=",".join(DEFAULT_NAMES),
+                    help="comma-separated BENCH file names to compare")
+    args = ap.parse_args(argv)
+
+    missing_current = 0
+    for name in [n.strip() for n in args.names.split(",") if n.strip()]:
+        current = load(os.path.join(args.current_dir, name))
+        if current is None:
+            print(f"### {name}\n\n_current run missing — benchmark did not write it_\n")
+            missing_current += 1
+            continue
+        baseline = load(os.path.join(args.baseline_dir, name))
+        print(render_markdown(name, baseline, current))
+    return 1 if missing_current else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

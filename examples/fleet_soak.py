@@ -1,0 +1,90 @@
+"""Fleet chaos soak — the multi-host launcher, from laptop to shared mount.
+
+The same ``FleetSpec`` drives all three deployments; nothing but the store
+path changes, because the fleet coordinates *through the folder alone*
+(spec, slot claims, heartbeats, results are all ``fleet/`` blobs — no
+coordinator in the data path):
+
+1. **Single host, one command** (this script, or ``repro.fleet launch``):
+   two in-process workers partition the fleet, chaos kills + restarts
+   included::
+
+       PYTHONPATH=src python examples/fleet_soak.py
+       PYTHONPATH=src python examples/fleet_soak.py --nodes 16 --kills 3 --runner process
+
+2. **Two terminals = two "hosts"** (what CI's soak-smoke job does)::
+
+       # terminal 1
+       PYTHONPATH=src python -m repro.fleet init --store /tmp/soak \\
+           --nodes 8 --rounds 8 --chaos-kills 2 --seed 7
+       PYTHONPATH=src python -m repro.fleet worker --store /tmp/soak \\
+           --worker-id hostA --max-slots 4
+       # terminal 2
+       PYTHONPATH=src python -m repro.fleet worker --store /tmp/soak \\
+           --worker-id hostB --max-slots 4
+       # either terminal (or a third, read-only)
+       PYTHONPATH=src python -m repro.fleet report --store /tmp/soak --assert-passed
+
+3. **Real machines**: point ``--store`` at a shared mount — NFS, gcsfuse,
+   s3fs — and run ``worker`` once per machine. Slot claims use link(2)-based
+   atomic creates (atomic on NFS), workers never talk to each other, and any
+   host can run ``watch``/``report``. Sharded stores compose:
+   ``--store "shard16+/mnt/shared/soak"`` keeps per-push scans O(group) at
+   10³+ nodes while the control blobs land in the base directory.
+
+The soak passes only if every node finished its rounds, every SIGKILLed
+node's restarted incarnation reports ``resumed=True`` (counter + params +
+strategy state recovered from its own deposits), and every worker
+independently computed the same fleet-wide ``state_hash``.
+"""
+import argparse
+import tempfile
+
+from repro.core import ChaosSpec, FleetSpec, run_fleet_local
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--store", default=None,
+                    help="shared folder URI (default: fresh temp dir); "
+                         "cache+/shard<G>+ wrappers compose")
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--kills", type=int, default=2,
+                    help="seeded SIGKILL-then-restart victims")
+    ap.add_argument("--stalls", type=int, default=1,
+                    help="seeded slow-node stall victims")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--runner", choices=("thread", "process"), default="thread",
+                    help="'process' = one OS process per node (real SIGKILLs); "
+                         "'thread' = in-process soak (fast, 10^2-node scale)")
+    ap.add_argument("--transport", default=None,
+                    help="pipeline spec, e.g. 'delta(chain=4)|npz'")
+    args = ap.parse_args(argv)
+
+    store = args.store or tempfile.mkdtemp(prefix="fleet_soak_")
+    spec = FleetSpec(
+        store_uri=store,
+        num_nodes=args.nodes,
+        rounds=args.rounds,
+        runner=args.runner,
+        transport=args.transport,
+        round_sleep=0.02 if args.runner == "thread" else 0.05,
+        chaos=ChaosSpec(seed=args.seed, kills=args.kills, stalls=args.stalls,
+                        restart_after=0.3, stall_duration=0.3),
+    )
+    print(f"soaking {spec.num_nodes} nodes x {spec.rounds} rounds over {store!r} "
+          f"({args.workers} workers, runner={spec.runner}, "
+          f"kills={args.kills}, stalls={args.stalls}, seed={args.seed})")
+    report = run_fleet_local(spec, num_workers=args.workers)
+    print()
+    print(report.summary())
+    if report.recovery_latency:
+        for node, latency in sorted(report.recovery_latency.items()):
+            print(f"  {node}: SIGKILL -> resumed push in {latency:.2f}s")
+    raise SystemExit(0 if report.passed else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,19 @@ from .gossip import (
     balanced_groups,
     default_group_of,
 )
+from .fleet import (
+    ChaosEvent,
+    ChaosSpec,
+    FleetSpec,
+    SoakReport,
+    WorkerReport,
+    assemble_report,
+    chaos_schedule,
+    claim_slots,
+    fleet_state_hash,
+    run_fleet_local,
+    run_worker,
+)
 from .node import AsyncFederatedNode, FederationTimeout, SyncFederatedNode
 from .partition import partition_dataset, partition_sequence_dataset, skewed_assignment
 from .serialize import (
@@ -34,6 +47,7 @@ from .tree import LeafSpec
 from .simulation import (
     ClientResult,
     ProcessCrashed,
+    ProcessSupervisor,
     run_multiprocess,
     run_threaded,
     simulate_timeline,
@@ -124,6 +138,18 @@ __all__ = [
     "run_multiprocess",
     "ClientResult",
     "ProcessCrashed",
+    "ProcessSupervisor",
     "simulate_timeline",
     "straggler_speedup",
+    "FleetSpec",
+    "ChaosSpec",
+    "ChaosEvent",
+    "SoakReport",
+    "WorkerReport",
+    "chaos_schedule",
+    "claim_slots",
+    "fleet_state_hash",
+    "run_worker",
+    "run_fleet_local",
+    "assemble_report",
 ]

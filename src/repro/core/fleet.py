@@ -1,0 +1,816 @@
+"""Multi-host fleet launcher + chaos soak harness.
+
+Generalizes ``run_multiprocess`` from "N processes, one parent" to
+"N nodes × M hosts, **no parent required**". Everything the fleet needs to
+coordinate — the declarative :class:`FleetSpec`, slot claims, heartbeats,
+per-node results, per-worker reports — lives *in the shared folder itself*
+as ``fleet/``-prefixed blobs (meta-dispatched like every other deposit, and
+excluded from all federation state hashes), so the launcher mirrors the
+serverless design exactly: there is no coordinator in the data path.
+
+The moving parts:
+
+* **FleetSpec** — nodes, rounds, strategy, transport pipeline spec, store URI
+  (the existing ``cache+`` / ``shard<G>+`` grammar), runner kind and a seeded
+  chaos schedule. ``repro.fleet init`` serializes it to the shared folder;
+  from then on any host can join.
+
+* **Workers** (``repro.fleet worker --store <uri>``) — each host reads the
+  spec, *claims node slots* via atomic ``put_if_absent`` writes (link(2) on
+  DiskFolder — atomic even on NFS), runs its claimed nodes in local OS
+  processes under a :class:`ProcessSupervisor` (or threads, for in-process
+  soaks at 10²-node scale), drives the chaos schedule against them, and
+  deposits heartbeat + result blobs. A restarted worker (same ``worker_id``)
+  reclaims its own slots.
+
+* **Chaos engine** — extends ``kill_after`` into a *seeded, randomized
+  schedule* derived deterministically from ``(seed, node_id)``: victims park
+  mid-round after a drawn number of federation pushes, the worker SIGKILLs
+  them the moment the parked heartbeat lands (backstop timer otherwise), then
+  respawns them after ``restart_after`` — the reborn node must *resume*
+  (counter, params, strategy state) from its own deposits. Stall events make
+  drawn nodes sleep mid-soak (the slow-node/straggler case async federation
+  must absorb).
+
+* **SoakReport** (``repro.fleet watch`` / ``report``, or any worker) —
+  assembled purely from the folder: rounds completed per node, crashes
+  injected / survived, restart recoveries (``resumed``), recovery latency,
+  per-pipeline :class:`PipelineStats` rollups, wall-clock / bytes budgets.
+  The soak *passes* only if every node finished its rounds, every
+  killed-then-restarted node reports ``resumed=True``, and **every worker
+  independently computed the same fleet-wide ``state_hash``** over the data
+  plane after quiescence.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import threading
+import time
+import uuid
+from dataclasses import asdict, dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+from .node import AsyncFederatedNode
+from .serialize import deserialize_fleet_blob, serialize_fleet_blob
+from .simulation import ProcessSupervisor
+from .store import SharedFolder, WeightStore, make_folder
+from .strategies import STRATEGIES, get_strategy
+from .transport import normalize_transport, parse_folder_uri
+
+FLEET_PREFIX = "fleet/"
+SPEC_KEY = "fleet/spec"
+_CLAIM_PREFIX = "fleet/claim/"
+_HEARTBEAT_PREFIX = "fleet/heartbeat/"
+_RESULT_PREFIX = "fleet/result/"
+_WORKER_PREFIX = "fleet/worker/"
+
+
+# --------------------------------------------------------------------------
+# Declarative specs
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class ChaosSpec:
+    """Seeded chaos parameters; the concrete per-node schedule is derived
+    deterministically by :func:`chaos_schedule` (same seed + node set →
+    identical schedule on every host, with no host-to-host messages)."""
+
+    seed: int = 0
+    kills: int = 0                 # distinct SIGKILL-then-restart victims
+    park_after: tuple = (2, 4)     # victim parks after U[a,b] federation pushes
+    kill_grace: float = 30.0       # backstop SIGKILL this long after spawn
+    restart_after: float = 0.5     # delay before the victim is respawned
+    stalls: int = 0                # distinct slow-node stall victims
+    stall_after: tuple = (1, 3)    # stall after U[a,b] pushes
+    stall_duration: float = 1.0
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["park_after"] = list(self.park_after)
+        d["stall_after"] = list(self.stall_after)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ChaosSpec":
+        d = dict(d)
+        for key in ("park_after", "stall_after"):
+            if key in d:
+                d[key] = tuple(int(v) for v in d[key])
+        return cls(**d)
+
+
+@dataclass
+class FleetSpec:
+    """One soak, declaratively: everything a joining host needs to run its
+    share of the fleet. Serialized to the shared folder (``fleet/spec``) —
+    the spec travels with the store, not with any process."""
+
+    store_uri: str                 # data plane; cache+/shard<G>+ grammar
+    name: str = "soak"
+    num_nodes: int = 8
+    rounds: int = 10               # federation pushes per node, across incarnations
+    strategy: str = "fedavg"
+    transport: str | None = None   # pipeline spec string (transport.py grammar)
+    runner: str = "process"        # "process" (real SIGKILLs) | "thread" (in-process soaks)
+    param_size: int = 256          # synthetic consensus model size (f32 entries)
+    round_sleep: float = 0.05      # local "training" time per round
+    settle: float = 1.0            # quiescence wait before the fleet hash
+    result_timeout: float = 180.0  # how long a worker waits for ALL fleet results
+    node_prefix: str = "node"
+    chaos: ChaosSpec = field(default_factory=ChaosSpec)
+
+    def __post_init__(self) -> None:
+        if isinstance(self.chaos, dict):
+            self.chaos = ChaosSpec.from_dict(self.chaos)
+        if self.num_nodes < 1:
+            raise ValueError(f"num_nodes must be >= 1, got {self.num_nodes}")
+        if self.rounds < 1:
+            raise ValueError(f"rounds must be >= 1, got {self.rounds}")
+        if self.runner not in ("process", "thread"):
+            raise ValueError(f"runner must be 'process' or 'thread', got {self.runner!r}")
+        if self.param_size < 1:
+            raise ValueError(f"param_size must be >= 1, got {self.param_size}")
+        if self.chaos.kills < 0 or self.chaos.stalls < 0:
+            raise ValueError("chaos.kills / chaos.stalls must be >= 0")
+        if self.chaos.kills + self.chaos.stalls > self.num_nodes:
+            raise ValueError(
+                f"chaos victims ({self.chaos.kills} kills + {self.chaos.stalls} "
+                f"stalls) exceed num_nodes={self.num_nodes}")
+        if self.chaos.kills and self.rounds < 2:
+            raise ValueError("kill chaos needs rounds >= 2 (a victim must push "
+                             "at least once before dying, and finish after)")
+        # Fail fast on misspelled strategy/transport — at spec construction,
+        # not inside every spawned client N processes later (same convention
+        # as ShardedWeightStore's throwaway-pipeline probe). The grammar-only
+        # normalize (no zstd import probe) keeps a spec WRITABLE from a host
+        # without the module its workers have.
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"unknown strategy {self.strategy!r}; "
+                             f"options: {sorted(STRATEGIES)}")
+        if self.transport is not None:
+            normalize_transport(self.transport)
+
+    # -- node naming ---------------------------------------------------------
+    def node_id(self, slot: int) -> str:
+        return f"{self.node_prefix}{slot:04d}"
+
+    def node_ids(self) -> list[str]:
+        return [self.node_id(s) for s in range(self.num_nodes)]
+
+    def target_of(self, slot: int) -> float:
+        """Per-node consensus target for the synthetic quadratic clients —
+        distinct but bounded, so the fleet's convex hull stays small."""
+        return float(slot % 5)
+
+    # -- wire ----------------------------------------------------------------
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["chaos"] = self.chaos.to_dict()
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FleetSpec":
+        d = dict(d)
+        if "chaos" in d and isinstance(d["chaos"], dict):
+            d["chaos"] = ChaosSpec.from_dict(d["chaos"])
+        return cls(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "FleetSpec":
+        return cls.from_dict(json.loads(text))
+
+
+# --------------------------------------------------------------------------
+# Seeded chaos schedule
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ChaosEvent:
+    node_id: str
+    kind: str                  # "kill" | "stall"
+    after_pushes: int          # trigger once the node has pushed this often
+    restart_after: float = 0.0  # kill only: respawn delay
+    duration: float = 0.0       # stall only: sleep length
+
+
+def _node_rng(seed: int, node_id: str) -> np.random.Generator:
+    """Per-node generator keyed on (seed, node_id) — the schedule is a pure
+    function of the spec, independent of iteration order or host."""
+    digest = hashlib.sha256(f"{seed}:{node_id}".encode()).digest()
+    return np.random.default_rng(int.from_bytes(digest[:8], "big"))
+
+
+def chaos_schedule(spec: FleetSpec) -> dict[str, list[ChaosEvent]]:
+    """The concrete, deterministic chaos schedule for ``spec``: node id →
+    events. Every host derives the same schedule from the spec alone, so the
+    chaos engine needs no coordination either — each worker injects exactly
+    the events of the nodes it claimed."""
+    chaos = spec.chaos
+    ids = spec.node_ids()
+    rng = np.random.default_rng(chaos.seed)
+    order = [ids[i] for i in rng.permutation(len(ids))]
+    victims = order[:chaos.kills]
+    stalled = order[chaos.kills:chaos.kills + chaos.stalls]
+    out: dict[str, list[ChaosEvent]] = {}
+    for nid in victims:
+        r = _node_rng(chaos.seed, nid)
+        lo, hi = chaos.park_after
+        park = int(r.integers(min(lo, hi), max(lo, hi) + 1))
+        # a victim must have pushed at least once (there must be a blob to
+        # resume from) and must NOT have finished its rounds already
+        park = max(1, min(park, spec.rounds - 1))
+        out[nid] = [ChaosEvent(nid, "kill", park, restart_after=chaos.restart_after)]
+    for nid in stalled:
+        r = _node_rng(chaos.seed, nid)
+        lo, hi = chaos.stall_after
+        after = max(1, min(int(r.integers(min(lo, hi), max(lo, hi) + 1)), spec.rounds))
+        out.setdefault(nid, []).append(
+            ChaosEvent(nid, "stall", after, duration=chaos.stall_duration))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Control plane: spec + claims + heartbeats in the shared folder
+# --------------------------------------------------------------------------
+
+
+def fleet_control_uri(store_uri: str) -> str:
+    """The control-plane folder URI for a data-plane store URI: the innermost
+    base with every ``cache+`` / ``shard<G>+`` wrapper stripped. For a flat
+    disk store, control and data share one folder (``fleet/`` keys are
+    excluded from every state hash); for a sharded store the control blobs
+    live in the base directory *above* the per-group folders."""
+    _wrappers, base = parse_folder_uri(store_uri)
+    if base.startswith("memory://"):
+        raise ValueError(
+            "the fleet control plane must be reachable by every host — "
+            "use a shared mount (disk path) or s3://, not memory://")
+    return base
+
+
+def control_folder(store_uri: str) -> SharedFolder:
+    return make_folder(fleet_control_uri(store_uri))
+
+
+def write_spec(control: SharedFolder, spec: FleetSpec) -> None:
+    control.put(SPEC_KEY, serialize_fleet_blob("spec", spec.to_dict()))
+
+
+def read_spec(control: SharedFolder, *, timeout: float = 0.0,
+              poll: float = 0.2) -> FleetSpec:
+    """Read (polling up to ``timeout`` — a worker may come up before the
+    launcher) the fleet spec from the control folder."""
+    deadline = time.monotonic() + timeout
+    while True:
+        blob = control.get(SPEC_KEY)
+        if blob is not None:
+            kind, payload = deserialize_fleet_blob(blob)
+            if kind == "spec":
+                return FleetSpec.from_dict(payload)
+        if time.monotonic() >= deadline:
+            raise TimeoutError(f"no fleet spec at {SPEC_KEY!r} after {timeout}s")
+        time.sleep(poll)
+
+
+def claim_key(slot: int) -> str:
+    return f"{_CLAIM_PREFIX}{slot:04d}"
+
+
+def claim_slots(control: SharedFolder, spec: FleetSpec, worker_id: str, *,
+                max_slots: int | None = None) -> list[int]:
+    """Claim up to ``max_slots`` node slots for ``worker_id`` via atomic
+    ``put_if_absent`` writes — concurrent workers partition the fleet with no
+    messages between them. A worker restarting under the same id reclaims the
+    slots it already owns (its previous claim blobs name it)."""
+    mine: list[int] = []
+    for slot in range(spec.num_nodes):
+        if max_slots is not None and len(mine) >= max_slots:
+            break
+        key = claim_key(slot)
+        blob = serialize_fleet_blob("claim", {
+            "worker": worker_id, "slot": slot,
+            "node_id": spec.node_id(slot), "time": time.time()})
+        if control.put_if_absent(key, blob):
+            mine.append(slot)
+            continue
+        existing = control.get(key)
+        if existing is None:
+            continue
+        try:
+            _kind, payload = deserialize_fleet_blob(existing)
+        except (ValueError, KeyError):
+            continue
+        if payload.get("worker") == worker_id:
+            mine.append(slot)  # our own claim, from a previous incarnation
+    return mine
+
+
+def _heartbeat(control: SharedFolder, node_id: str, payload: dict) -> None:
+    control.put(f"{_HEARTBEAT_PREFIX}{node_id}", serialize_fleet_blob("heartbeat", payload))
+
+
+def _read_fleet_blob(control: SharedFolder, key: str) -> dict | None:
+    blob = control.get(key)
+    if blob is None:
+        return None
+    try:
+        _kind, payload = deserialize_fleet_blob(blob)
+    except (ValueError, KeyError):
+        return None
+    return payload
+
+
+# --------------------------------------------------------------------------
+# The soak client (module-level: spawn must pickle it)
+# --------------------------------------------------------------------------
+
+
+class _SimulatedCrash(RuntimeError):
+    """Thread-runner stand-in for a SIGKILL: the client dies mid-round
+    without depositing a result; the worker restarts it with resume."""
+
+
+def _soak_client(spec_dict: dict, slot: int, *, park_after_pushes: int | None = None,
+                 stall_after: int | None = None, stall_duration: float = 0.0,
+                 crash_mode: str = "sigkill") -> dict:
+    """One fleet node: quadratic consensus training federated through the
+    spec's store. Pushes a heartbeat every federation step (via the node's
+    ``on_step`` hook), deposits its result blob itself on completion — the
+    worker never relays data — and, as a chaos victim, parks mid-round after
+    ``park_after_pushes`` pushes so the SIGKILL lands deterministically."""
+    spec = FleetSpec.from_dict(spec_dict)
+    node_id = spec.node_id(slot)
+    control = control_folder(spec.store_uri)
+    data = make_folder(spec.store_uri)
+    t0 = time.time()
+    state: dict[str, Any] = {"first_push": None}
+
+    def on_step(node, _aggregated) -> None:
+        if state["first_push"] is None:
+            state["first_push"] = time.time()
+        _heartbeat(control, node_id, {
+            "node_id": node_id, "slot": slot, "counter": node.counter,
+            "pushes": node.num_pushes, "status": "running",
+            "resumed": node.resumed is not None, "time": time.time()})
+
+    node = AsyncFederatedNode(
+        strategy=get_strategy(spec.strategy), shared_folder=data,
+        node_id=node_id, transport=spec.transport, on_step=on_step)
+    resumed = node.resumed is not None
+    start_counter = node.counter
+    if resumed:
+        w = np.asarray(node.resumed.params["w"], np.float32).copy()
+    else:
+        w = np.zeros((spec.param_size,), np.float32)
+    target = np.float32(spec.target_of(slot))
+
+    while node.counter < spec.rounds:
+        w = w + np.float32(0.3) * (target - w)  # local "training"
+        aggregated = node.update_parameters({"w": w}, num_examples=1 + slot % 5)
+        if aggregated is not None:
+            w = np.asarray(aggregated["w"], np.float32)
+        if park_after_pushes is not None and node.num_pushes >= park_after_pushes:
+            _heartbeat(control, node_id, {
+                "node_id": node_id, "slot": slot, "counter": node.counter,
+                "pushes": node.num_pushes, "status": "parked",
+                "resumed": resumed, "time": time.time()})
+            if crash_mode == "raise":
+                raise _SimulatedCrash(node_id)
+            while True:  # mid-round: hold still until the SIGKILL lands
+                time.sleep(0.05)
+        if stall_after is not None and node.num_pushes == stall_after:
+            time.sleep(stall_duration)  # the slow-node stall
+        time.sleep(spec.round_sleep)
+
+    result = {
+        "node_id": node_id, "slot": slot, "resumed": resumed,
+        "start_counter": start_counter, "final_counter": node.counter,
+        "pushes": node.num_pushes, "aggregations": node.num_aggregations,
+        "skipped_pulls": node.num_skipped_pulls,
+        "wall_seconds": time.time() - t0,
+        "first_push_unix": state["first_push"],
+        "finished_unix": time.time(),
+        "params_l2": float(np.linalg.norm(w)),
+        "transport_stats": dict(node.transport_stats()),
+    }
+    control.put(f"{_RESULT_PREFIX}{node_id}", serialize_fleet_blob("result", result))
+    _heartbeat(control, node_id, {
+        "node_id": node_id, "slot": slot, "counter": node.counter,
+        "pushes": node.num_pushes, "status": "done", "resumed": resumed,
+        "time": time.time()})
+    return result
+
+
+# --------------------------------------------------------------------------
+# Workers
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class WorkerReport:
+    worker_id: str
+    slots: list[int]
+    crashes_injected: int = 0
+    restarts: int = 0
+    fleet_state_hash: str | None = None
+    all_results_seen: bool = False
+    wall_seconds: float = 0.0
+    recoveries: dict = field(default_factory=dict)  # node -> SIGKILL→first-push s
+    results: dict = field(default_factory=dict)     # node -> result payload
+
+
+def default_worker_timeout(spec: FleetSpec) -> float:
+    """Generous bound on one worker's run phase: startup + rounds + chaos."""
+    per_round = spec.round_sleep + 1.0
+    chaos = spec.chaos.kill_grace + spec.chaos.restart_after if spec.chaos.kills else 0.0
+    return 120.0 + spec.rounds * per_round + chaos + spec.chaos.stalls * spec.chaos.stall_duration
+
+
+def fleet_state_hash(spec_or_uri: "FleetSpec | str") -> str:
+    """The fleet-wide data-plane state hash every worker must agree on after
+    quiescence. Built over the spec's store URI, so flat and sharded fleets
+    hash exactly what their nodes federate through (fleet/ and state/ control
+    blobs excluded)."""
+    uri = spec_or_uri.store_uri if isinstance(spec_or_uri, FleetSpec) else spec_or_uri
+    folder = make_folder(uri)
+    from .gossip import ShardedFolders, ShardedWeightStore  # circular-import guard
+
+    if isinstance(folder, ShardedFolders):
+        return ShardedWeightStore(folder).state_hash()
+    return WeightStore(folder).state_hash()
+
+
+def wait_all_results(control: SharedFolder, spec: FleetSpec, *,
+                     timeout: float, poll: float = 0.25) -> bool:
+    """Block until every fleet node's result blob is present (global
+    quiescence) or ``timeout`` passes; True on full coverage."""
+    want = {f"{_RESULT_PREFIX}{nid}" for nid in spec.node_ids()}
+    deadline = time.monotonic() + timeout
+    while True:
+        have = {k for k in control.keys() if k.startswith(_RESULT_PREFIX)}
+        if want <= have:
+            return True
+        if time.monotonic() >= deadline:
+            return False
+        time.sleep(poll)
+
+
+def run_worker(store_uri: str | None = None, *, spec: FleetSpec | None = None,
+               worker_id: str | None = None, max_slots: int | None = None,
+               timeout: float | None = None, spec_timeout: float = 60.0,
+               control: SharedFolder | None = None) -> WorkerReport:
+    """One host's whole contribution to the soak: read the spec, claim slots,
+    run + chaos the claimed nodes, wait for fleet-wide quiescence, compute
+    the fleet state hash independently, deposit the worker report. Run this
+    once per host (``python -m repro.fleet worker``); no invocation is
+    special — the fleet has no parent."""
+    if control is None:
+        if store_uri is None:
+            if spec is None:
+                raise ValueError("need store_uri, spec, or control")
+            store_uri = spec.store_uri
+        control = control_folder(store_uri)
+    if spec is None:
+        spec = read_spec(control, timeout=spec_timeout)
+    worker_id = worker_id or f"worker-{uuid.uuid4().hex[:8]}"
+    if timeout is None:
+        timeout = default_worker_timeout(spec)
+    t0 = time.time()
+    slots = claim_slots(control, spec, worker_id, max_slots=max_slots)
+    schedule = chaos_schedule(spec)
+    runner = _run_slots_threaded if spec.runner == "thread" else _run_slots_processes
+    report = runner(control, spec, worker_id, slots, schedule, timeout)
+    # Global quiescence, then the fleet-wide hash every worker must agree on.
+    report.all_results_seen = wait_all_results(control, spec, timeout=spec.result_timeout)
+    time.sleep(spec.settle)
+    report.fleet_state_hash = fleet_state_hash(spec)
+    report.wall_seconds = time.time() - t0
+    control.put(f"{_WORKER_PREFIX}{worker_id}", serialize_fleet_blob("worker", {
+        "worker": worker_id, "slots": list(slots),
+        "crashes_injected": report.crashes_injected,
+        "restarts": report.restarts,
+        "fleet_state_hash": report.fleet_state_hash,
+        "all_results_seen": report.all_results_seen,
+        "wall_seconds": report.wall_seconds,
+        "recoveries": dict(report.recoveries),
+        "time": time.time()}))
+    return report
+
+
+def _chaos_kwargs(events: list[ChaosEvent]) -> dict:
+    kwargs: dict[str, Any] = {}
+    for ev in events:
+        if ev.kind == "kill":
+            kwargs["park_after_pushes"] = ev.after_pushes
+        elif ev.kind == "stall":
+            kwargs["stall_after"] = ev.after_pushes
+            kwargs["stall_duration"] = ev.duration
+    return kwargs
+
+
+def _run_slots_processes(control: SharedFolder, spec: FleetSpec, worker_id: str,
+                         slots: list[int], schedule: dict[str, list[ChaosEvent]],
+                         timeout: float) -> WorkerReport:
+    """Run the claimed slots as real OS processes under a ProcessSupervisor,
+    injecting this worker's share of the chaos schedule: SIGKILL a victim the
+    moment its parked heartbeat lands (backstop timer otherwise), respawn it
+    after the scheduled delay — the respawn must resume, not restart."""
+    report = WorkerReport(worker_id, list(slots))
+    sup = ProcessSupervisor()
+    spec_dict = spec.to_dict()
+    slot_of = {spec.node_id(s): s for s in slots}
+    kill_events: dict[str, ChaosEvent] = {}
+    killed_at: dict[str, float] = {}
+    restart_due: dict[str, float] = {}
+    try:
+        for slot in slots:
+            nid = spec.node_id(slot)
+            events = schedule.get(nid, [])
+            sup.spawn(nid, _soak_client, (spec_dict, slot), _chaos_kwargs(events))
+            kill = next((e for e in events if e.kind == "kill"), None)
+            if kill is not None:
+                kill_events[nid] = kill
+                # backstop: if the parked heartbeat never shows (crashed some
+                # other way, wedged before parking), SIGKILL anyway
+                sup.schedule_kill(nid, spec.chaos.kill_grace)
+        deadline = time.monotonic() + timeout
+        while (sup.unsettled() or restart_due) and time.monotonic() < deadline:
+            for nid in list(kill_events):
+                hb = _read_fleet_blob(control, f"{_HEARTBEAT_PREFIX}{nid}")
+                if hb is not None and hb.get("status") == "parked":
+                    sup.kill(nid)  # mid-round, deterministically
+            for nid in sup.poll():
+                kill = kill_events.pop(nid, None)
+                if kill is not None:  # the victim settled by dying
+                    killed_at[nid] = time.time()
+                    report.crashes_injected += 1
+                    restart_due[nid] = time.monotonic() + kill.restart_after
+            now = time.monotonic()
+            for nid, due in list(restart_due.items()):
+                if now >= due:
+                    del restart_due[nid]
+                    # restart WITHOUT the park: the reborn node must resume
+                    # from its own deposits and run to completion
+                    sup.spawn(nid, _soak_client, (spec_dict, slot_of[nid]), {})
+                    report.restarts += 1
+            time.sleep(0.05)
+        sup.join(max(0.0, deadline - time.monotonic()))
+    finally:
+        sup.shutdown()
+    for slot in slots:
+        nid = spec.node_id(slot)
+        res = sup.result(nid)
+        if res.error is None and isinstance(res.result, dict):
+            report.results[nid] = res.result
+    for nid, t_kill in killed_at.items():
+        first_push = (report.results.get(nid) or {}).get("first_push_unix")
+        if first_push:
+            report.recoveries[nid] = max(0.0, first_push - t_kill)
+    return report
+
+
+def _run_slots_threaded(control: SharedFolder, spec: FleetSpec, worker_id: str,
+                        slots: list[int], schedule: dict[str, list[ChaosEvent]],
+                        timeout: float) -> WorkerReport:
+    """Thread runner for in-process soaks (the 10²-node benchmark regime,
+    where an OS process per node would be interpreter-startup-bound). Chaos
+    kills become mid-round exceptions that abort the client without a result
+    deposit — same observable contract as a SIGKILL minus the signal — and
+    the restarted client must resume exactly as in process mode."""
+    report = WorkerReport(worker_id, list(slots))
+    spec_dict = spec.to_dict()
+    lock = threading.Lock()
+    killed_at: dict[str, float] = {}
+
+    def drive(slot: int) -> None:
+        nid = spec.node_id(slot)
+        events = schedule.get(nid, [])
+        kwargs = _chaos_kwargs(events)
+        kill = next((e for e in events if e.kind == "kill"), None)
+        while True:
+            try:
+                result = _soak_client(spec_dict, slot, crash_mode="raise", **kwargs)
+            except _SimulatedCrash:
+                with lock:
+                    report.crashes_injected += 1
+                    killed_at[nid] = time.time()
+                time.sleep(kill.restart_after if kill is not None else 0.0)
+                kwargs = {}  # the restart runs clean — and must resume
+                with lock:
+                    report.restarts += 1
+                continue
+            with lock:
+                report.results[nid] = result
+            return
+
+    threads = [threading.Thread(target=drive, args=(slot,), daemon=True,
+                                name=f"fleet-{spec.node_id(slot)}")
+               for slot in slots]
+    for t in threads:
+        t.start()
+    deadline = time.monotonic() + timeout
+    for t in threads:
+        t.join(timeout=max(0.0, deadline - time.monotonic()))
+    # Recoveries are derived AFTER the joins, only for drivers that delivered
+    # a result — a straggler thread past the deadline can at worst add a
+    # killed_at entry nobody reads, never a half-built latency.
+    with lock:
+        for nid, t_kill in killed_at.items():
+            first_push = (report.results.get(nid) or {}).get("first_push_unix")
+            if first_push:
+                report.recoveries[nid] = max(0.0, first_push - t_kill)
+    return report
+
+
+# --------------------------------------------------------------------------
+# Fleet-wide report (watch / any worker)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class SoakReport:
+    """Everything the soak acceptance needs, assembled purely from the shared
+    folder — by ``repro.fleet watch``, by any worker, by anything that can
+    read the mount."""
+
+    name: str
+    num_nodes: int
+    rounds: int
+    claims: dict            # slot -> worker id
+    results: dict           # node -> result payload
+    workers: dict           # worker id -> worker payload
+    victims: list           # scheduled SIGKILL victims (from the seeded schedule)
+    stalled: list           # scheduled slow nodes
+    resumed: dict           # node -> bool
+    rounds_completed: dict  # node -> final counter
+    crashes_injected: int
+    restarts: int
+    recovery_latency: dict  # node -> seconds (SIGKILL → restarted node's first push)
+    fleet_hashes: dict      # worker -> fleet state hash
+    pipeline_stats: dict    # summed PipelineStats counters across all nodes
+    total_pushes: int
+    wall_seconds: float
+    rounds_per_sec: float
+    complete: bool          # every node deposited a result
+    converged: bool         # complete AND all workers computed one hash
+    recovered: bool         # every scheduled victim resumed
+    passed: bool
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    def summary(self) -> str:
+        hashes = sorted(set(self.fleet_hashes.values()))
+        lines = [
+            f"fleet {self.name!r}: {len(self.results)}/{self.num_nodes} nodes "
+            f"reported, {len(self.workers)} workers",
+            f"  rounds/node: {self.rounds}  total pushes: {self.total_pushes}  "
+            f"rounds/sec: {self.rounds_per_sec:.2f}",
+            f"  crashes injected: {self.crashes_injected}  restarts: {self.restarts}  "
+            f"victims resumed: {sum(bool(self.resumed.get(v)) for v in self.victims)}"
+            f"/{len(self.victims)}",
+            f"  fleet state hash: {hashes if len(hashes) != 1 else hashes[0]} "
+            f"({'converged' if self.converged else 'NOT converged'})",
+            f"  passed: {self.passed}",
+        ]
+        if self.recovery_latency:
+            mean = sum(self.recovery_latency.values()) / len(self.recovery_latency)
+            lines.insert(3, f"  recovery latency: mean {mean:.2f}s over "
+                            f"{len(self.recovery_latency)} restarts")
+        return "\n".join(lines)
+
+
+def assemble_report(control: SharedFolder, spec: FleetSpec | None = None) -> SoakReport:
+    """Fold every ``fleet/`` blob in the control folder into one SoakReport.
+    Read-only — safe to run concurrently with the fleet, from any host."""
+    if spec is None:
+        spec = read_spec(control)
+    results: dict[str, dict] = {}
+    workers: dict[str, dict] = {}
+    claims: dict[int, str] = {}
+    for key in control.keys():
+        if not key.startswith(FLEET_PREFIX) or key == SPEC_KEY:
+            continue
+        payload = _read_fleet_blob(control, key)
+        if payload is None:
+            continue
+        if key.startswith(_RESULT_PREFIX):
+            results[str(payload.get("node_id"))] = payload
+        elif key.startswith(_WORKER_PREFIX):
+            workers[str(payload.get("worker"))] = payload
+        elif key.startswith(_CLAIM_PREFIX):
+            claims[int(payload.get("slot", -1))] = str(payload.get("worker"))
+    schedule = chaos_schedule(spec)
+    victims = sorted(n for n, evs in schedule.items()
+                     if any(e.kind == "kill" for e in evs))
+    stalled = sorted(n for n, evs in schedule.items()
+                     if any(e.kind == "stall" for e in evs))
+    resumed = {n: bool(r.get("resumed")) for n, r in results.items()}
+    rounds_completed = {n: int(r.get("final_counter", 0)) for n, r in results.items()}
+    crashes = sum(int(w.get("crashes_injected", 0)) for w in workers.values())
+    restarts = sum(int(w.get("restarts", 0)) for w in workers.values())
+    recovery: dict[str, float] = {}
+    for w in workers.values():
+        for nid, latency in (w.get("recoveries") or {}).items():
+            recovery[str(nid)] = float(latency)
+    hashes = {wid: str(w["fleet_state_hash"]) for wid, w in workers.items()
+              if w.get("fleet_state_hash")}
+    stats: dict[str, float] = {}
+    for r in results.values():
+        for k, v in (r.get("transport_stats") or {}).items():
+            if isinstance(v, (int, float)):
+                stats[k] = stats.get(k, 0) + v
+    total_pushes = sum(int(r.get("pushes", 0)) for r in results.values())
+    wall = max([float(w.get("wall_seconds", 0.0)) for w in workers.values()]
+               + [float(r.get("wall_seconds", 0.0)) for r in results.values()]
+               + [0.0])
+    # Throughput over the *active* federation span (first push → last finish),
+    # not the worker wall, which also counts quiescence waits and settle time.
+    starts = [r.get("first_push_unix") for r in results.values() if r.get("first_push_unix")]
+    ends = [r.get("finished_unix") for r in results.values() if r.get("finished_unix")]
+    active = (max(ends) - min(starts)) if starts and ends else 0.0
+    complete = set(results) >= set(spec.node_ids())
+    converged = complete and len(hashes) >= 1 and len(set(hashes.values())) == 1
+    recovered = all(resumed.get(v, False) for v in victims)
+    passed = (
+        complete and converged and recovered
+        and crashes >= len(victims)
+        and all(rounds_completed.get(n, 0) >= spec.rounds for n in spec.node_ids())
+    )
+    return SoakReport(
+        name=spec.name, num_nodes=spec.num_nodes, rounds=spec.rounds,
+        claims=claims, results=results, workers=workers,
+        victims=victims, stalled=stalled, resumed=resumed,
+        rounds_completed=rounds_completed, crashes_injected=crashes,
+        restarts=restarts, recovery_latency=recovery, fleet_hashes=hashes,
+        pipeline_stats=stats, total_pushes=total_pushes,
+        wall_seconds=wall,
+        rounds_per_sec=(total_pushes / active) if active > 0 else 0.0,
+        complete=complete, converged=converged, recovered=recovered,
+        passed=passed)
+
+
+def watch(store_uri: str, *, interval: float = 2.0, timeout: float = 600.0,
+          printer: Callable[[str], None] = print) -> SoakReport:
+    """Poll the control folder until the soak completes (every node reported
+    AND every claiming worker deposited its fleet hash) or ``timeout``
+    passes; prints one progress line per poll. Pure reader — running it adds
+    nothing to the data path."""
+    control = control_folder(store_uri)
+    spec = read_spec(control, timeout=timeout)
+    deadline = time.monotonic() + timeout
+    while True:
+        report = assemble_report(control, spec)
+        expected_workers = set(report.claims.values())
+        printer(
+            f"[fleet {spec.name}] nodes {len(report.results)}/{spec.num_nodes} "
+            f"workers {len(report.fleet_hashes)}/{max(1, len(expected_workers))} "
+            f"crashes {report.crashes_injected} restarts {report.restarts}")
+        done = report.complete and expected_workers and (
+            expected_workers <= set(report.fleet_hashes))
+        if done or time.monotonic() >= deadline:
+            return report
+        time.sleep(interval)
+
+
+def run_fleet_local(spec: FleetSpec, num_workers: int = 2, *,
+                    timeout: float | None = None,
+                    worker_prefix: str = "local") -> SoakReport:
+    """Single-host convenience (and the benchmark harness): write the spec,
+    run ``num_workers`` worker loops concurrently in this process — each
+    claiming its share of slots exactly as separate hosts would — and
+    assemble the fleet report. The multi-host flow is the same thing with
+    ``repro.fleet worker`` once per machine."""
+    if num_workers < 1:
+        raise ValueError(f"num_workers must be >= 1, got {num_workers}")
+    control = control_folder(spec.store_uri)
+    write_spec(control, spec)
+    per_worker = -(-spec.num_nodes // num_workers)  # ceil
+    errors: list[BaseException] = []
+
+    def run(i: int) -> None:
+        try:
+            run_worker(spec=spec, control=control,
+                       worker_id=f"{worker_prefix}{i}", max_slots=per_worker,
+                       timeout=timeout)
+        except BaseException as e:  # noqa: BLE001 - surfaced after join
+            errors.append(e)
+
+    threads = [threading.Thread(target=run, args=(i,), daemon=True,
+                                name=f"fleet-worker-{i}")
+               for i in range(num_workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errors:
+        raise errors[0]
+    return assemble_report(control, spec)

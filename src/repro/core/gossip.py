@@ -624,9 +624,11 @@ class ShardedWeightStore:
         if exclude_node is None:
             h = hashlib.sha256()
             for g in range(self.num_groups):
-                # state/ blobs are optimizer recovery data, not federation
-                # signal — excluded here exactly as the flat store does
-                h.update(self._folder(g).state_hash(exclude=("state/",)).encode())
+                # state/ blobs are optimizer recovery data and fleet/ blobs
+                # are launcher control traffic, not federation signal —
+                # excluded here exactly as the flat store does
+                h.update(self._folder(g).state_hash(
+                    exclude=("state/", "fleet/")).encode())
             return h.hexdigest()[:16]
         group = self.group_of(exclude_node)
         exclude = (
@@ -636,6 +638,7 @@ class ShardedWeightStore:
             f"history/{exclude_node}/",
             f"{_SUMMARY_PREFIX}{group:04d}/",
             "state/",
+            "fleet/",
         )
         base = self._folder(group).state_hash(exclude=exclude)
         if self._rotation_pending.get(exclude_node):

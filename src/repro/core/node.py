@@ -48,6 +48,7 @@ class _BaseNode:
         persist_strategy_state: bool = False,
         prefetch_interval: float | None = None,
         clock: Callable[[], float] = time.monotonic,
+        on_step: "Callable[[_BaseNode, PyTree | None], None] | None" = None,
     ):
         self._owns_store = store is None
         if store is None:
@@ -74,6 +75,11 @@ class _BaseNode:
         self.strategy = strategy or FedAvg()
         self.node_id = node_id or uuid.uuid4().hex[:8]
         self.clock = clock
+        # Soak/observability hook: called once per federation step (after the
+        # push and any aggregation) with (node, aggregated-or-None). The fleet
+        # harness hangs heartbeat deposits on it; exceptions propagate — a
+        # broken hook is a caller bug, not something to swallow mid-soak.
+        self.on_step = on_step
         self.persist_strategy_state = persist_strategy_state
         self.counter = 0  # local epoch counter; there is no global round
         self._last_state_hash: str | None = None
@@ -119,6 +125,14 @@ class _BaseNode:
             return store.cache_stats()
         return store.transport_stats()
 
+    def _finish_step(self, aggregated: PyTree | None) -> PyTree | None:
+        """Every return path of update_parameters funnels through here so the
+        ``on_step`` hook fires exactly once per federation step — including
+        skipped-pull and no-peers steps, which a heartbeat must still count."""
+        if self.on_step is not None:
+            self.on_step(self, aggregated)
+        return aggregated
+
     def _persist_strategy_state(self) -> None:
         state = self.strategy.state_dict()
         if state:
@@ -157,7 +171,7 @@ class AsyncFederatedNode(_BaseNode):
             # Only our own deposit changed nothing relative to what we already
             # aggregated → skip the download entirely (paper's hash check).
             self.num_skipped_pulls += 1
-            return None
+            return self._finish_step(None)
         peers = self.store.pull(exclude=self.node_id)
         self.num_pulls += 1
         # Record the PRE-pull hash: a peer depositing while we were pulling
@@ -166,12 +180,12 @@ class AsyncFederatedNode(_BaseNode):
         # pre-pull hash only risks one redundant re-pull.
         self._last_state_hash = state
         if not peers:
-            return None
+            return self._finish_step(None)
         aggregated = self.strategy.aggregate(own, peers)
         self.num_aggregations += 1
         if self.persist_strategy_state:
             self._persist_strategy_state()
-        return aggregated
+        return self._finish_step(aggregated)
 
 
 class SyncFederatedNode(_BaseNode):
@@ -232,4 +246,5 @@ class SyncFederatedNode(_BaseNode):
         self.num_aggregations += 1
         if self.persist_strategy_state:
             self._persist_strategy_state()
+        self._finish_step(aggregated)
         return aggregated

@@ -472,6 +472,36 @@ def deserialize_strategy_state(blob: bytes) -> tuple[dict, dict]:
     return state, meta
 
 
+# --- fleet-control blobs (launcher / chaos-soak harness) ---------------------
+#
+# The multi-host fleet launcher (``repro.fleet``) coordinates through the
+# shared folder itself — spec, slot claims, heartbeats, per-node results and
+# per-worker reports are all just deposits, so there is no coordinator in the
+# data path. They ride the same self-describing npz envelope as every other
+# blob (``peek_meta`` dispatches on ``fleet_of`` exactly like ``summary_of`` /
+# ``state_of`` / ``delta_of``); the payload is pure JSON metadata, no arrays.
+# Every fleet key lives under the ``fleet/`` prefix, which the stores exclude
+# from state hashes: a heartbeat must never look like federation signal and
+# trigger a fleet-wide re-pull.
+
+
+def serialize_fleet_blob(kind: str, payload: dict, *, compress: str = "none") -> bytes:
+    """One fleet-control deposit: ``kind`` ∈ {spec, claim, heartbeat, result,
+    worker, ...} plus a JSON-serializable payload."""
+    return serialize_params(
+        {}, compress=compress,
+        meta={"fleet_of": str(kind), "payload": dict(payload)},
+    )
+
+
+def deserialize_fleet_blob(blob: bytes) -> tuple[str, dict]:
+    """-> (kind, payload). Raises ValueError on non-fleet blobs."""
+    _params, meta = deserialize_params(blob)
+    if "fleet_of" not in meta:
+        raise ValueError("not a fleet-control blob")
+    return str(meta["fleet_of"]), dict(meta.get("payload") or {})
+
+
 # --- int8 compressed payloads (beyond-paper extension #4) -------------------
 
 

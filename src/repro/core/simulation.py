@@ -93,6 +93,237 @@ def _mp_entry(target: Callable[..., Any], args: tuple, kwargs: dict, conn) -> No
         conn.close()
 
 
+class _Supervised:
+    """One client slot under a ProcessSupervisor: the (re)spawnable target
+    spec, the live process + pipe of the current incarnation, its result, and
+    any armed kill timers."""
+
+    __slots__ = ("name", "target", "args", "kwargs", "proc", "conn", "result",
+                 "settled", "received", "timers", "history")
+
+    def __init__(self, name: str, target: Callable[..., Any], args: tuple, kwargs: dict):
+        self.name = name
+        self.target = target
+        self.args = args
+        self.kwargs = kwargs
+        self.proc = None
+        self.conn = None
+        self.result = ClientResult(node_id=name)
+        self.settled = False
+        self.received = False
+        self.timers: list[threading.Timer] = []
+        self.history: list[ClientResult] = []  # earlier incarnations' results
+
+    def cancel_timers(self) -> None:
+        """A settled client's scheduled kills must die with it: an unfired
+        Timer is a live thread, and a long-running supervisor (the fleet
+        worker) would otherwise accumulate one per finished client until its
+        own shutdown."""
+        for t in self.timers:
+            t.cancel()
+        for t in self.timers:
+            t.join(timeout=1.0)
+        self.timers.clear()
+
+
+class ProcessSupervisor:
+    """Owns a set of client OS processes: spawn, poll, kill, restart, reap.
+
+    The process-supervision core of ``run_multiprocess`` (which remains the
+    one-shot convenience wrapper), exposed as an incremental object so
+    long-lived harnesses — the fleet chaos worker — can SIGKILL a client
+    mid-round and respawn it under the same name without tearing the whole
+    cohort down. Clients run under the ``spawn`` start method by default
+    (clean interpreters; the only fork-safe choice once JAX threads exist in
+    the parent) and are daemonic: a dying supervisor never strands children.
+
+    Lifecycle of one client: ``spawn(name, target, args)`` → the child runs
+    and ships ``(ok, result, tb)`` over a private pipe → ``poll()`` absorbs
+    the message (or notices a silent death) and marks the client *settled* →
+    ``result(name)`` carries the outcome. ``spawn`` on a settled name is a
+    restart: the previous incarnation's result moves to ``history(name)``.
+    Kill timers armed via ``schedule_kill`` are cancelled the moment their
+    client settles (no leaked timer threads) and on ``shutdown()``.
+    """
+
+    def __init__(self, *, start_method: str = "spawn"):
+        self._ctx = multiprocessing.get_context(start_method)
+        self._clients: dict[str, _Supervised] = {}
+
+    # -- lifecycle ------------------------------------------------------------
+    def spawn(self, name: str, target: Callable[..., Any], args: tuple = (),
+              kwargs: dict | None = None) -> None:
+        """Launch ``target(*args, **kwargs)`` as a supervised process. A name
+        already present must be settled (then this is a restart); anything
+        else is two live processes under one identity — a caller bug."""
+        c = self._clients.get(name)
+        if c is not None:
+            if not c.settled:
+                raise ValueError(f"client {name!r} is still running")
+            self._reap(c, timeout=5.0)
+            c.cancel_timers()
+            c.history.append(c.result)
+            c.target, c.args, c.kwargs = target, args, dict(kwargs or {})
+            c.result = ClientResult(node_id=name)
+            c.settled = c.received = False
+        else:
+            c = _Supervised(name, target, args, dict(kwargs or {}))
+            self._clients[name] = c
+        parent_conn, child_conn = self._ctx.Pipe(duplex=False)
+        c.proc = self._ctx.Process(
+            target=_mp_entry, args=(c.target, c.args, c.kwargs, child_conn),
+            name=name, daemon=True)
+        c.conn = parent_conn
+        c.proc.start()
+        child_conn.close()  # parent's copy; lets recv see EOF when a child dies
+
+    def respawn(self, name: str) -> None:
+        """Restart a settled client with its previous target spec (the chaos
+        engine's restart-with-resume step)."""
+        c = self._client(name)
+        self.spawn(name, c.target, c.args, c.kwargs)
+
+    def kill(self, name: str) -> None:
+        """SIGKILL the client's current process: no cleanup, no goodbye
+        deposit — the crash the serverless robustness claim must survive."""
+        c = self._client(name)
+        if c.proc is not None:
+            _sigkill(c.proc)
+
+    def schedule_kill(self, name: str, delay: float) -> None:
+        """Arm a SIGKILL ``delay`` seconds from now. The timer targets the
+        process object alive *now* — a client that settles (or restarts)
+        first has the timer cancelled, never a stale kill on a reused pid."""
+        c = self._client(name)
+        timer = threading.Timer(delay, _sigkill, args=(c.proc,))
+        timer.daemon = True
+        timer.start()
+        c.timers.append(timer)
+
+    # -- observation ----------------------------------------------------------
+    def poll(self) -> list[str]:
+        """Absorb whatever the clients have reported; returns the names that
+        settled during this call. Non-blocking (modulo a 50 ms drain grant to
+        freshly-dead channels)."""
+        newly = []
+        for c in self._clients.values():
+            if not c.settled and self._try_settle(c):
+                newly.append(c.name)
+        return newly
+
+    def unsettled(self) -> list[str]:
+        return [c.name for c in self._clients.values() if not c.settled]
+
+    def names(self) -> list[str]:
+        return list(self._clients)
+
+    def result(self, name: str) -> ClientResult:
+        """The current (latest-incarnation) result of ``name``."""
+        return self._client(name).result
+
+    def history(self, name: str) -> list[ClientResult]:
+        """Results of earlier incarnations (oldest first), excluding the
+        current one."""
+        return list(self._client(name).history)
+
+    def incarnation(self, name: str) -> int:
+        """0 for the first launch, +1 per restart."""
+        return len(self._client(name).history)
+
+    # -- collective waits -----------------------------------------------------
+    def join(self, timeout: float) -> None:
+        """Wait (bounded) for every client to settle; clients still alive at
+        the deadline are reaped (SIGKILL) and report ``ProcessCrashed``."""
+        deadline = time.monotonic() + timeout
+        while self.unsettled() and time.monotonic() < deadline:
+            if not self.poll():
+                time.sleep(0.05)
+        # Final sweep: a result delivered right at the deadline is already
+        # sitting in our end of the pipe — recover it, don't report a crash.
+        for c in self._clients.values():
+            if not c.settled:
+                self._try_settle(c)
+        for c in self._clients.values():
+            if not c.settled:  # hung past the deadline: reap it
+                self._reap(c, timeout=0.0)
+                self._settle(c)
+            else:
+                self._reap(c, timeout=max(0.0, deadline - time.monotonic()) + 1.0)
+            c.cancel_timers()
+
+    def shutdown(self) -> None:
+        """Cancel every armed timer, reap every process. Idempotent; safe
+        after an exception mid-flight (run_multiprocess calls it in a
+        ``finally``)."""
+        for c in self._clients.values():
+            c.cancel_timers()
+            self._reap(c, timeout=0.0)
+            if not c.settled:
+                self._try_settle(c)
+            if not c.settled:
+                self._settle(c)
+
+    # -- internals ------------------------------------------------------------
+    def _client(self, name: str) -> _Supervised:
+        c = self._clients.get(name)
+        if c is None:
+            raise KeyError(f"no supervised client {name!r}")
+        return c
+
+    def _try_settle(self, c: _Supervised) -> bool:
+        """Absorb the client's message if available; True when it settled
+        (reported, channel dead, or process gone without reporting)."""
+        alive = c.proc.is_alive()  # check BEFORE polling: a message landing
+        # between poll and liveness check must not be mistaken for a crash
+        try:
+            if not c.conn.poll(0 if alive else 0.05):
+                if alive:
+                    return False
+                # dead + channel empty ⇒ will never report
+                self._settle(c)
+                return True
+            ok, result, tb = c.conn.recv()
+        except (EOFError, OSError):  # killed mid-send: only its own channel dies
+            self._settle(c)
+            return True
+        c.received = True
+        if ok:
+            c.result.result = result
+        else:
+            c.result.error = ProcessCrashed(f"client {c.name} raised")
+            c.result.traceback = tb
+        self._settle(c)
+        return True
+
+    def _settle(self, c: _Supervised) -> None:
+        c.settled = True
+        c.cancel_timers()
+        self._reap(c, timeout=5.0)
+        if not c.received and c.result.error is None:
+            c.result.error = ProcessCrashed(
+                f"client {c.name} exited with code {c.result.exitcode} "
+                "before reporting"
+            )
+
+    @staticmethod
+    def _reap(c: _Supervised, timeout: float) -> None:
+        if c.proc is None:
+            return
+        c.proc.join(timeout=timeout)
+        if c.proc.is_alive():
+            _sigkill(c.proc)
+            c.proc.join(timeout=5.0)
+        c.result.exitcode = c.proc.exitcode
+
+
+def _sigkill(proc) -> None:
+    if proc is not None and proc.is_alive() and proc.pid is not None:
+        try:
+            os.kill(proc.pid, signal.SIGKILL)
+        except ProcessLookupError:
+            pass
+
+
 def run_multiprocess(
     clients: Sequence[Callable[[], Any] | tuple],
     *,
@@ -115,7 +346,12 @@ def run_multiprocess(
     process is SIGKILLed (crash injection mid-round: no cleanup, no goodbye
     deposit — exactly what the async-robustness claim must survive). Killed or
     timed-out clients report a ``ProcessCrashed`` error in their
-    ``ClientResult``; survivors are unaffected.
+    ``ClientResult``; survivors are unaffected. Kill timers are cancelled as
+    soon as their client settles — a client finishing before its scheduled
+    kill leaves no timer thread behind.
+
+    One-shot wrapper over ``ProcessSupervisor`` (use that directly for
+    incremental spawn/kill/restart — the fleet chaos harness does).
     """
     specs: list[tuple[Callable[..., Any], tuple, dict]] = []
     for entry in clients:
@@ -134,83 +370,19 @@ def run_multiprocess(
     names = list(names or [f"node{i}" for i in range(len(specs))])
     if len(names) != len(specs):
         raise ValueError(f"{len(names)} names for {len(specs)} clients")
-    results = [ClientResult(node_id=n) for n in names]
+    if len(set(names)) != len(names):
+        raise ValueError(f"client names must be unique, got {names}")
 
-    ctx = multiprocessing.get_context(start_method)
-    procs = []
-    conns = []
-    for i, (t, a, kw) in enumerate(specs):
-        parent_conn, child_conn = ctx.Pipe(duplex=False)
-        procs.append(ctx.Process(target=_mp_entry, args=(t, a, kw, child_conn),
-                                 name=names[i], daemon=True))
-        conns.append((parent_conn, child_conn))
-    for p in procs:
-        p.start()
-    for _, child_conn in conns:
-        child_conn.close()  # parent's copy; lets recv see EOF when a child dies
-
-    timers: list[threading.Timer] = []
-
-    def _kill(proc) -> None:
-        if proc.is_alive() and proc.pid is not None:
-            try:
-                os.kill(proc.pid, signal.SIGKILL)
-            except ProcessLookupError:
-                pass
-
-    for i, delay in (kill_after or {}).items():
-        timer = threading.Timer(delay, _kill, args=(procs[i],))
-        timer.daemon = True
-        timer.start()
-        timers.append(timer)
-
-    received: set[int] = set()
-
-    def _try_recv(i: int) -> bool:
-        """Absorb client i's message if available; True when i is settled
-        (reported, channel dead, or process gone without reporting)."""
-        conn = conns[i][0]
-        alive = procs[i].is_alive()  # check BEFORE polling: a message landing
-        # between poll and liveness check must not be mistaken for a crash
-        try:
-            if not conn.poll(0 if alive else 0.05):
-                return not alive  # dead + channel empty ⇒ will never report
-            ok, result, tb = conn.recv()
-        except (EOFError, OSError):  # killed mid-send: only its own channel dies
-            return True
-        received.add(i)
-        if ok:
-            results[i].result = result
-        else:
-            results[i].error = ProcessCrashed(f"client {names[i]} raised")
-            results[i].traceback = tb
-        return True
-
-    deadline = time.monotonic() + join_timeout
-    pending = set(range(len(specs)))
-    while pending and time.monotonic() < deadline:
-        settled = {i for i in pending if _try_recv(i)}
-        pending -= settled
-        if not settled:
-            time.sleep(0.05)
-    # Final sweep: a result delivered right at the deadline is already sitting
-    # in our end of the pipe — recover it instead of reporting a crash.
-    for i in list(pending):
-        _try_recv(i)
-
-    for timer in timers:
-        timer.cancel()
-    for i, p in enumerate(procs):
-        p.join(timeout=max(0.0, deadline - time.monotonic()) + 1.0)
-        if p.is_alive():  # hung past the deadline: reap it
-            _kill(p)
-            p.join(timeout=5.0)
-        results[i].exitcode = p.exitcode
-        if i not in received and results[i].error is None:
-            results[i].error = ProcessCrashed(
-                f"client {names[i]} exited with code {p.exitcode} before reporting"
-            )
-    return results
+    sup = ProcessSupervisor(start_method=start_method)
+    try:
+        for name, (t, a, kw) in zip(names, specs):
+            sup.spawn(name, t, a, kw)
+        for i, delay in (kill_after or {}).items():
+            sup.schedule_kill(names[i], delay)
+        sup.join(join_timeout)
+    finally:
+        sup.shutdown()
+    return [sup.result(n) for n in names]
 
 
 # --------------------------------------------------------------------------

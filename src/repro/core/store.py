@@ -86,6 +86,20 @@ class SharedFolder(ABC):
         missing) — callers must fetch."""
         return None
 
+    def put_if_absent(self, key: str, blob: bytes) -> bool:
+        """Create ``key`` only if it does not exist; True when THIS call
+        created it. The fleet launcher's slot-claim primitive: concurrent
+        workers race ``put_if_absent`` on the same claim key and exactly one
+        wins. Backends with an atomic create (``DiskFolder`` via link(2),
+        ``InMemoryFolder`` under its lock) override this with a genuinely
+        atomic version; this default is check-put-readback — best effort
+        only, last-writer-wins backends (S3 without conditional puts) can
+        double-claim under a tight race."""
+        if self.get(key) is not None:
+            return False
+        self.put(key, blob)
+        return self.get(key) == blob
+
     def state_hash(self, exclude: str | tuple[str, ...] | None = None) -> str:
         """Hash of (key, version) pairs — cheap change detection. ``exclude``
         drops keys (the caller's own deposits: exact keys, or prefixes ending
@@ -139,6 +153,15 @@ class InMemoryFolder(SharedFolder):
         with self._lock:
             return self._versions.get(key)
 
+    def put_if_absent(self, key: str, blob: bytes) -> bool:
+        with self._lock:
+            if key in self._blobs:
+                return False
+            self._vclock += 1
+            self._blobs[key] = blob
+            self._versions[key] = self._vclock
+            return True
+
     def state_hash(self, exclude: str | tuple[str, ...] | None = None) -> str:
         skip = _exclusion(exclude)
         with self._lock:
@@ -182,6 +205,26 @@ class DiskFolder(SharedFolder):
         finally:
             if os.path.exists(tmp):
                 os.unlink(tmp)
+
+    def put_if_absent(self, key: str, blob: bytes) -> bool:
+        """Atomic create: write a temp file, then link(2) it to the final
+        name — link fails with EEXIST when the name is taken, and it is
+        atomic on POSIX filesystems *including NFS* (unlike O_EXCL on NFSv2),
+        which is exactly the mount a multi-host fleet shares. This is the
+        mutual-exclusion primitive behind fleet slot claims."""
+        fd, tmp = tempfile.mkstemp(dir=self.directory, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(blob)
+            now = time.time_ns()
+            os.utime(tmp, ns=(now, now))
+            try:
+                os.link(tmp, self._path(key))
+            except FileExistsError:
+                return False
+            return True
+        finally:
+            os.unlink(tmp)
 
     def get(self, key: str) -> bytes | None:
         path = self._path(key)
@@ -340,6 +383,12 @@ class CachingFolder(SharedFolder):
         # would be a *persistent* stale hit. The next get refetches once.
         with self._lock:
             self._cache.pop(key)
+
+    def put_if_absent(self, key: str, blob: bytes) -> bool:
+        created = self.inner.put_if_absent(key, blob)
+        with self._lock:
+            self._cache.pop(key)  # same reasoning as put(): never pre-cache
+        return created
 
     def get(self, key: str) -> bytes | None:
         # Read the version token *before* the blob: if a writer lands between
@@ -552,9 +601,11 @@ class WeightStore:
         # A node's deposits span latest/, base/ + chain/ (delta rebases and
         # chain links) and history/; all of them must be excluded or the
         # node's own push would defeat its own skip check. state/ blobs are
-        # optimizer recovery data, not federation signal — excluded for
-        # every node so strategy-state deposits never trigger re-pulls.
-        exclude: tuple[str, ...] = ("state/",)
+        # optimizer recovery data and fleet/ blobs are launcher control
+        # traffic (specs, claims, heartbeats, soak results) — neither is
+        # federation signal, so both are excluded for every node: a heartbeat
+        # landing between two pulls must not trigger a fleet-wide re-pull.
+        exclude: tuple[str, ...] = ("state/", "fleet/")
         if exclude_node:
             exclude = (
                 f"latest/{exclude_node}",
@@ -562,6 +613,7 @@ class WeightStore:
                 f"chain/{exclude_node}/",
                 f"history/{exclude_node}/",
                 "state/",
+                "fleet/",
             )
         return self.folder.state_hash(exclude=exclude)
 

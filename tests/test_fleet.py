@@ -1,0 +1,316 @@
+"""Fleet launcher + chaos soak harness (``repro.core.fleet``).
+
+Covers the control plane (spec round-trips through the store, slot-claim
+mutual exclusion under concurrent workers), the seeded chaos schedule's
+determinism, and the soak itself: SIGKILL-restart-resume across multiple
+worker invocations converging to one fleet state hash.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, strategies as st
+
+from repro.core import (
+    ChaosSpec,
+    DiskFolder,
+    FleetSpec,
+    InMemoryFolder,
+    chaos_schedule,
+    claim_slots,
+    run_fleet_local,
+    run_worker,
+)
+from repro.core.fleet import (
+    SPEC_KEY,
+    assemble_report,
+    control_folder,
+    fleet_control_uri,
+    read_spec,
+    write_spec,
+)
+from repro.core.serialize import peek_meta
+
+
+def _spec(tmp_path, **kw):
+    defaults = dict(store_uri=str(tmp_path), num_nodes=4, rounds=4,
+                    runner="thread", param_size=32, round_sleep=0.01,
+                    settle=0.2, result_timeout=60.0)
+    defaults.update(kw)
+    return FleetSpec(**defaults)
+
+
+# --- spec round-trip through the store ---------------------------------------
+
+
+def test_fleet_spec_roundtrip_through_store(tmp_path):
+    spec = _spec(tmp_path, transport="delta(chain=4)",
+                 chaos=ChaosSpec(seed=3, kills=1, stalls=1))
+    control = control_folder(spec.store_uri)
+    write_spec(control, spec)
+    # the deposit is a self-describing fleet blob, dispatchable by meta alone
+    assert peek_meta(control.get(SPEC_KEY))["fleet_of"] == "spec"
+    loaded = read_spec(control)
+    assert loaded.to_dict() == spec.to_dict()
+    assert loaded.chaos.kills == 1 and loaded.transport == "delta(chain=4)"
+    # JSON round-trip too (the CLI's serialization path)
+    assert FleetSpec.from_json(spec.to_json()).to_dict() == spec.to_dict()
+
+
+def test_read_spec_times_out_on_empty_folder():
+    with pytest.raises(TimeoutError):
+        read_spec(InMemoryFolder(), timeout=0.05, poll=0.01)
+
+
+def test_fleet_spec_validation(tmp_path):
+    with pytest.raises(ValueError):
+        _spec(tmp_path, runner="fiber")
+    with pytest.raises(ValueError):
+        _spec(tmp_path, rounds=1, chaos=ChaosSpec(kills=1))
+    with pytest.raises(ValueError):
+        _spec(tmp_path, num_nodes=2, chaos=ChaosSpec(kills=2, stalls=1))
+
+
+def test_fleet_control_uri_strips_wrappers():
+    assert fleet_control_uri("shard4+cache+/mnt/x") == "/mnt/x"
+    assert fleet_control_uri("cache+/mnt/x") == "/mnt/x"
+    assert fleet_control_uri("/mnt/x") == "/mnt/x"
+    with pytest.raises(ValueError):
+        fleet_control_uri("memory://")
+
+
+# --- slot-claim mutual exclusion ---------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)  # thread scheduling outruns any deadline
+@given(st.integers(2, 6), st.integers(1, 8), st.integers(0, 10_000))
+def test_claim_mutual_exclusion_under_concurrent_workers(workers, slots, seed):
+    """However many workers race, the claims always partition the slot space:
+    no slot is owned twice, every slot is owned once the dust settles, and a
+    worker re-claiming (restart under the same id) gets exactly its own slots
+    back."""
+    spec = FleetSpec(store_uri="/unused", num_nodes=slots, rounds=2,
+                     runner="thread")
+    control = InMemoryFolder()
+    claimed: dict[str, list[int]] = {}
+    barrier = threading.Barrier(workers)
+
+    def worker(wid):
+        barrier.wait()  # maximize contention
+        claimed[wid] = claim_slots(control, spec, wid)
+
+    threads = [threading.Thread(target=worker, args=(f"w{i}-{seed}",))
+               for i in range(workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    owned = [s for slots_ in claimed.values() for s in slots_]
+    assert sorted(owned) == list(range(slots))  # partition: disjoint + complete
+    # reclaim: same worker id gets the same slots, nothing more
+    for wid, mine in claimed.items():
+        assert claim_slots(control, spec, wid) == mine
+
+
+def test_diskfolder_put_if_absent_single_winner(tmp_path):
+    """link(2)-based create: exactly one of N racing threads wins the key."""
+    folder = DiskFolder(str(tmp_path))
+    wins = []
+    barrier = threading.Barrier(8)
+
+    def race(i):
+        barrier.wait()
+        if folder.put_if_absent("fleet/claim/0000", f"w{i}".encode()):
+            wins.append(i)
+
+    threads = [threading.Thread(target=race, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(wins) == 1
+    assert folder.get("fleet/claim/0000") == f"w{wins[0]}".encode()
+    # a later put_if_absent still loses; plain put still overwrites
+    assert not folder.put_if_absent("fleet/claim/0000", b"late")
+    folder.put("fleet/claim/0000", b"force")
+    assert folder.get("fleet/claim/0000") == b"force"
+
+
+def test_max_slots_caps_claims(tmp_path):
+    spec = _spec(tmp_path, num_nodes=6)
+    control = InMemoryFolder()
+    a = claim_slots(control, spec, "a", max_slots=4)
+    b = claim_slots(control, spec, "b", max_slots=4)
+    assert a == [0, 1, 2, 3] and b == [4, 5]
+
+
+# --- seeded chaos schedule ---------------------------------------------------
+
+
+def test_chaos_schedule_deterministic(tmp_path):
+    spec = _spec(tmp_path, num_nodes=16, rounds=6,
+                 chaos=ChaosSpec(seed=11, kills=3, stalls=2))
+    first = chaos_schedule(spec)
+    again = chaos_schedule(FleetSpec.from_dict(spec.to_dict()))
+    assert first == again  # pure function of the spec — any host, any order
+    kills = {n for n, evs in first.items() if any(e.kind == "kill" for e in evs)}
+    stalls = {n for n, evs in first.items() if any(e.kind == "stall" for e in evs)}
+    assert len(kills) == 3 and len(stalls) == 2
+    assert not kills & stalls  # victims drawn without replacement
+    for evs in first.values():
+        for ev in evs:
+            if ev.kind == "kill":
+                # must die after >=1 push (a blob to resume from) and before
+                # finishing its rounds
+                assert 1 <= ev.after_pushes <= spec.rounds - 1
+
+
+def test_chaos_schedule_seed_sensitivity(tmp_path):
+    base = _spec(tmp_path, num_nodes=16, rounds=6)
+    schedules = {
+        seed: chaos_schedule(_spec(tmp_path, num_nodes=16, rounds=6,
+                                   chaos=ChaosSpec(seed=seed, kills=3)))
+        for seed in range(6)
+    }
+    victim_sets = {s: frozenset(sched) for s, sched in schedules.items()}
+    # different seeds must actually move the victims around (not necessarily
+    # pairwise distinct — 16 choose 3 collisions happen — but not constant)
+    assert len(set(victim_sets.values())) > 1
+    assert chaos_schedule(base) == {}  # no chaos configured -> empty schedule
+
+
+# --- the soak ----------------------------------------------------------------
+
+
+def test_thread_soak_8_nodes_2_workers_chaos(tmp_path):
+    """≥8 nodes across ≥2 workers over a shared folder: seeded kills + stalls,
+    every victim resumes, every worker computes the same fleet hash."""
+    spec = _spec(tmp_path, num_nodes=8, rounds=5,
+                 chaos=ChaosSpec(seed=7, kills=2, stalls=1,
+                                 restart_after=0.1, stall_duration=0.2))
+    report = run_fleet_local(spec, num_workers=2)
+    assert report.complete and report.converged and report.recovered
+    assert report.passed, report.summary()
+    assert report.crashes_injected == 2 and report.restarts == 2
+    assert len(report.fleet_hashes) == 2
+    assert len(set(report.fleet_hashes.values())) == 1
+    for victim in report.victims:
+        assert report.resumed[victim] is True
+        assert report.recovery_latency[victim] >= 0.0
+    for nid, rounds in report.rounds_completed.items():
+        assert rounds >= spec.rounds, (nid, rounds)
+    # two workers actually partitioned the fleet
+    assert sorted(report.claims) == list(range(8))
+    assert len(set(report.claims.values())) == 2
+    # pipeline stats rolled up across every node's transport counters
+    assert report.pipeline_stats["bytes_written"] > 0
+    assert report.rounds_per_sec > 0
+
+
+def test_soak_report_fails_without_recovery(tmp_path):
+    """A victim that never comes back must fail the soak: kill one node's
+    result blob out of a passing fleet and the report flips to not-passed."""
+    spec = _spec(tmp_path, num_nodes=4, rounds=4,
+                 chaos=ChaosSpec(seed=1, kills=1, restart_after=0.05))
+    report = run_fleet_local(spec, num_workers=2)
+    assert report.passed
+    control = control_folder(spec.store_uri)
+    victim = report.victims[0]
+    control.delete(f"fleet/result/{victim}")
+    broken = assemble_report(control, spec)
+    assert not broken.complete and not broken.passed
+
+
+def test_fleet_blobs_never_disturb_federation_hashes(tmp_path):
+    """Control traffic (spec/claims/heartbeats/results) is excluded from the
+    federation state hash — nodes sharing the folder with the control plane
+    must not re-pull on every heartbeat."""
+    from repro.core import NodeUpdate, WeightStore
+
+    spec = _spec(tmp_path)
+    store = WeightStore(DiskFolder(str(tmp_path)))
+    store.push(NodeUpdate({"w": np.ones(4, np.float32)}, num_examples=1,
+                          node_id="n0", counter=0))
+    before = store.state_hash(exclude_node="n0")
+    write_spec(control_folder(spec.store_uri), spec)
+    claim_slots(control_folder(spec.store_uri), spec, "w0")
+    assert store.state_hash(exclude_node="n0") == before
+    assert store.state_hash() == store.state_hash()
+
+
+# --- the real thing: SIGKILL + restart across worker invocations -------------
+
+
+@pytest.mark.multiprocess
+def test_process_soak_sigkill_restart_resume_two_workers(tmp_path):
+    """Two worker invocations (as two concurrent run_worker calls, exactly
+    what two `repro.fleet worker` shells do), nodes as real OS processes, one
+    seeded SIGKILL victim: the victim is killed mid-round, respawned, and its
+    restarted incarnation reports resumed=True; both workers agree on the
+    fleet hash."""
+    spec = _spec(tmp_path, num_nodes=4, rounds=4, runner="process",
+                 round_sleep=0.05, settle=0.5, result_timeout=120.0,
+                 chaos=ChaosSpec(seed=7, kills=1, restart_after=0.3,
+                                 kill_grace=60.0))
+    control = control_folder(spec.store_uri)
+    write_spec(control, spec)
+    reports = {}
+
+    def worker(wid):
+        reports[wid] = run_worker(spec=spec, control=control, worker_id=wid,
+                                  max_slots=2, timeout=180.0)
+
+    threads = [threading.Thread(target=worker, args=(w,))
+               for w in ("hostA", "hostB")]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=240.0)
+    assert all(not t.is_alive() for t in threads)
+
+    report = assemble_report(control, spec)
+    assert report.complete and report.converged
+    assert report.crashes_injected == 1 and report.restarts == 1
+    assert report.passed, report.summary()
+    victim = report.victims[0]
+    assert report.resumed[victim] is True
+    # the restarted node continued its counter, it did not start over
+    assert report.results[victim]["start_counter"] > 0
+    assert report.results[victim]["final_counter"] >= spec.rounds
+    assert report.recovery_latency[victim] > 0.0
+    # both workers hashed the same quiesced store, independently
+    assert set(reports) == {"hostA", "hostB"}
+    hashes = {r.fleet_state_hash for r in reports.values()}
+    assert len(hashes) == 1 and None not in hashes
+
+
+# --- the CLI -----------------------------------------------------------------
+
+
+def test_fleet_cli_init_workers_report(tmp_path, capsys):
+    """The documented multi-host flow, driven through the argparse entry
+    point: init, two worker invocations, report --assert-passed."""
+    from repro.fleet import main
+
+    store = str(tmp_path)
+    assert main(["init", "--store", store, "--nodes", "4", "--rounds", "3",
+                 "--runner", "thread", "--round-sleep", "0.01",
+                 "--settle", "0.2", "--chaos-kills", "1", "--seed", "2",
+                 "--param-size", "32"]) == 0
+    codes = {}
+
+    def worker(wid):
+        codes[wid] = main(["worker", "--store", store, "--worker-id", wid,
+                           "--max-slots", "2"])
+
+    threads = [threading.Thread(target=worker, args=(w,)) for w in ("a", "b")]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120.0)
+    assert codes == {"a": 0, "b": 0}
+    assert main(["report", "--store", store, "--assert-passed"]) == 0
+    out = capsys.readouterr().out
+    assert "passed: True" in out

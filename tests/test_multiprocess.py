@@ -334,6 +334,58 @@ def test_sharded_federation_across_processes(tmp_path):
     assert np.asarray(by_id["n0"]["final"]).max() > 0.3  # n0 pulled off target 0
 
 
+def test_run_multiprocess_cancels_unfired_kill_timers():
+    """A client that finishes before its scheduled kill must not leave the
+    kill timer's thread behind: the supervisor cancels outstanding timers on
+    normal join, so no thread — Timer or otherwise, daemon or not — survives
+    the call."""
+    import threading
+
+    before = set(threading.enumerate())
+    res = run_multiprocess([(_returns_value, (21,))], kill_after={0: 300.0})
+    assert res[0].error is None and res[0].result == 42
+    leaked = [t for t in threading.enumerate()
+              if t not in before and t.is_alive()]
+    assert not leaked, f"threads survived run_multiprocess: {leaked}"
+    assert not any(isinstance(t, threading.Timer) for t in threading.enumerate())
+
+
+def test_supervisor_restart_resumes_client(tmp_path):
+    """The fleet worker's kill→respawn cycle at supervisor level: spawn a
+    client, SIGKILL it, respawn under the same name — the second incarnation
+    (same node id) resumes from the first one's deposits, and the first
+    incarnation's result stays available as history."""
+    from repro.core import ProcessSupervisor
+
+    sup = ProcessSupervisor()
+    try:
+        sup.spawn("phoenix", _resumable_client, (str(tmp_path), "phoenix", 50),
+                  {"die_after_pushes": 2})
+        deadline = time.monotonic() + 60.0
+        while time.monotonic() < deadline:  # wait for the park, then kill
+            if WeightStore(DiskFolder(str(tmp_path))).pull_node("phoenix") is not None:
+                break
+            time.sleep(0.05)
+        sup.kill("phoenix")
+        sup.join(30.0)
+        assert sup.result("phoenix").exitcode == -signal.SIGKILL
+        assert isinstance(sup.result("phoenix").error, ProcessCrashed)
+
+        # restart under the same name, this time without the parking kwargs
+        # (exactly what the fleet worker does after an injected crash)
+        sup.spawn("phoenix", _resumable_client, (str(tmp_path), "phoenix", 2))
+        assert sup.incarnation("phoenix") == 1
+        sup.join(60.0)
+        reborn = sup.result("phoenix")
+        assert reborn.error is None, reborn.traceback
+        assert reborn.result["resumed_from"] is not None
+        assert reborn.result["start_counter"] > 0
+        # the killed incarnation's outcome is preserved as history
+        assert isinstance(sup.history("phoenix")[0].error, ProcessCrashed)
+    finally:
+        sup.shutdown()
+
+
 def test_run_multiprocess_rejects_bad_kill_index():
     with pytest.raises(ValueError):
         run_multiprocess([_returns_value], kill_after={5: 1.0})
