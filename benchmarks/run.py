@@ -505,6 +505,96 @@ def bench_transport(trials: int, sizes=None):
             f"acceptance_passed={payload['acceptance']['passed']}")
 
 
+def bench_llm(trials: int):
+    """Federated-LLM wire cost: bytes/round and round latency for the smoke
+    transformer (with LoRA adapters) under full, delta-chain, and adapter-only
+    family transport. The LLM fine-tuning regime is dense — every local step
+    moves every parameter — so value-deltas cannot shrink a round; only the
+    leaf-family subset can, because it names the adapters *structurally*.
+    Writes BENCH_llm.json; the acceptance bar is adapter-only federation
+    shipping >=50x fewer bytes/round than full-model transport."""
+    import jax
+
+    from repro.core import InMemoryFolder, NodeUpdate, WeightStore
+    from repro.core.tree import LeafSpec, tree_to_numpy
+    from repro.models import ModelConfig, build_model
+
+    from ._schema import write_bench
+
+    cfg = ModelConfig(
+        name="bench-lm", n_layers=4, d_model=256, n_heads=8, n_kv_heads=8,
+        d_ff=1024, vocab_size=2048, activation="gelu", dtype="float32",
+        lora_rank=8)
+    model = build_model(cfg)
+    params = tree_to_numpy(model.init(jax.random.PRNGKey(0)))
+    spec = LeafSpec.of(params)
+    view = spec.family_view(("adapters",))
+    flat0 = spec.flatten(params)
+    rounds = max(5, trials)
+    specs = ["full", "delta(chain=4)", "family(adapters=full)"]
+    results = {}
+    for tspec in specs:
+        rng = np.random.default_rng(0)
+        folder = InMemoryFolder()
+        writer = WeightStore(folder, transport=tspec)
+        reader = WeightStore(folder)
+        flat = flat0.copy()
+        # round 0 is the one-time anchor (family/delta deposit a full base);
+        # bytes/round is the steady-state cost, so it is recorded separately
+        writer.push(NodeUpdate(spec.unflatten(flat), num_examples=1,
+                               node_id="n", counter=0))
+        assert reader.pull_node("n") is not None
+        anchor_bytes = writer.bytes_written
+        push_s, pull_s = [], []
+        for ctr in range(1, rounds + 1):
+            flat = flat + rng.normal(size=flat.size).astype(np.float32) * np.float32(1e-4)
+            flat[view.indices] += (rng.normal(size=view.num_params)
+                                   .astype(np.float32) * np.float32(1e-2))
+            update = NodeUpdate(spec.unflatten(flat), num_examples=1,
+                                node_id="n", counter=ctr)
+            t0 = time.time()
+            writer.push(update)
+            push_s.append(time.time() - t0)
+            t0 = time.time()
+            got = reader.pull_node("n")
+            pull_s.append(time.time() - t0)
+            assert got is not None
+            # family blobs must still carry the adapters exactly
+            got_flat = spec.flatten(got.params)
+            np.testing.assert_allclose(got_flat[view.indices],
+                                       flat[view.indices], rtol=1e-5, atol=1e-6)
+        bytes_per_round = (writer.bytes_written - anchor_bytes) / rounds
+        round_ms = 1e3 * (float(np.median(push_s)) + float(np.median(pull_s)))
+        results[tspec] = {
+            "anchor_bytes": int(anchor_bytes),
+            "bytes_per_round": int(bytes_per_round),
+            "push_ms": round(1e3 * float(np.median(push_s)), 3),
+            "pull_ms": round(1e3 * float(np.median(pull_s)), 3),
+            "round_ms": round(round_ms, 3),
+        }
+        _report(f"llm/{tspec}/bytes_per_round", 0.0,
+                f"{bytes_per_round / 1e6:.3f}MB")
+        _report(f"llm/{tspec}/round_latency", round_ms / 1e3, "push+pull")
+    ratio = (results["full"]["bytes_per_round"]
+             / max(results["family(adapters=full)"]["bytes_per_round"], 1))
+    payload = write_bench("BENCH_llm.json", {
+        "model": {"name": cfg.name, "params": int(spec.num_params),
+                  "adapter_params": int(view.num_params),
+                  "adapter_fraction": round(view.num_params / spec.num_params, 5),
+                  "lora_rank": cfg.lora_rank},
+        "rounds": rounds,
+        "results": results,
+        "acceptance": {
+            "criterion": ("adapter-only federation ships >=50x fewer "
+                          "bytes/round than full-model transport"),
+            "bytes_ratio_full_vs_adapters": round(ratio, 1),
+            "passed": bool(ratio >= 50.0),
+        },
+    }, benchmark="federated LLM wire cost (full vs delta-chain vs adapter-only)")
+    _report("llm/BENCH_llm.json", 0.0,
+            f"acceptance_passed={payload['acceptance']['passed']}")
+
+
 def bench_soak(trials: int, sizes=None):
     """Fleet chaos soak at 8→128 nodes: rounds/sec throughput and SIGKILL→
     resume recovery latency as the fleet grows, two workers partitioning the
@@ -625,6 +715,7 @@ TABLES = {
     "kernels": bench_kernels,
     "agg": bench_agg,
     "transport": bench_transport,
+    "llm": bench_llm,
     "soak": bench_soak,
 }
 

@@ -1,13 +1,20 @@
 """End-to-end driver: federated training of a ~100M-param language model.
 
-Three serverless async nodes train a 12-layer / d512 decoder LM (≈95M params,
-Pythia-style) on disjoint shards of a synthetic WikiText stream for a few
-hundred steps, federating through a shared weight store after every epoch —
-the paper's §4.4 experiment scaled to the "fleet of affordable compute nodes"
+Serverless async nodes train a 12-layer / d512 decoder LM (≈95M params,
+Pythia-style, plus LoRA adapters on the attention q-projections) on disjoint
+shards of a synthetic WikiText stream, federating through a *real*
+``WeightStore`` (delta-chain transport by default) after every epoch — the
+paper's §4.4 experiment scaled to the "fleet of affordable compute nodes"
 setting its §5 aspires to.
 
     PYTHONPATH=src python examples/federated_llm.py                 # ~100M, 300 steps
     PYTHONPATH=src python examples/federated_llm.py --smoke         # 2 min version
+    PYTHONPATH=src python examples/federated_llm.py --adapters-only # LoRA federation
+
+``--adapters-only`` demonstrates leaf-family subset federation: nodes ship
+and aggregate ONLY the ``adapters`` leaf family (``family(adapters=full)``
+transport + ``PartialFedAvg(families=...)``), so each round moves ~2 orders
+of magnitude fewer bytes while every other weight stays node-local.
 """
 import argparse
 import json
@@ -28,13 +35,19 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--smoke", action="store_true")
 ap.add_argument("--nodes", type=int, default=3)
 ap.add_argument("--epochs", type=int, default=None)
+ap.add_argument("--transport", default="delta(chain=4)",
+                help="weight-store pipeline spec, e.g. full, delta(chain=4), "
+                     "'family(adapters=full,norms=delta)'")
+ap.add_argument("--adapters-only", action="store_true",
+                help="LoRA-style federation: ship + aggregate only the "
+                     "adapters leaf family; all other weights stay local")
 args = ap.parse_args()
 
 CFG = ModelConfig(
     name="fedlm-95m",
     n_layers=12, d_model=512, n_heads=8, n_kv_heads=8, d_ff=2048,
-    vocab_size=50304, activation="gelu", dtype="float32",
-    source="Pythia-style ~100M (arXiv:2304.01373)",
+    vocab_size=50304, activation="gelu", dtype="float32", lora_rank=8,
+    source="Pythia-style ~100M (arXiv:2304.01373) + LoRA (arXiv:2106.09685)",
 )
 if args.smoke:
     CFG = CFG.replace(n_layers=4, d_model=256, d_ff=1024, vocab_size=2048)
@@ -46,7 +59,8 @@ STEPS = 10 if args.smoke else 30   # per epoch per node → 3 nodes × 300 steps
 model = build_model(CFG)
 n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(jax.eval_shape(model.init, jax.random.PRNGKey(0))))
 print(f"model: {CFG.name}  params={n_params/1e6:.1f}M  nodes={args.nodes}  "
-      f"steps/node={EPOCHS * STEPS}")
+      f"steps/node={EPOCHS * STEPS}  "
+      f"wire={'family(adapters=full)' if args.adapters_only else args.transport}")
 
 data = make_synthetic_wikitext(vocab_size=CFG.vocab_size, train_tokens=400_000, seed=0)
 shards = partition_sequence_dataset(data.train_tokens, args.nodes)
@@ -71,13 +85,25 @@ def client(i: int):
         init_params=init_params,
         seed=i, name=f"node{i}",
     )
-    node = AsyncFederatedNode(strategy=FedAvg(), shared_folder=folder, node_id=f"node{i}")
+    if args.adapters_only:
+        # families= wires both halves of subset federation: the node's store
+        # ships family(adapters=full) blobs, and the default strategy becomes
+        # PartialFedAvg(families=...) so non-adapter leaves stay personal.
+        node = AsyncFederatedNode(
+            shared_folder=folder, node_id=f"node{i}", families=("adapters",))
+    else:
+        node = AsyncFederatedNode(
+            strategy=FedAvg(), shared_folder=folder, node_id=f"node{i}",
+            transport=args.transport)
     cb = FederatedCallback(node, num_examples_per_epoch=STEPS * BATCH)
     trainer.fit(lambda e: lm_batch_iterator(shards[i], batch_size=BATCH, seq_len=SEQ, seed=i, epoch=e),
                 epochs=EPOCHS, steps_per_epoch=STEPS, callbacks=[cb], verbose=(i == 0))
     loss, acc = evaluate(trainer.params)
+    stats = node.transport_stats()
     return {"node": f"node{i}", "eval_loss": round(loss, 4), "next_token_acc": round(acc, 4),
-            "aggregations": node.num_aggregations}
+            "aggregations": node.num_aggregations,
+            "mb_written": round(stats["bytes_written"] / 1e6, 2),
+            "mb_read": round(stats["bytes_read"] / 1e6, 2)}
 
 
 t0 = time.time()

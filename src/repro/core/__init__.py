@@ -43,7 +43,13 @@ from .serialize import (
     serialize_update,
     serialize_update_delta,
 )
-from .tree import LeafSpec
+from .tree import (
+    FAMILY_PATTERNS,
+    FamilyView,
+    LeafSpec,
+    register_family,
+    resolve_family_patterns,
+)
 from .simulation import (
     ClientResult,
     ProcessCrashed,
@@ -67,6 +73,7 @@ from .transport import (
     PipelineStats,
     Prefetcher,
     TransportPipeline,
+    family_transport_spec,
     normalize_transport,
     parse_folder_uri,
     parse_pipeline_spec,
@@ -94,6 +101,10 @@ __all__ = [
     "NodeUpdate",
     "FlatUpdate",
     "LeafSpec",
+    "FamilyView",
+    "FAMILY_PATTERNS",
+    "register_family",
+    "resolve_family_patterns",
     "GroupSummary",
     "serialize_update",
     "deserialize_update",
@@ -117,6 +128,7 @@ __all__ = [
     "TransportPipeline",
     "PipelineStats",
     "Prefetcher",
+    "family_transport_spec",
     "normalize_transport",
     "parse_pipeline_spec",
     "parse_folder_uri",

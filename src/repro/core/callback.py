@@ -62,3 +62,8 @@ class FederatedCallback(Callback):
         self.history.append(
             {"epoch": epoch, "federated": new_params is not None, "sampled": True}
         )
+
+    def on_train_end(self, trainer) -> None:
+        # Trainer.fit runs this via try/finally, so a crashed fit cannot leak
+        # the store's background prefetcher thread.
+        self.node.store.stop_prefetch()

@@ -26,8 +26,8 @@ from typing import Callable
 from .gossip import ShardedFolders, ShardedWeightStore
 from .serialize import NodeUpdate
 from .store import SharedFolder, WeightStore
-from .strategies import FedAvg, Strategy
-from .transport import normalize_transport
+from .strategies import FedAvg, PartialFedAvg, Strategy
+from .transport import family_transport_spec, normalize_transport
 from .tree import PyTree, tree_to_numpy
 
 
@@ -44,12 +44,30 @@ class _BaseNode:
         store: WeightStore | ShardedWeightStore | None = None,
         node_id: str | None = None,
         transport: str | None = None,
+        families=None,
         resume: bool = True,
         persist_strategy_state: bool = False,
         prefetch_interval: float | None = None,
         clock: Callable[[], float] = time.monotonic,
         on_step: "Callable[[_BaseNode, PyTree | None], None] | None" = None,
     ):
+        # Leaf-family selector (LoRA-style adapter federation): one kwarg
+        # configures both halves of subset federation. When the node builds
+        # its own store it ships only the selected families (``family(...)``
+        # transport); and unless the caller passed an explicit strategy, it
+        # aggregates only those families too (non-federated leaves stay
+        # personal, bit-exact). A name, a sequence of names, or a mapping
+        # name → sub-policy (full | quantized | delta) — see
+        # ``tree.FAMILY_PATTERNS`` / ``register_family``.
+        self.families = families
+        if families is not None:
+            if transport is None and store is None:
+                transport = family_transport_spec(families)
+            if strategy is None:
+                # a mapping selector maps name → *sub-policy* (a transport
+                # concern); the aggregation mask only needs the names
+                names = tuple(families) if not isinstance(families, str) else families
+                strategy = PartialFedAvg(families=names)
         self._owns_store = store is None
         if store is None:
             if shared_folder is None:

@@ -603,6 +603,10 @@ def apply_update_delta_flat(blob: bytes, spec: LeafSpec,
                 arr = data[_DENSE + key]
                 if arr.size != n:
                     raise ValueError(f"dense leaf {key!r}: {arr.size} vs {n}")
+                if _SCALE + key in files:  # dense int8-quantized leaf
+                    flat[o:o + n] = dequantize_leaf(
+                        arr.reshape(-1), data[_SCALE + key])
+                    continue
                 if arr.dtype.kind != "f" or arr.dtype.itemsize > 4:
                     raise FlatDecodeUnsupported(
                         f"leaf {key!r} has wire dtype {arr.dtype} (not f32-exact)")
@@ -640,6 +644,7 @@ def serialize_update_delta_from_flat(
     changed: np.ndarray | None = None,
     density_threshold: float = 0.5,
     compress: str = "none",
+    quantize_leaves: "frozenset[int] | set[int] | tuple[int, ...]" = (),
     extra_meta: dict[str, Any] | None = None,
 ) -> bytes:
     """Encode ``flat`` as a sparse per-leaf diff against ``base_flat`` — the
@@ -647,10 +652,12 @@ def serialize_update_delta_from_flat(
     it with zero knowledge of how the writer chose the changed set (this is
     what makes writer-side top-k/error-feedback policies transparent).
     ``changed`` (sorted flat indices that differ from the base) may be passed
-    when the caller already computed it; ``extra_meta`` adds writer-side meta
-    keys (e.g. the chain codec's ``chain_depth``). Vectorized: the only
-    per-leaf work is emitting npz entries, which the wire format requires
-    anyway."""
+    when the caller already computed it; ``quantize_leaves`` names leaf
+    indices whose changed values ship int8-quantized (per-segment scale under
+    the ``c|`` key, lossy — the family codec's ``quantized`` sub-policy);
+    ``extra_meta`` adds writer-side meta keys (e.g. the chain codec's
+    ``chain_depth``). Vectorized: the only per-leaf work is emitting npz
+    entries, which the wire format requires anyway."""
     flat = np.asarray(flat, np.float32).reshape(-1)
     if flat.size != spec.num_params:
         raise ValueError(f"{flat.size} params vs spec's {spec.num_params}")
@@ -670,6 +677,21 @@ def serialize_update_delta_from_flat(
             dtypes[key] = restored
         o, n = spec.offsets[i], spec.sizes[i]
         seg = changed[cuts[i]:cuts[i + 1]]
+        if i in quantize_leaves and seg.size:
+            if seg.size > density_threshold * n:
+                # dense quantized: int8 leaf + per-leaf scale (a d|-plus-c|
+                # pair, which readers dequantize) — 1 byte/entry where the
+                # sparse form would pay 5 (int32 index + int8 value)
+                q, scale = quantize_leaf(flat[o:o + n])
+                arrays[_DENSE + key] = q.reshape(spec.shapes[i])
+                arrays[_SCALE + key] = np.asarray(scale)
+                continue
+            arrays[_IDX + key] = (seg - o).astype(
+                np.int64 if n > 2**31 else np.int32)
+            q, scale = quantize_leaf(flat[seg])
+            arrays[_VAL + key] = q
+            arrays[_SCALE + key] = np.asarray(scale)
+            continue
         if seg.size > density_threshold * n:
             arrays[_DENSE + key] = np.asarray(
                 flat[o:o + n], dtype=wire_dt.dtype).reshape(spec.shapes[i])
@@ -740,7 +762,10 @@ def deserialize_update_delta(blob: bytes, base_params: PyTree) -> NodeUpdate:
 
         def reconstruct(key: str) -> np.ndarray:
             if _DENSE + key in data.files:
-                return data[_DENSE + key]
+                arr = data[_DENSE + key]
+                if _SCALE + key in data.files:  # dense int8-quantized leaf
+                    arr = dequantize_leaf(arr, data[_SCALE + key])
+                return arr
             if key not in base:
                 raise DeltaBaseMismatch(f"base is missing leaf {key!r}")
             b = base[key][0]

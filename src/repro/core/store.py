@@ -45,6 +45,7 @@ from .transport import (
     Prefetcher,
     StoreContext,
     TransportPipeline,
+    family_transport_spec,
     parse_folder_uri,
 )
 
@@ -484,6 +485,7 @@ class WeightStore:
         quantized: bool = False,
         keep_history: bool = False,
         transport: str | None = None,
+        families=None,
         rebase_every: int = 10,
         delta_density_threshold: float = 0.5,
         topk_fraction: float = 0.01,
@@ -491,6 +493,14 @@ class WeightStore:
         decode_cache_entries: int = 64,
         prefetch_interval: float | None = None,
     ):
+        # Leaf-family selector sugar: families= builds the family(...) spec
+        # (see transport.family_transport_spec) so pushes ship only the named
+        # leaf families. An explicit transport= already encodes the policy —
+        # passing both would be ambiguous.
+        if families is not None:
+            if transport is not None:
+                raise ValueError("pass families= or transport=, not both")
+            transport = family_transport_spec(families)
         self.folder = folder
         self.pipeline = TransportPipeline.from_spec(
             transport,

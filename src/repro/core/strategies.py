@@ -457,6 +457,13 @@ class PartialFedAvg(Strategy):
     """Partial model personalization (Pillutla et al. 2022): only leaves whose
     path matches ``shared_pattern`` federate; everything else stays personal.
 
+    ``families=`` selects shared leaves by *named leaf family* instead (a
+    family name, a sequence of names, or a ``{name: path-regex}`` mapping —
+    see ``tree.FAMILY_PATTERNS``), resolved through ``LeafSpec.family_view``:
+    the exact subset the ``family(...)`` transport ships, so the aggregation
+    mask and the wire selector can never diverge. It overrides
+    ``shared_pattern`` when given.
+
     The leaf filter compiles once per spec into a boolean mask over the flat
     index space (per-leaf work at spec-construction time only); each aggregate
     is then the usual fused weighted mean plus one vectorized select.
@@ -464,9 +471,10 @@ class PartialFedAvg(Strategy):
 
     name = "partial_fedavg"
 
-    def __init__(self, shared_pattern: str = ".*", *, use_kernel: bool = False,
-                 reuse_output: bool = False):
+    def __init__(self, shared_pattern: str = ".*", *, families=None,
+                 use_kernel: bool = False, reuse_output: bool = False):
         super().__init__(use_kernel=use_kernel, reuse_output=reuse_output)
+        self.families = families
         self.pattern = re.compile(shared_pattern)
         self._mask: np.ndarray | None = None
         self._leaf_mask: list[bool] | None = None
@@ -474,13 +482,18 @@ class PartialFedAvg(Strategy):
 
     def _mask_for(self, spec: LeafSpec) -> np.ndarray:
         if self._mask_key != spec.key:
-            mask = np.zeros(spec.num_params, bool)
-            leaf_mask = []
-            for path, off, n in zip(spec.paths, spec.offsets, spec.sizes):
-                shared = bool(self.pattern.search(path))
-                leaf_mask.append(shared)
-                if shared:
-                    mask[off:off + n] = True
+            if self.families is not None:
+                view = spec.family_view(self.families)
+                mask = view.mask
+                leaf_mask = list(view.leaf_mask)
+            else:
+                mask = np.zeros(spec.num_params, bool)
+                leaf_mask = []
+                for path, off, n in zip(spec.paths, spec.offsets, spec.sizes):
+                    shared = bool(self.pattern.search(path))
+                    leaf_mask.append(shared)
+                    if shared:
+                        mask[off:off + n] = True
             self._mask = mask
             self._leaf_mask = leaf_mask
             self._mask_key = spec.key

@@ -28,7 +28,13 @@ Spec grammar::
 
     policy stages : full | quantized | delta(chain=<int>, q, rebase=<int>)
                     | topk(adaptive, fraction=<float>)
+                    | family(<name>=<sub-policy>, ...)
     envelope      : npz | zstd                 # at most one, always last
+
+    family sub-policies are full | quantized | delta (bare ``<name>`` means
+    full); a per-family envelope token (``embeddings=quantized|zstd``) hoists
+    to the whole-blob envelope. ``|`` and ``,`` split at paren depth 0 only,
+    so sub-specs nest inside ``family(...)`` without escaping.
 
     folder URIs share the stage idea with "+" as the separator:
     uri       := (wrapper "+")* base           # wrapper: cache | shard<G>
@@ -56,6 +62,13 @@ New capabilities shipped on the clean seam:
   * **Adaptive top-k** (``topk(adaptive)``) — scales the shipped ``k`` to
     the measured error-feedback residual norm: bursts of change ship more
     entries, quiet stretches ship fewer.
+  * **Leaf-family subset transport** (``family(adapters=full, ...)``) —
+    exploits model structure the flat path can't see: every push after the
+    anchor ships only the leaves of named *families* (``tree.FAMILY_PATTERNS``
+    path patterns: adapters, embeddings, norms, ...), each under its own
+    sub-policy. LoRA-style adapter federation ships orders of magnitude fewer
+    bytes than a full model; pairs with ``PartialFedAvg(families=...)`` so
+    non-federated leaves stay personal, bit-exact.
 """
 from __future__ import annotations
 
@@ -142,7 +155,7 @@ class _LruCache:
 _STAGE_RE = re.compile(r"^([A-Za-z_][\w]*)\s*(?:\((.*)\))?$", re.DOTALL)
 _SHARD_RE = re.compile(r"^shard(\d+)\+(.+)$", re.DOTALL)
 
-_POLICIES = ("full", "quantized", "delta", "topk")
+_POLICIES = ("full", "quantized", "delta", "topk", "family")
 _ENVELOPES = ("npz", "zstd")
 
 # legacy transport names → pipeline specs (wire output byte-identical)
@@ -155,6 +168,31 @@ LEGACY_TRANSPORTS = {
 }
 
 
+def _split_top(text: str, sep: str) -> list[str]:
+    """Split on ``sep`` at paren depth 0 only — ``family(a=x|zstd)`` is one
+    pipeline stage, and ``family(a=full, b=quantized)`` has two args whose
+    values may themselves carry commas/pipes inside nested parens."""
+    parts: list[str] = []
+    depth = 0
+    cur: list[str] = []
+    for ch in text:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth < 0:
+                raise ValueError(f"unbalanced parentheses in {text!r}")
+        if ch == sep and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if depth != 0:
+        raise ValueError(f"unbalanced parentheses in {text!r}")
+    parts.append("".join(cur))
+    return parts
+
+
 def parse_stage(text: str) -> tuple[str, dict]:
     """``"delta(chain=4,q)"`` → ``("delta", {"chain": "4", "q": True})``."""
     m = _STAGE_RE.match(text.strip())
@@ -164,7 +202,7 @@ def parse_stage(text: str) -> tuple[str, dict]:
     args: dict = {}
     body = m.group(2)
     if body is not None and body.strip():
-        for part in body.split(","):
+        for part in _split_top(body, ","):
             part = part.strip()
             if not part:
                 raise ValueError(f"malformed arguments in stage {text!r}")
@@ -180,7 +218,7 @@ def parse_pipeline_spec(spec: str) -> list[tuple[str, dict]]:
     """Split a pipeline spec into ``(stage name, args)`` tuples."""
     if not isinstance(spec, str) or not spec.strip():
         raise ValueError(f"empty transport spec {spec!r}")
-    return [parse_stage(part) for part in spec.split("|")]
+    return [parse_stage(part) for part in _split_top(spec, "|")]
 
 
 def _int_arg(args: dict, key: str, default: int | None, stage: str) -> int | None:
@@ -230,6 +268,40 @@ def _validate_stages(stages: list[tuple[str, dict]]) -> tuple[tuple[str, dict], 
         if args:
             raise ValueError(f"{name} takes no arguments (got {args})")
         return (name, {}), envelope
+    if name == "family":
+        if not args:
+            raise ValueError(
+                "family(...) needs at least one <name>=<sub-policy> argument")
+        fams: dict[str, str] = {}
+        for fam, sub in args.items():
+            sub_spec = "full" if sub is True else str(sub)
+            try:
+                (sub_name, sub_args), sub_env = _validate_stages(
+                    parse_pipeline_spec(sub_spec))
+            except ValueError as e:
+                raise ValueError(
+                    f"family: bad sub-spec for {fam!r}: {e}") from None
+            if sub_name not in ("full", "quantized", "delta"):
+                raise ValueError(
+                    f"family: {fam!r} sub-policy must be full, quantized or "
+                    f"delta (got {sub_name!r})")
+            if sub_name == "delta" and (sub_args.get("chain", 1) != 1
+                                        or sub_args.get("q")
+                                        or "rebase" in sub_args):
+                raise ValueError(
+                    f"family: {fam!r} takes a bare 'delta' (chain/q/rebase "
+                    "are whole-pipeline knobs, not per-family ones)")
+            if sub_env != "none":
+                # the envelope wraps the whole blob — a per-family envelope
+                # token (``embeddings=quantized|zstd``) hoists up, and every
+                # such token must agree
+                if envelope not in ("none", sub_env):
+                    raise ValueError(
+                        f"family: {fam!r} asks for envelope {sub_env!r} but "
+                        f"the pipeline already carries {envelope!r}")
+                envelope = sub_env
+            fams[fam] = sub_name
+        return ("family", {"families": fams}), envelope
     if name == "delta":
         unknown = set(args) - {"chain", "q", "rebase"}
         if unknown:
@@ -284,6 +356,9 @@ def _canonical(policy: tuple[str, dict], envelope: str) -> str:
             rendered.append("adaptive")
         if args.get("fraction") is not None:
             rendered.append(f"fraction={args['fraction']:g}")
+    elif name == "family":
+        rendered.extend(
+            f"{fam}={sub}" for fam, sub in sorted(args["families"].items()))
     spec = f"{name}({','.join(rendered)})" if rendered else name
     return spec if envelope == "none" else f"{spec}|{envelope}"
 
@@ -307,6 +382,24 @@ def normalize_transport(transport: str | None = None, *, quantized: bool = False
                 f"conflicting compress={compress!r}")
         envelope = compress
     return _canonical(policy, envelope)
+
+
+def family_transport_spec(families, default: str = "full") -> str:
+    """Leaf-family selector → canonical ``family(...)`` spec string. Accepts
+    one family name, a sequence of names (each shipped under ``default``), or
+    a mapping name → sub-policy. The node/store ``families=`` convenience
+    kwargs funnel through here so the selector and the wire spec can never
+    disagree."""
+    if isinstance(families, str):
+        families = (families,)
+    if hasattr(families, "items"):
+        fams = {str(k): str(v) for k, v in families.items()}
+    else:
+        fams = {str(name): default for name in families}
+    if not fams:
+        raise ValueError("family selector needs at least one family name")
+    return normalize_transport(
+        "family(" + ",".join(f"{k}={v}" for k, v in sorted(fams.items())) + ")")
 
 
 def parse_folder_uri(uri: str) -> tuple[list[tuple[str, dict]], str]:
@@ -862,13 +955,109 @@ class TopKCodec(Codec):
         return full, False
 
 
+class FamilyCodec(Codec):
+    """Leaf-family subset transport (LoRA-style adapter federation).
+
+    The writer anchors a content-hashed full base, then every push ships only
+    the leaves of the *selected families* (names resolved through
+    ``tree.FAMILY_PATTERNS`` → path patterns) as an ordinary delta blob
+    against that base — readers reconstruct through the stock delta path and
+    never learn the selection policy. Per-family sub-policies route the wire
+    encoding: ``full`` ships every member entry each push, ``delta`` only the
+    members that changed since the anchor, ``quantized`` ships members
+    int8-quantized per leaf segment.
+
+    Reconstructed NON-family leaves equal the anchor's values — a peer's
+    local-only leaves are intentionally not shipped. Pair this transport with
+    ``PartialFedAvg(families=...)``, which masks them out of aggregation
+    anyway: each node keeps its personal leaves bit-exact. Trees whose leaves
+    don't embed exactly in f32 (int/f64) rebase on every push (lossless, just
+    not sparse)."""
+
+    name = "family"
+
+    def __init__(self, *, families: dict[str, str], **kw):
+        super().__init__(**kw)
+        self.families = dict(families)
+        # node -> (base_hash, spec, base_flat, age)
+        self._state: dict[str, tuple] = {}
+
+    def reset(self) -> None:
+        self._state.clear()
+
+    def _changed_indices(self, view, new_flat: np.ndarray,
+                         base_flat: np.ndarray) -> np.ndarray:
+        segs = []
+        for fam, sub in self.families.items():
+            idx = view.indices_of(fam)
+            if sub == "delta":
+                idx = idx[new_flat[idx] != base_flat[idx]]
+            segs.append(idx)
+        if len(segs) == 1:
+            return segs[0]
+        # families are disjoint (first-match-wins leaf assignment), so a
+        # plain sort of the concatenation is already duplicate-free
+        changed = np.concatenate(segs)
+        changed.sort()
+        return changed
+
+    def encode(self, update: NodeUpdate, ctx: StoreContext) -> tuple[bytes, bool]:
+        node = update.node_id
+        state = self._state.get(node)
+        spec = None
+        if state is not None:
+            spec = state[1]
+            if not spec.describes(update.params):
+                spec, state = None, None
+        if spec is None:
+            spec = LeafSpec.of(update.params)
+        # Resolve the selector against this structure up front: an unknown
+        # family name or one matching no leaf must fail on the first push,
+        # not silently ship nothing.
+        view = spec.family_view(tuple(self.families))
+        if state is not None and state[3] < self.rebase_every and spec.f32_exact:
+            h, _, base_flat, age = state
+            try:
+                new_flat = spec.flatten(update.params)
+            except ValueError:  # shape drift under the same treedef → rebase
+                new_flat = None
+            if new_flat is not None:
+                changed = self._changed_indices(view, new_flat, base_flat)
+                quantize_leaves = frozenset(
+                    i for i, fam in enumerate(view.leaf_names)
+                    if fam is not None and self.families[fam] == "quantized")
+                blob = serialize_update_delta_from_flat(
+                    update, spec, new_flat, base_flat, h,
+                    changed=changed,
+                    density_threshold=self.density_threshold,
+                    compress=self.compress,
+                    quantize_leaves=quantize_leaves,
+                    extra_meta={"families": dict(sorted(self.families.items()))},
+                )
+                if len(blob) < tree_size_bytes(update.params):
+                    ctx.put(f"latest/{node}", blob)
+                    self._state[node] = (h, spec, base_flat, age + 1)
+                    return blob, True
+        full, h = _deposit_base(
+            update, ctx, compress=self.compress,
+            old_hash=state[0] if state is not None else None,
+            old_chain_keys=[], stats=self.stats)
+        if spec.f32_exact:
+            # base_flat is exactly what a reader decodes from the base blob
+            # (f32-exact dtypes guarantee spec.flatten == the wire values)
+            self._state[node] = (h, spec, spec.flatten(update.params), 0)
+        else:
+            self._state[node] = (h, spec, None, self.rebase_every)
+        return full, False
+
+
 # --------------------------------------------------------------------------
 # The pipeline
 # --------------------------------------------------------------------------
 
 
 _CODECS = {"full": FullCodec, "quantized": QuantizedCodec,
-           "delta": DeltaCodec, "topk": TopKCodec}
+           "delta": DeltaCodec, "topk": TopKCodec, "family": FamilyCodec}
 
 
 class TransportPipeline:
@@ -906,6 +1095,8 @@ class TransportPipeline:
             kw["adaptive"] = args["adaptive"]
             if args["fraction"] is not None:
                 kw["topk_fraction"] = args["fraction"]
+        elif name == "family":
+            kw["families"] = args["families"]
         if not 0.0 < kw["topk_fraction"] <= 1.0:
             raise ValueError(
                 f"topk_fraction must be in (0, 1], got {kw['topk_fraction']}")

@@ -15,7 +15,8 @@ into the model's pytree.
 from __future__ import annotations
 
 import hashlib
-from typing import Any, Callable, Sequence
+import re
+from typing import Any, Callable, Mapping, Sequence
 
 import jax
 import numpy as np
@@ -52,6 +53,7 @@ class LeafSpec:
         self.bounds: np.ndarray = offsets  # offsets plus the total, for searchsorted
         self.num_params: int = int(offsets[-1])
         self.index: dict[str, int] = {p: i for i, p in enumerate(self.paths)}
+        self._family_views: dict[tuple, "FamilyView"] = {}
         # True when flatten→unflatten is value-exact (every leaf f32-embeddable)
         self.f32_exact: bool = all(d.name in _F32_EXACT for d in self.dtypes)
         self.key: str = hashlib.sha256(
@@ -125,9 +127,134 @@ class LeafSpec:
     def empty_flat(self) -> np.ndarray:
         return np.empty((self.num_params,), np.float32)
 
+    def family_view(self, families: "str | Sequence[str] | Mapping[str, str]") -> "FamilyView":
+        """Sub-vector view of the named leaf families (cached per selector).
+
+        ``families`` is a registered family name, a sequence of names, or an
+        explicit ``{name: path-regex}`` mapping (see ``FAMILY_PATTERNS``).
+        """
+        resolved = resolve_family_patterns(families)
+        cache_key = tuple(resolved.items())
+        view = self._family_views.get(cache_key)
+        if view is None:
+            view = self._family_views[cache_key] = FamilyView(self, resolved)
+        return view
+
     def __repr__(self) -> str:
         return (f"LeafSpec(leaves={len(self.paths)}, params={self.num_params}, "
                 f"key={self.key})")
+
+
+# --------------------------------------------------------------------------
+# Leaf families: named subsets of a model's leaves, selected by path pattern
+# --------------------------------------------------------------------------
+
+# Registry of well-known families. Patterns match path *segments* of the
+# 'a/b/c' strings a LeafSpec stores; ``register_family`` adds project-specific
+# ones. The names are the vocabulary of the ``family(...)`` transport stage
+# and of PartialFedAvg's ``families=`` selector.
+FAMILY_PATTERNS: dict[str, str] = {
+    "adapters": r"(^|/)(lora_[ab]|adapter[^/]*)(/|$)",
+    "embeddings": r"(^|/)(embed|unembed)(/|$)",
+    "norms": r"(^|/)[a-z_]*norm[0-9]*(/|$)",
+}
+
+
+def register_family(name: str, pattern: str) -> None:
+    """Register (or override) a named leaf family pattern."""
+    re.compile(pattern)  # fail fast on a malformed regex
+    FAMILY_PATTERNS[name] = pattern
+
+
+def resolve_family_patterns(
+    families: str | Sequence[str] | Mapping[str, str],
+) -> dict[str, str]:
+    """Normalize a family selector into an ordered ``{name: pattern}`` dict."""
+    if isinstance(families, str):
+        families = (families,)
+    if isinstance(families, Mapping):
+        return {str(n): str(p) for n, p in families.items()}
+    out: dict[str, str] = {}
+    for name in families:
+        if name not in FAMILY_PATTERNS:
+            raise KeyError(
+                f"unknown leaf family {name!r}; registered: {sorted(FAMILY_PATTERNS)} "
+                "(register_family adds more)")
+        out[name] = FAMILY_PATTERNS[name]
+    return out
+
+
+class FamilyView:
+    """Flat sub-vector view of a LeafSpec restricted to named leaf families.
+
+    A leaf belongs to the first selected family whose pattern matches its
+    path; unmatched leaves are outside the view. The view exposes the flat
+    bool ``mask`` / sorted ``indices`` over the spec's vector, per-family
+    index subsets for codec routing, and ``extract``/``scatter`` as the
+    gather/scatter-back pair. ``pattern`` is the single equivalent regex, so
+    the same selector can drive ``PartialFedAvg(shared_pattern=...)`` and the
+    per-leaf reference oracle.
+    """
+
+    def __init__(self, spec: LeafSpec, patterns: Mapping[str, str]):
+        if not patterns:
+            raise ValueError("family selector is empty")
+        self.spec = spec
+        self.names: tuple[str, ...] = tuple(patterns)
+        compiled = {n: re.compile(p) for n, p in patterns.items()}
+        leaf_names = []
+        for path in spec.paths:
+            fam = next((n for n, rx in compiled.items() if rx.search(path)), None)
+            leaf_names.append(fam)
+        self.leaf_names: tuple[str | None, ...] = tuple(leaf_names)
+        self.leaf_mask: tuple[bool, ...] = tuple(f is not None for f in leaf_names)
+        self.paths: tuple[str, ...] = tuple(
+            p for p, f in zip(spec.paths, leaf_names) if f is not None)
+        mask = np.zeros(spec.num_params, bool)
+        fam_spans: dict[str, list[tuple[int, int]]] = {n: [] for n in self.names}
+        for fam, off, size in zip(leaf_names, spec.offsets, spec.sizes):
+            if fam is not None:
+                mask[off:off + size] = True
+                fam_spans[fam].append((int(off), int(size)))
+        empty = [n for n, spans in fam_spans.items() if not spans]
+        if empty:
+            raise ValueError(
+                f"leaf families {empty} match no leaf of {spec!r}; "
+                f"paths: {list(spec.paths)[:8]}...")
+        self.mask: np.ndarray = mask
+        self.indices: np.ndarray = np.flatnonzero(mask).astype(np.int64)
+        self.num_params: int = int(self.indices.size)
+        self._fam_spans = fam_spans
+        self._fam_indices: dict[str, np.ndarray] = {}
+        self.pattern: str = "|".join(f"(?:{p})" for p in patterns.values())
+        self.key: str = hashlib.sha256(
+            repr((spec.key, tuple(patterns.items()))).encode()).hexdigest()[:16]
+
+    def indices_of(self, name: str) -> np.ndarray:
+        """Sorted flat indices of one family's parameters."""
+        idx = self._fam_indices.get(name)
+        if idx is None:
+            spans = self._fam_spans[name]
+            idx = (np.concatenate([np.arange(o, o + s, dtype=np.int64) for o, s in spans])
+                   if spans else np.zeros((0,), np.int64))
+            idx.sort()
+            self._fam_indices[name] = idx
+        return idx
+
+    def extract(self, flat: np.ndarray) -> np.ndarray:
+        """Gather the view's sub-vector out of a full flat vector (copy)."""
+        return np.asarray(flat)[self.indices]
+
+    def scatter(self, sub: np.ndarray, out: np.ndarray) -> np.ndarray:
+        """Scatter a sub-vector back into a full flat vector, in place."""
+        if sub.shape != (self.num_params,):
+            raise ValueError(f"sub shape {sub.shape} vs ({self.num_params},)")
+        out[self.indices] = sub
+        return out
+
+    def __repr__(self) -> str:
+        return (f"FamilyView({'+'.join(self.names)}, leaves={len(self.paths)}, "
+                f"params={self.num_params}/{self.spec.num_params})")
 
 
 def tree_zeros_like(tree: PyTree) -> PyTree:

@@ -42,12 +42,14 @@ def lm_batch_iterator(
 ) -> Iterator[dict]:
     """Random contiguous windows; targets are inputs shifted by one."""
     n = tokens.shape[0] - seq_len - 1
-    if n <= 0:
+    if n < 0:
         raise ValueError(f"token stream too short: {tokens.shape[0]} for seq_len {seq_len}")
     rng = np.random.default_rng(seed * 100003 + epoch + 17)
     num_batches = max(1, n // (batch_size * seq_len))
     for _ in range(num_batches):
-        starts = rng.integers(0, n, size=batch_size)
+        # valid window starts are 0..n inclusive: start n reads tokens[n:n+S]
+        # with labels tokens[n+1:n+S+1] ending on the final token
+        starts = rng.integers(0, n + 1, size=batch_size)
         xs = np.stack([tokens[s : s + seq_len] for s in starts])
         ys = np.stack([tokens[s + 1 : s + seq_len + 1] for s in starts])
         yield {"tokens": xs.astype(np.int32), "labels": ys.astype(np.int32)}

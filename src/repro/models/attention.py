@@ -138,6 +138,12 @@ def init_attention(rng, cfg: ModelConfig) -> dict:
         "wv": dense_init(k3, cfg.d_model, cfg.n_kv_heads * hd, dt),
         "wo": dense_init(k4, cfg.n_heads * hd, cfg.d_model, dt),
     }
+    if cfg.lora_rank:
+        # LoRA adapter on the q projection: B starts at zero so the adapter
+        # is initially a no-op (standard LoRA init).
+        ka = jax.random.fold_in(k1, 1)
+        p["lora_a"] = dense_init(ka, cfg.d_model, cfg.lora_rank, dt)
+        p["lora_b"] = {"w": jnp.zeros((cfg.lora_rank, cfg.n_heads * hd), dt)}
     if cfg.qk_norm:
         p["q_norm"] = rmsnorm_init(hd, dt)
         p["k_norm"] = rmsnorm_init(hd, dt)
@@ -147,7 +153,10 @@ def init_attention(rng, cfg: ModelConfig) -> dict:
 def _project_qkv(p: dict, cfg: ModelConfig, x: jnp.ndarray, positions: jnp.ndarray):
     B, S, _ = x.shape
     hd = cfg.head_dim_
-    q = dense_apply(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    q_flat = dense_apply(p["wq"], x)
+    if "lora_a" in p:
+        q_flat = q_flat + dense_apply(p["lora_b"], dense_apply(p["lora_a"], x))
+    q = q_flat.reshape(B, S, cfg.n_heads, hd)
     k = dense_apply(p["wk"], x).reshape(B, S, cfg.n_kv_heads, hd)
     v = dense_apply(p["wv"], x).reshape(B, S, cfg.n_kv_heads, hd)
     if cfg.qk_norm:

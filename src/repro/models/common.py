@@ -35,6 +35,8 @@ class ModelConfig:
 
     # attention features
     attention: str = "gqa"     # gqa | mla | none
+    lora_rank: int = 0         # >0 → LoRA adapter on the q projection
+                               # (adapter-only federation ships just these)
     qk_norm: bool = False
     rope_theta: float = 10_000.0
     sliding_window: int = 0    # 0 → full causal; >0 → local attention window

@@ -80,13 +80,23 @@ class Trainer:
 
     def set_params(self, params: PyTree) -> None:
         # Preserve leaf dtypes of the live params (store may hold f32 numpy).
-        self.params = jax.tree.map(
-            lambda old, new: jnp.asarray(new, dtype=old.dtype), self.params, params
-        )
+        # Host-numpy leaves stay numpy: jnp.asarray would canonicalize
+        # int64/float64 to 32-bit under the default jax config, silently
+        # corrupting non-federated personal leaves that must round-trip
+        # bit-exact (PartialFedAvg's exact-dtype passthrough).
+        def _cast(old, new):
+            if isinstance(old, (np.ndarray, np.generic)):
+                return np.asarray(new, dtype=np.asarray(old).dtype)
+            return jnp.asarray(new, dtype=old.dtype)
+
+        self.params = jax.tree.map(_cast, self.params, params)
 
     # -- core loop ------------------------------------------------------------
     def run_epoch(self, batches: Iterable, steps: int | None = None) -> dict:
-        metrics_acc: dict[str, float] = {}
+        # Metric values stay on device for the whole epoch: a per-step
+        # float(v) would block on each step's result and serialize JAX's
+        # async dispatch. One device_get at the end pays one sync.
+        step_metrics: list[dict] = []
         count = 0
         for i, batch in enumerate(batches):
             if steps is not None and i >= steps:
@@ -99,6 +109,9 @@ class Trainer:
                 time.sleep(self.slowdown)
             self.step += 1
             count += 1
+            step_metrics.append(metrics)
+        metrics_acc: dict[str, float] = {}
+        for metrics in jax.device_get(step_metrics):
             for k, v in metrics.items():
                 metrics_acc[k] = metrics_acc.get(k, 0.0) + float(v)
         return {k: v / max(1, count) for k, v in metrics_acc.items()}
@@ -121,22 +134,26 @@ class Trainer:
         """
         for cb in callbacks:
             cb.on_train_begin(self)
-        for epoch in range(epochs):
-            if crash_at_epoch is not None and epoch >= crash_at_epoch:
-                self.crashed = True
-                raise RuntimeError(f"{self.name}: injected crash at epoch {epoch}")
+        try:
+            for epoch in range(epochs):
+                if crash_at_epoch is not None and epoch >= crash_at_epoch:
+                    self.crashed = True
+                    raise RuntimeError(f"{self.name}: injected crash at epoch {epoch}")
+                for cb in callbacks:
+                    cb.on_epoch_begin(self, epoch)
+                batches = data_fn(epoch) if callable(data_fn) else data_fn
+                logs = self.run_epoch(batches, steps_per_epoch)
+                if self.eval_fn is not None:
+                    logs.update(self.eval_fn(self.params, None))
+                logs["epoch"] = epoch
+                self.log.append(logs)
+                if verbose:
+                    print(f"[{self.name}] epoch {epoch}: " + ", ".join(f"{k}={v:.4f}" for k, v in logs.items() if isinstance(v, float)))
+                for cb in callbacks:
+                    cb.on_epoch_end(self, epoch, logs)
+        finally:
+            # Teardown even on an injected crash: a FederatedCallback must
+            # get the chance to stop its node's prefetcher thread.
             for cb in callbacks:
-                cb.on_epoch_begin(self, epoch)
-            batches = data_fn(epoch) if callable(data_fn) else data_fn
-            logs = self.run_epoch(batches, steps_per_epoch)
-            if self.eval_fn is not None:
-                logs.update(self.eval_fn(self.params, None))
-            logs["epoch"] = epoch
-            self.log.append(logs)
-            if verbose:
-                print(f"[{self.name}] epoch {epoch}: " + ", ".join(f"{k}={v:.4f}" for k, v in logs.items() if isinstance(v, float)))
-            for cb in callbacks:
-                cb.on_epoch_end(self, epoch, logs)
-        for cb in callbacks:
-            cb.on_train_end(self)
+                cb.on_train_end(self)
         return self.log

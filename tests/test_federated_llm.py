@@ -1,0 +1,410 @@
+"""Federated LLM scenario: the model zoo wired into the federation core.
+
+Covers the leaf-family subset machinery end to end — `LeafSpec.family_view`,
+the `family(...)` transport stage, `PartialFedAvg(families=...)` — plus the
+tier-1 headline: ≥2 async nodes training a smoke transformer (with LoRA
+adapters) through a real delta-chain ``WeightStore``, and adapter-only
+federation leaving every non-federated leaf bit-exact.
+
+The property oracle is ``strategies_ref.PartialFedAvgRef`` driven by
+``FamilyView.pattern`` — the single regex equivalent of the family selector,
+so flat-masked family aggregation is checked against the frozen per-leaf
+reference.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from _hyp import given, settings, strategies
+
+from repro.core import (
+    AsyncFederatedNode,
+    FederatedCallback,
+    InMemoryFolder,
+    NodeUpdate,
+    WeightStore,
+    family_transport_spec,
+    normalize_transport,
+    run_threaded,
+)
+from repro.core.partition import partition_sequence_dataset
+from repro.core.strategies import FedAvg, PartialFedAvg
+from repro.core.strategies_ref import PartialFedAvgRef
+from repro.core.tree import LeafSpec, tree_to_numpy
+from repro.data import lm_batch_iterator, make_synthetic_wikitext
+from repro.models import ModelConfig, build_model
+from repro.optim import adamw, chain_clip
+from repro.training import Trainer
+
+TINY = ModelConfig(
+    name="tiny-lm", n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+    vocab_size=512, activation="gelu", dtype="float32", lora_rank=4,
+)
+SEQ, BATCH = 16, 2
+
+
+def _tiny_params(seed=0):
+    model = build_model(TINY)
+    return model, tree_to_numpy(model.init(jax.random.PRNGKey(seed)))
+
+
+# --- the headline tier-1 scenario -------------------------------------------
+
+
+def test_async_nodes_train_llm_through_delta_chain_store():
+    """≥2 async nodes train the smoke transformer on non-IID shards through a
+    real WeightStore with a delta-chain pipeline spec."""
+    model, init = _tiny_params()
+    data = make_synthetic_wikitext(vocab_size=TINY.vocab_size, train_tokens=4_000, seed=0)
+    shards = partition_sequence_dataset(data.train_tokens, 2)
+    folder = InMemoryFolder()
+
+    def client(i):
+        trainer = Trainer(
+            loss_fn=lambda p, b, r: model.loss(p, b),
+            optimizer=chain_clip(adamw(1e-3), 1.0),
+            init_params=init, seed=i, name=f"node{i}",
+        )
+        node = AsyncFederatedNode(strategy=FedAvg(), shared_folder=folder,
+                                  node_id=f"node{i}", transport="delta(chain=4)")
+        cb = FederatedCallback(node, num_examples_per_epoch=2 * BATCH)
+        trainer.fit(lambda e: lm_batch_iterator(shards[i], batch_size=BATCH,
+                                                seq_len=SEQ, seed=i, epoch=e),
+                    epochs=3, steps_per_epoch=2, callbacks=[cb])
+        # async nodes never wait for each other, so a fast node may finish its
+        # epochs before its peer deposits anything; keep federating until this
+        # node has aggregated at least once (deterministic, not timing luck)
+        deadline = time.monotonic() + 60.0
+        while node.num_aggregations == 0 and time.monotonic() < deadline:
+            node.update_parameters(trainer.host_params(), num_examples=BATCH)
+            time.sleep(0.02)
+        return {"loss": trainer.log[-1]["loss"], "aggs": node.num_aggregations,
+                "stats": node.transport_stats()}
+
+    results = run_threaded([lambda i=i: client(i) for i in range(2)])
+    assert all(r.error is None for r in results), [r.traceback for r in results]
+    # federation actually happened through the store, in both directions
+    assert all(r.result["aggs"] >= 1 for r in results)
+    for r in results:
+        assert np.isfinite(r.result["loss"])
+        assert r.result["stats"]["bytes_written"] > 0
+        assert r.result["stats"]["bytes_read"] > 0
+
+
+def test_adapter_only_federation_semantics():
+    """families=('adapters',) on the node federates exactly the LoRA leaves:
+    adapter leaves average across nodes, every other leaf stays the node's
+    own, bit-exact."""
+    model, p_a = _tiny_params(seed=0)
+    p_b = jax.tree.map(lambda x: x + np.float32(0.01), p_a)
+    p_b = tree_to_numpy(p_b)
+    folder = InMemoryFolder()
+    node_a = AsyncFederatedNode(shared_folder=folder, node_id="a",
+                                families=("adapters",))
+    node_b = AsyncFederatedNode(shared_folder=folder, node_id="b",
+                                families=("adapters",))
+    assert isinstance(node_a.strategy, PartialFedAvg)
+    assert folder is node_a.store.folder
+
+    assert node_a.update_parameters(p_a, num_examples=1) is None  # no peers yet
+    agg = node_b.update_parameters(p_b, num_examples=1)
+    assert agg is not None
+
+    spec = LeafSpec.of(p_b)
+    view = spec.family_view(("adapters",))
+    assert view.num_params > 0
+    agg_leaves = jax.tree.leaves(tree_to_numpy(agg))
+    a_leaves, b_leaves = jax.tree.leaves(p_a), jax.tree.leaves(p_b)
+    for fam, out, la, lb, path in zip(view.leaf_names, agg_leaves, a_leaves,
+                                      b_leaves, spec.paths):
+        if fam == "adapters":
+            np.testing.assert_allclose(out, (la + lb) / 2, rtol=1e-5, atol=1e-6,
+                                       err_msg=path)
+        else:
+            assert np.array_equal(out, lb), f"non-federated leaf drifted: {path}"
+
+
+def test_adapter_only_wire_is_smaller_than_full():
+    """After the anchor round, family(adapters=full) pushes ship a small
+    fraction of the full-model bytes."""
+    model, p = _tiny_params()
+    folder = InMemoryFolder()
+    store = WeightStore(folder, families=("adapters",))
+    store.push(NodeUpdate(p, num_examples=1, node_id="n", counter=0))
+    anchor_bytes = store.transport_stats()["bytes_written"]
+    p2 = jax.tree.map(lambda x: x + np.float32(1e-3), p)
+    store.push(NodeUpdate(tree_to_numpy(p2), num_examples=1, node_id="n", counter=1))
+    family_bytes = store.transport_stats()["bytes_written"] - anchor_bytes
+    spec = LeafSpec.of(p)
+    frac = spec.family_view(("adapters",)).num_params / spec.num_params
+    assert family_bytes < anchor_bytes * max(0.2, 4 * frac)
+    # and a vanilla reader decodes the family blob with zero configuration
+    update = WeightStore(folder).pull_node("n")
+    view = spec.family_view(("adapters",))
+    got = spec.flatten(update.params)
+    np.testing.assert_allclose(got[view.indices],
+                               spec.flatten(p2)[view.indices], rtol=1e-6)
+
+
+# --- FamilyView on the real model -------------------------------------------
+
+
+def test_family_view_selects_lora_leaves():
+    model, p = _tiny_params()
+    spec = LeafSpec.of(p)
+    view = spec.family_view(("adapters",))
+    assert view.paths and all("lora_" in path for path in view.paths)
+    # both A and B matrices (layers are scan-stacked: one leaf, leading dim L)
+    assert sum("lora_a" in path for path in view.paths) == 1
+    assert sum("lora_b" in path for path in view.paths) == 1
+    assert view.num_params == TINY.n_layers * (
+        TINY.d_model * TINY.lora_rank + TINY.lora_rank * TINY.d_model)
+    # extract/scatter are a gather/scatter-back pair
+    flat = spec.flatten(p)
+    sub = view.extract(flat)
+    out = np.zeros_like(flat)
+    view.scatter(sub, out)
+    assert np.array_equal(out[view.indices], flat[view.indices])
+    assert not out[~view.mask].any()
+    # per-family indices partition the view
+    np.testing.assert_array_equal(view.indices_of("adapters"), view.indices)
+
+
+def test_family_view_errors():
+    model, p = _tiny_params()
+    spec = LeafSpec.of(p)
+    with pytest.raises(KeyError, match="unknown leaf family"):
+        spec.family_view(("no_such_family",))
+    no_lora = build_model(TINY.replace(lora_rank=0))
+    spec2 = LeafSpec.of(tree_to_numpy(no_lora.init(jax.random.PRNGKey(0))))
+    with pytest.raises(ValueError, match="match no leaf"):
+        spec2.family_view(("adapters",))
+
+
+def test_lora_changes_forward_pass():
+    """The adapters the federation ships are live weights, not dead params:
+    perturbing lora_b changes the model's loss."""
+    model, p = _tiny_params()
+    # varying tokens: with a constant sequence every value vector is equal and
+    # the attention output is q-independent, hiding the adapters entirely
+    batch = {"tokens": np.arange(8, dtype=np.int32)[None, :],
+             "labels": np.arange(1, 9, dtype=np.int32)[None, :]}
+    loss0, _ = model.loss(p, batch)
+    spec = LeafSpec.of(p)
+    flat = spec.flatten(p)
+    view = spec.family_view(("adapters",))
+    flat[view.indices] += 0.5  # lora_b leaves zero-init → this activates them
+    loss1, _ = model.loss(spec.unflatten(flat), batch)
+    assert not np.allclose(float(loss0), float(loss1))
+
+
+# --- family transport grammar ------------------------------------------------
+
+
+def test_family_spec_grammar_canonicalization():
+    assert normalize_transport("family(adapters)") == "family(adapters=full)"
+    assert (normalize_transport("family(embeddings=quantized|zstd, adapters=full)")
+            == "family(adapters=full,embeddings=quantized)|zstd")
+    assert (normalize_transport("family(adapters=delta)|npz")
+            == "family(adapters=delta)|npz")
+    assert family_transport_spec("adapters") == "family(adapters=full)"
+    assert (family_transport_spec(("norms", "adapters"))
+            == "family(adapters=full,norms=full)")
+    assert (family_transport_spec({"embeddings": "quantized", "adapters": "full"})
+            == "family(adapters=full,embeddings=quantized)")
+
+
+def test_family_spec_grammar_rejects_bad_specs():
+    with pytest.raises(ValueError):
+        normalize_transport("family()")
+    with pytest.raises(ValueError, match="sub-policy"):
+        normalize_transport("family(adapters=topk)")
+    with pytest.raises(ValueError, match="whole-pipeline"):
+        normalize_transport("family(adapters=delta(chain=2))")
+    with pytest.raises(ValueError, match="envelope"):
+        normalize_transport("family(adapters=full|zstd,norms=full|npz)")
+    with pytest.raises(ValueError):
+        family_transport_spec(())
+    with pytest.raises(ValueError, match="not both"):
+        WeightStore(InMemoryFolder(), transport="delta", families=("adapters",))
+
+
+# --- family-subset ≡ masked PartialFedAvg (frozen per-leaf oracle) -----------
+
+
+_FAMILY_CHOICES = [("adapters",), ("norms",), ("embeddings",),
+                   ("adapters", "norms"), ("adapters", "embeddings", "norms")]
+
+
+def _property_tree(rng):
+    """A small LM-shaped tree exercising every family plus unmatched leaves
+    (including a non-f32 leaf no family touches)."""
+    f = lambda *s: rng.normal(size=s).astype(np.float32)
+    return {
+        "embed": {"w": f(12, 4)},
+        "blocks": {
+            "u0": {"attn": {"wq": {"w": f(4, 4)}, "lora_a": {"w": f(4, 2)},
+                            "lora_b": {"w": f(2, 4)}},
+                   "norm1": {"scale": f(4)}},
+            "u1": {"mlp": {"w": f(4, 8)}, "norm2": {"scale": f(4)}},
+        },
+        "unembed": {"w": f(4, 12)},
+        "step": np.int64(rng.integers(0, 100)),
+    }
+
+
+@settings(max_examples=15, deadline=None)
+@given(strategies.integers(0, 2**31 - 1),
+       strategies.sampled_from(_FAMILY_CHOICES),
+       strategies.integers(1, 4))
+def test_family_subset_matches_masked_oracle(seed, families, n_peers):
+    rng = np.random.default_rng(seed)
+    own = NodeUpdate(_property_tree(rng), num_examples=int(rng.integers(1, 9)),
+                     node_id="own", counter=0)
+    peers = [NodeUpdate(_property_tree(rng), num_examples=int(rng.integers(1, 9)),
+                        node_id=f"p{i}", counter=0) for i in range(n_peers)]
+    view = LeafSpec.of(own.params).family_view(families)
+    ours = PartialFedAvg(families=families).aggregate(own, peers)
+    oracle = PartialFedAvgRef(shared_pattern=view.pattern).aggregate(own, peers)
+    ours_l, oracle_l = jax.tree.leaves(ours), jax.tree.leaves(oracle)
+    own_l = jax.tree.leaves(own.params)
+    for fam, a, b, o in zip(view.leaf_names, ours_l, oracle_l, own_l):
+        if fam is None:
+            # personal leaves are identical to own in BOTH paths, bit-exact —
+            # including the int64 'step' leaf that makes the tree non-f32_exact
+            assert np.array_equal(np.asarray(a), np.asarray(o))
+            assert np.asarray(a).dtype == np.asarray(o).dtype
+        np.testing.assert_allclose(np.asarray(a, np.float64),
+                                   np.asarray(b, np.float64), rtol=1e-5, atol=1e-5)
+
+
+# --- non-federated leaves: bit-exact through the whole loop ------------------
+
+
+def test_nonfederated_leaves_bitexact_through_push_pull_set_params():
+    """int / f64 leaves outside the family survive push → pull →
+    PartialFedAvg → Trainer.set_params without any value or dtype drift."""
+    rng = np.random.default_rng(0)
+    tree = {
+        "attn": {"lora_a": {"w": rng.normal(size=(8, 2)).astype(np.float32)}},
+        "head": {"w": rng.normal(size=(16,)).astype(np.float32)},
+        "vocab_freq": (rng.integers(0, 1 << 40, size=(6,))).astype(np.int64),
+        "threshold": np.float64(0.1234567890123456789),  # not f32-representable
+    }
+    folder = InMemoryFolder()
+    WeightStore(folder, families=("adapters",)).push(
+        NodeUpdate(tree, num_examples=1, node_id="n", counter=0))
+    pulled = WeightStore(folder).pull_node("n")
+    # mixed-dtype trees are not f32-embeddable → the codec ships exact blobs
+    assert np.array_equal(pulled.params["vocab_freq"], tree["vocab_freq"])
+    assert pulled.params["vocab_freq"].dtype == np.int64
+    assert float(pulled.params["threshold"]) == float(tree["threshold"])
+
+    peer = NodeUpdate(jax.tree.map(np.copy, tree), num_examples=1,
+                      node_id="peer", counter=0)
+    agg = PartialFedAvg(families=("adapters",)).aggregate(pulled, [peer])
+    assert np.array_equal(agg["vocab_freq"], tree["vocab_freq"])
+    assert agg["vocab_freq"].dtype == np.int64
+
+    trainer = Trainer(loss_fn=lambda p, b, r: (p["head"]["w"].sum(), {}),
+                      optimizer=adamw(1e-3), init_params=tree, jit=False)
+    trainer.set_params(agg)
+    got = jax.tree.leaves(trainer.params)
+    for want, have in zip(jax.tree.leaves(tree), got):
+        assert np.asarray(want).dtype == np.asarray(have).dtype
+    assert np.array_equal(np.asarray(trainer.params["vocab_freq"]),
+                          tree["vocab_freq"])
+
+
+# --- satellite regressions ----------------------------------------------------
+
+
+def test_lm_batch_iterator_reaches_last_window():
+    """Regression: the start-index bound excluded the final window (the only
+    one whose labels reach the stream's last token)."""
+    tokens = np.arange(20, dtype=np.int32)  # seq_len 16 → starts 0..3 valid
+    starts_seen = set()
+    for seed in range(40):
+        batch = next(iter(lm_batch_iterator(tokens, batch_size=8, seq_len=16,
+                                            seed=seed)))
+        starts_seen.update(int(row[0]) for row in batch["tokens"])
+        assert all(row[-1] == row[0] + 15 for row in batch["tokens"])
+    assert 3 in starts_seen  # rng.integers(0, n) could never draw start n=3
+    # exact-minimum stream: exactly one valid window, labels end on last token
+    tokens = np.arange(17, dtype=np.int32)
+    batch = next(iter(lm_batch_iterator(tokens, batch_size=4, seq_len=16, seed=0)))
+    assert np.array_equal(batch["tokens"][0], np.arange(16))
+    assert batch["labels"][0][-1] == 16
+    with pytest.raises(ValueError, match="too short"):
+        next(iter(lm_batch_iterator(np.arange(16, dtype=np.int32),
+                                    batch_size=1, seq_len=16)))
+
+
+def test_run_epoch_defers_metric_host_sync_to_epoch_end():
+    """Regression: per-step float(v) blocked on every step's result. Metric
+    leaves must be materialized only after the last step has been issued."""
+    issued = {"n": 0}
+    conversions = []
+
+    class Probe:
+        def __array__(self, dtype=None, copy=None):
+            conversions.append(issued["n"])
+            return np.float32(1.0)
+
+        def __float__(self):
+            conversions.append(issued["n"])
+            return 1.0
+
+    trainer = Trainer(loss_fn=lambda p, b, r: (p["w"].sum(), {}),
+                      optimizer=adamw(1e-3),
+                      init_params={"w": np.zeros((2,), np.float32)}, jit=False)
+
+    def fake_step(params, opt_state, batch, rng):
+        issued["n"] += 1
+        return params, opt_state, {"loss": Probe()}
+
+    trainer._train_step = fake_step
+    logs = trainer.run_epoch([None] * 5)
+    assert issued["n"] == 5
+    assert logs["loss"] == pytest.approx(1.0)
+    assert conversions and all(c == 5 for c in conversions), (
+        f"metric materialized mid-epoch at steps {sorted(set(conversions))}")
+
+
+def test_crashed_fit_still_runs_teardown():
+    """fit(crash_at_epoch=...) raises but on_train_end still fires (the
+    prefetcher-leak guard lives on that hook)."""
+    calls = []
+
+    class Cb:
+        def on_train_begin(self, t): calls.append("begin")
+        def on_epoch_begin(self, t, e): pass
+        def on_epoch_end(self, t, e, logs): calls.append(f"epoch{e}")
+        def on_train_end(self, t): calls.append("end")
+
+    trainer = Trainer(loss_fn=lambda p, b, r: (p["w"].sum(), {}),
+                      optimizer=adamw(1e-3),
+                      init_params={"w": np.zeros((2,), np.float32)}, jit=False)
+    with pytest.raises(RuntimeError, match="injected crash"):
+        trainer.fit(lambda e: [None], epochs=4, callbacks=[Cb()], crash_at_epoch=1)
+    assert calls == ["begin", "epoch0", "end"]
+
+
+def test_crashed_fit_does_not_leak_prefetcher_thread():
+    """The FederatedCallback + try/finally pair: an injected crash must stop
+    the store's background prefetcher."""
+    node = AsyncFederatedNode(strategy=FedAvg(), shared_folder=InMemoryFolder(),
+                              node_id="leaky", prefetch_interval=0.01)
+    cb = FederatedCallback(node, num_examples_per_epoch=1)
+    trainer = Trainer(loss_fn=lambda p, b, r: (p["w"].sum(), {}),
+                      optimizer=adamw(1e-3),
+                      init_params={"w": np.zeros((2,), np.float32)}, jit=False)
+    assert any(t.name == "weightstore-prefetch" and t.is_alive()
+               for t in threading.enumerate())
+    with pytest.raises(RuntimeError, match="injected crash"):
+        trainer.fit(lambda e: [None], epochs=5, callbacks=[cb], crash_at_epoch=1)
+    assert not any(t.name == "weightstore-prefetch" and t.is_alive()
+                   for t in threading.enumerate())
