@@ -18,7 +18,8 @@ import os
 
 from ._schema import numeric_metrics
 
-DEFAULT_NAMES = ("BENCH_agg.json", "BENCH_transport.json", "BENCH_soak.json")
+DEFAULT_NAMES = ("BENCH_agg.json", "BENCH_transport.json", "BENCH_soak.json",
+                 "BENCH_llm.json", "BENCH_obs.json")
 
 
 def load(path: str) -> dict | None:

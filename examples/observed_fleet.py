@@ -1,0 +1,98 @@
+"""An observed fleet — the serverless telemetry plane, end to end.
+
+Serverless federation has no coordinator to scrape, so the telemetry rides
+the same store as the weights: each node keeps a lightweight flight recorder
+(``Telemetry`` — monotonic-clock spans over pull/decode/aggregate/encode/
+push/train, staleness distributions, transport byte counters) and
+periodically deposits a snapshot as an ``obs/<node>/<seq>`` blob. The blobs
+are excluded from every federation ``state_hash`` (like the ``fleet/``
+control plane), survive delta-transport GC, and any host that can see the
+mount becomes a dashboard::
+
+    PYTHONPATH=src python examples/observed_fleet.py
+    PYTHONPATH=src python examples/observed_fleet.py --store /tmp/obs_demo
+
+    # meanwhile, from ANY terminal/host that sees the store (or after):
+    PYTHONPATH=src python -m repro.obs watch --store /tmp/obs_demo --once
+    PYTHONPATH=src python -m repro.obs trace --store /tmp/obs_demo --out trace.json
+    # open trace.json at https://ui.perfetto.dev — every node's round
+    # phases on one timeline, wall-clock aligned across nodes.
+
+Three ways to switch telemetry on (default is OFF, and the disabled path is
+a shared no-op context manager — nanoseconds per call):
+
+1. per node: ``AsyncFederatedNode(..., telemetry=True)`` or pass a
+   configured ``Telemetry(flush_every=5, obs_keep=16)`` instance;
+2. fleet-wide: ``repro.fleet`` soak clients always deposit telemetry, and
+   ``SoakReport.summary()`` folds the rollups in;
+3. environment: ``REPRO_OBS=1`` flips the default for every node in the
+   process (handy for scripts you can't edit).
+
+Debug logging is a separate knob: ``REPRO_LOG=debug`` (or
+``REPRO_LOG=debug:fleet`` for one subtree) attaches a stderr handler to the
+``repro.*`` logger hierarchy, which is silent by default.
+"""
+import argparse
+import functools
+import tempfile
+
+import numpy as np
+
+from repro.core import AsyncFederatedNode, Telemetry, make_folder, run_threaded
+from repro.core.telemetry import collect_obs, telemetry_rollups
+from repro.obs import render_dashboard
+
+
+def client(node_id: str, store_uri: str, rounds: int, size: int, seed: int):
+    rng = np.random.default_rng(seed)
+    node = AsyncFederatedNode(
+        shared_folder=make_folder(store_uri),
+        node_id=node_id,
+        transport="delta",
+        # flush_every=1: deposit an obs/ snapshot after every round so even
+        # short demo runs produce a trace; real soaks use a larger cadence.
+        telemetry=Telemetry(enabled=True, flush_every=1),
+    )
+    params = {"w": rng.standard_normal(size).astype(np.float32)}
+    for _ in range(rounds):
+        params = {"w": params["w"] + rng.normal(scale=0.01, size=size).astype(np.float32)}
+        merged = node.update_parameters(params, num_examples=1)
+        if merged is not None:
+            params = merged
+    return node.counter
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--store", default=None,
+                    help="shared folder URI (default: fresh temp dir); "
+                         "cache+/shard<G>+ wrappers compose")
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--size", type=int, default=50_000)
+    args = ap.parse_args(argv)
+
+    store = args.store or tempfile.mkdtemp(prefix="observed_fleet_")
+    print(f"federating {args.nodes} nodes x {args.rounds} rounds over {store!r}\n")
+    run_threaded([
+        functools.partial(client, f"n{i}", store, args.rounds, args.size, i)
+        for i in range(args.nodes)
+    ], names=[f"n{i}" for i in range(args.nodes)])
+
+    # The dashboard is just a store reader — same thing `repro.obs watch`
+    # renders, assembled from the obs/ blobs alone:
+    obs = collect_obs(store)
+    render_dashboard(obs)
+
+    rollups = telemetry_rollups(obs)
+    fleet = rollups["fleet"]
+    print(f"\nfleet rollup: {fleet['nodes_reporting']} nodes, "
+          f"{fleet['rounds_total']} rounds, "
+          f"staleness mean {fleet['staleness_mean']:.2f}, "
+          f"{fleet['bytes_written'] / 1e6:.2f}MB written")
+    print(f"\nnext: PYTHONPATH=src python -m repro.obs trace --store {store} "
+          "--out trace.json   # then open it at https://ui.perfetto.dev")
+
+
+if __name__ == "__main__":
+    main()

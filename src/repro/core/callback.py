@@ -10,6 +10,7 @@ federation is one line added to an existing training script.
 """
 from __future__ import annotations
 
+from collections import deque
 from typing import Any
 
 from .node import AsyncFederatedNode, SyncFederatedNode
@@ -39,12 +40,15 @@ class FederatedCallback(Callback):
         num_examples_per_epoch: int,
         federate_every: int = 1,
         sample_prob: float = 1.0,
+        history_limit: int | None = 10_000,
     ):
         self.node = node
         self.num_examples_per_epoch = num_examples_per_epoch
         self.federate_every = federate_every  # paper limitation #4: frequency knob
         self.sample_prob = sample_prob  # Algorithm 1's C: client sampling prob
-        self.history: list[dict[str, Any]] = []
+        # Bounded: a million-epoch soak must not grow memory linearly. The
+        # deque keeps the most recent entries; None means unbounded (legacy).
+        self.history: "deque[dict[str, Any]]" = deque(maxlen=history_limit)
 
     def on_epoch_end(self, trainer, epoch: int, logs: dict[str, Any]) -> None:
         if (epoch + 1) % self.federate_every != 0:

@@ -53,12 +53,17 @@ from typing import Any, Callable
 
 import numpy as np
 
+from repro.logs import get_logger
+
 from .node import AsyncFederatedNode
 from .serialize import deserialize_fleet_blob, serialize_fleet_blob
 from .simulation import ProcessSupervisor
 from .store import SharedFolder, WeightStore, make_folder
 from .strategies import STRATEGIES, get_strategy
+from .telemetry import Telemetry, collect_obs, telemetry_rollups
 from .transport import normalize_transport, parse_folder_uri
+
+_log = get_logger("fleet")
 
 FLEET_PREFIX = "fleet/"
 SPEC_KEY = "fleet/spec"
@@ -352,18 +357,26 @@ def _soak_client(spec_dict: dict, slot: int, *, park_after_pushes: int | None = 
     data = make_folder(spec.store_uri)
     t0 = time.time()
     state: dict[str, Any] = {"first_push": None}
+    # Every soak node runs instrumented: the node flushes an obs/ snapshot
+    # each round (flush_every=1 — soak rounds are few and blobs tiny), which
+    # is what SoakReport's telemetry rollups and `repro.obs` read back.
+    tel = Telemetry(node_id, enabled=True, flush_every=1)
 
     def on_step(node, _aggregated) -> None:
         if state["first_push"] is None:
             state["first_push"] = time.time()
+        # heartbeats are thin telemetry deposits: liveness plus the brief
+        # rollup (round count, staleness, phase means)
         _heartbeat(control, node_id, {
             "node_id": node_id, "slot": slot, "counter": node.counter,
             "pushes": node.num_pushes, "status": "running",
-            "resumed": node.resumed is not None, "time": time.time()})
+            "resumed": node.resumed is not None, "time": time.time(),
+            "obs": tel.brief()})
 
     node = AsyncFederatedNode(
         strategy=get_strategy(spec.strategy), shared_folder=data,
-        node_id=node_id, transport=spec.transport, on_step=on_step)
+        node_id=node_id, transport=spec.transport, on_step=on_step,
+        telemetry=tel)
     resumed = node.resumed is not None
     start_counter = node.counter
     if resumed:
@@ -485,11 +498,16 @@ def run_worker(store_uri: str | None = None, *, spec: FleetSpec | None = None,
         timeout = default_worker_timeout(spec)
     t0 = time.time()
     slots = claim_slots(control, spec, worker_id, max_slots=max_slots)
+    _log.info("worker %s: claimed slots %s of fleet %r (%s runner)",
+              worker_id, slots, spec.name, spec.runner)
     schedule = chaos_schedule(spec)
     runner = _run_slots_threaded if spec.runner == "thread" else _run_slots_processes
     report = runner(control, spec, worker_id, slots, schedule, timeout)
     # Global quiescence, then the fleet-wide hash every worker must agree on.
     report.all_results_seen = wait_all_results(control, spec, timeout=spec.result_timeout)
+    if not report.all_results_seen:
+        _log.warning("worker %s: quiescence timeout — not every node deposited "
+                     "a result within %.0fs", worker_id, spec.result_timeout)
     time.sleep(spec.settle)
     report.fleet_state_hash = fleet_state_hash(spec)
     report.wall_seconds = time.time() - t0
@@ -550,6 +568,8 @@ def _run_slots_processes(control: SharedFolder, spec: FleetSpec, worker_id: str,
             for nid in sup.poll():
                 kill = kill_events.pop(nid, None)
                 if kill is not None:  # the victim settled by dying
+                    _log.info("worker %s: chaos SIGKILL landed on %s",
+                              worker_id, nid)
                     killed_at[nid] = time.time()
                     report.crashes_injected += 1
                     restart_due[nid] = time.monotonic() + kill.restart_after
@@ -559,6 +579,8 @@ def _run_slots_processes(control: SharedFolder, spec: FleetSpec, worker_id: str,
                     del restart_due[nid]
                     # restart WITHOUT the park: the reborn node must resume
                     # from its own deposits and run to completion
+                    _log.info("worker %s: restarting %s (must resume)",
+                              worker_id, nid)
                     sup.spawn(nid, _soak_client, (spec_dict, slot_of[nid]), {})
                     report.restarts += 1
             time.sleep(0.05)
@@ -599,6 +621,8 @@ def _run_slots_threaded(control: SharedFolder, spec: FleetSpec, worker_id: str,
             try:
                 result = _soak_client(spec_dict, slot, crash_mode="raise", **kwargs)
             except _SimulatedCrash:
+                _log.info("worker %s: simulated crash of %s; restarting",
+                          worker_id, nid)
                 with lock:
                     report.crashes_injected += 1
                     killed_at[nid] = time.time()
@@ -656,6 +680,7 @@ class SoakReport:
     recovery_latency: dict  # node -> seconds (SIGKILL → restarted node's first push)
     fleet_hashes: dict      # worker -> fleet state hash
     pipeline_stats: dict    # summed PipelineStats counters across all nodes
+    telemetry: dict         # obs/ rollups: per-node staleness + phase latency
     total_pushes: int
     wall_seconds: float
     rounds_per_sec: float
@@ -679,6 +704,7 @@ class SoakReport:
             f"/{len(self.victims)}",
             f"  fleet state hash: {hashes if len(hashes) != 1 else hashes[0]} "
             f"({'converged' if self.converged else 'NOT converged'})",
+            self._telemetry_line(),
             f"  passed: {self.passed}",
         ]
         if self.recovery_latency:
@@ -686,6 +712,20 @@ class SoakReport:
             lines.insert(3, f"  recovery latency: mean {mean:.2f}s over "
                             f"{len(self.recovery_latency)} restarts")
         return "\n".join(lines)
+
+    def _telemetry_line(self) -> str:
+        fleet = (self.telemetry or {}).get("fleet") or {}
+        if not fleet.get("nodes_reporting"):
+            return "  telemetry: no obs/ blobs found"
+        phases = fleet.get("phase_ms") or {}
+        phase_txt = " ".join(
+            f"{name} {phases[name]:.2f}ms"
+            for name in ("pull", "push", "aggregate") if name in phases)
+        return (
+            f"  telemetry: {fleet['nodes_reporting']}/{self.num_nodes} nodes, "
+            f"staleness mean {fleet.get('staleness_mean', 0.0):.2f} "
+            f"p90 {fleet.get('staleness_p90_max', 0.0):.2f}, "
+            f"phase means {phase_txt or 'n/a'}")
 
 
 def assemble_report(control: SharedFolder, spec: FleetSpec | None = None) -> SoakReport:
@@ -728,6 +768,15 @@ def assemble_report(control: SharedFolder, spec: FleetSpec | None = None) -> Soa
         for k, v in (r.get("transport_stats") or {}).items():
             if isinstance(v, (int, float)):
                 stats[k] = stats.get(k, 0) + v
+    # Telemetry rollups come from the DATA plane's obs/ blobs alone — the
+    # per-node staleness/latency picture survives even when a node died
+    # before depositing its fleet/ result.
+    try:
+        telemetry = telemetry_rollups(collect_obs(spec.store_uri))
+    except Exception:
+        _log.debug("telemetry rollup failed for %s", spec.store_uri,
+                   exc_info=True)
+        telemetry = {"nodes": {}, "fleet": {"nodes_reporting": 0}}
     total_pushes = sum(int(r.get("pushes", 0)) for r in results.values())
     wall = max([float(w.get("wall_seconds", 0.0)) for w in workers.values()]
                + [float(r.get("wall_seconds", 0.0)) for r in results.values()]
@@ -751,7 +800,7 @@ def assemble_report(control: SharedFolder, spec: FleetSpec | None = None) -> Soa
         victims=victims, stalled=stalled, resumed=resumed,
         rounds_completed=rounds_completed, crashes_injected=crashes,
         restarts=restarts, recovery_latency=recovery, fleet_hashes=hashes,
-        pipeline_stats=stats, total_pushes=total_pushes,
+        pipeline_stats=stats, telemetry=telemetry, total_pushes=total_pushes,
         wall_seconds=wall,
         rounds_per_sec=(total_pushes / active) if active > 0 else 0.0,
         complete=complete, converged=converged, recovered=recovered,

@@ -65,6 +65,9 @@ from .serialize import (
 from .store import SharedFolder, WeightStore
 from .transport import TransportPipeline, _LruCache
 from .tree import tree_weighted_mean
+from repro.logs import get_logger
+
+_log = get_logger("gossip")
 
 _SUMMARY_PREFIX = "summary/"
 GROUP_PEER_PREFIX = "group:"  # node_id prefix of summary pseudo-peers in pull()
@@ -312,12 +315,17 @@ class ShardedWeightStore:
         self._window: dict[str, int] = {}
         self._served: dict[str, set] = {}
         self._rotation_pending: dict[str, bool] = {}
-        # instrumentation
+        # instrumentation — bumped under _stats_lock: a shared instance
+        # serves many threaded nodes, and bare += would lose updates
+        self._stats_lock = threading.Lock()
         self.num_summary_refreshes = 0
         self.num_summary_forwards = 0
         # summary-layer wire traffic (refresh deposits + ring-forward copies);
         # per-group latest/base/history bytes live on the per-group stores
         self.summary_bytes_written = 0
+        # attached per-node Telemetry (attach_telemetry); per-group stores
+        # created later inherit it
+        self._telemetry = None
 
     # -- routing -------------------------------------------------------------
     def group_of(self, node_id: str) -> int:
@@ -342,6 +350,8 @@ class ShardedWeightStore:
                     keep_history=self._keep_history,
                     **self._store_kwargs,
                 )
+                if self._telemetry is not None:
+                    store.attach_telemetry(self._telemetry)
                 self._stores[group] = store
             return store
 
@@ -464,9 +474,12 @@ class ShardedWeightStore:
         # summaries ride the same pipeline envelope as every other deposit
         blob = store.pipeline.encode_summary(summary)
         folder.put(_summary_key(group, version, content_hash(blob)), blob)
-        self.summary_bytes_written += len(blob)
+        with self._stats_lock:
+            self.summary_bytes_written += len(blob)
+            self.num_summary_refreshes += 1
         self._replace_summaries(folder, current)
-        self.num_summary_refreshes += 1
+        _log.debug("group %d: refreshed summary v%d (%d members, %d bytes)",
+                   group, version, len(updates), len(blob))
 
     def _forward(self, group: int) -> None:
         """Forward every summary ``group``'s folder holds to the next
@@ -506,9 +519,10 @@ class ShardedWeightStore:
                 if blob is None:  # GC'd under us — a racing writer is fresher
                     continue
                 target_folder.put(key, blob)
-                self.summary_bytes_written += len(blob)
+                with self._stats_lock:
+                    self.summary_bytes_written += len(blob)
+                    self.num_summary_forwards += 1
                 self._replace_summaries(target_folder, have)
-                self.num_summary_forwards += 1
             if populated:
                 self._assumed_empty.discard(target)
                 relayed += 1
@@ -612,8 +626,14 @@ class ShardedWeightStore:
         # routes; per-node instances rely on the periodic recheck instead)
         self._assumed_empty.discard(group)
         self._store(group).push(update)
-        self._refresh_summary(group)
-        self._forward(group)
+        tel = self._telemetry
+        if tel is not None and tel.enabled:
+            with tel.span("gossip"):
+                self._refresh_summary(group)
+                self._forward(group)
+        else:
+            self._refresh_summary(group)
+            self._forward(group)
 
     def state_hash(self, exclude_node: str | None = None) -> str:
         """O(group-folder keys): only the caller's home folder is hashed. The
@@ -624,11 +644,11 @@ class ShardedWeightStore:
         if exclude_node is None:
             h = hashlib.sha256()
             for g in range(self.num_groups):
-                # state/ blobs are optimizer recovery data and fleet/ blobs
-                # are launcher control traffic, not federation signal —
-                # excluded here exactly as the flat store does
+                # state/ blobs are optimizer recovery data, fleet/ blobs are
+                # launcher control traffic, obs/ blobs are telemetry — none
+                # is federation signal, excluded exactly as the flat store does
                 h.update(self._folder(g).state_hash(
-                    exclude=("state/", "fleet/")).encode())
+                    exclude=("state/", "fleet/", "obs/")).encode())
             return h.hexdigest()[:16]
         group = self.group_of(exclude_node)
         exclude = (
@@ -639,6 +659,7 @@ class ShardedWeightStore:
             f"{_SUMMARY_PREFIX}{group:04d}/",
             "state/",
             "fleet/",
+            "obs/",
         )
         base = self._folder(group).state_hash(exclude=exclude)
         if self._rotation_pending.get(exclude_node):
@@ -684,6 +705,27 @@ class ShardedWeightStore:
 
     def pull_strategy_state(self, node_id: str) -> tuple[dict, dict] | None:
         return self._store(self.group_of(node_id)).pull_strategy_state(node_id)
+
+    # -- observability blobs: deposit to the home group, read fleet-wide ------
+    def attach_telemetry(self, telemetry) -> None:
+        self._telemetry = telemetry
+        with self._lock:
+            stores = list(self._stores.values())
+        for store in stores:
+            store.attach_telemetry(telemetry)
+
+    def push_obs(self, node_id: str, seq: int, payload: dict, *,
+                 keep: int | None = None) -> None:
+        self._store(self.group_of(node_id)).push_obs(
+            node_id, seq, payload, keep=keep)
+
+    def pull_obs(self, node_id: str | None = None) -> list[tuple[str, int, dict]]:
+        if node_id is not None:
+            return self._store(self.group_of(node_id)).pull_obs(node_id)
+        out = []
+        for g in range(self.num_groups):
+            out.extend(self._store(g).pull_obs())
+        return out
 
     def start_prefetch(self, interval: float = 0.1, *, exclude: str):
         """Background-warm the decoded-update cache of ``exclude``'s home

@@ -23,12 +23,17 @@ import uuid
 import warnings
 from typing import Callable
 
+from repro.logs import get_logger
+
 from .gossip import ShardedFolders, ShardedWeightStore
 from .serialize import NodeUpdate
 from .store import SharedFolder, WeightStore
 from .strategies import FedAvg, PartialFedAvg, Strategy
+from .telemetry import Telemetry
 from .transport import family_transport_spec, normalize_transport
 from .tree import PyTree, tree_to_numpy
+
+_log = get_logger("node")
 
 
 class FederationTimeout(RuntimeError):
@@ -50,6 +55,7 @@ class _BaseNode:
         prefetch_interval: float | None = None,
         clock: Callable[[], float] = time.monotonic,
         on_step: "Callable[[_BaseNode, PyTree | None], None] | None" = None,
+        telemetry: "Telemetry | bool | None" = None,
     ):
         # Leaf-family selector (LoRA-style adapter federation): one kwarg
         # configures both halves of subset federation. When the node builds
@@ -99,6 +105,20 @@ class _BaseNode:
         # broken hook is a caller bug, not something to swallow mid-soak.
         self.on_step = on_step
         self.persist_strategy_state = persist_strategy_state
+        # Telemetry: an instance wires in as-is; True/False forces on/off;
+        # None defers to the REPRO_OBS env var (default off — span() then
+        # returns a shared no-op and every hook is one attribute check).
+        if isinstance(telemetry, Telemetry):
+            self.telemetry = telemetry
+        else:
+            self.telemetry = Telemetry(enabled=telemetry)
+        if not self.telemetry.node_id:
+            self.telemetry.node_id = self.node_id
+        if self.telemetry.enabled and self._owns_store:
+            # Only a store this node built is exclusively its own traffic; a
+            # caller-provided store may be shared, and its spans would
+            # conflate nodes.
+            store.attach_telemetry(self.telemetry)
         self.counter = 0  # local epoch counter; there is no global round
         self._last_state_hash: str | None = None
         # Restart/recovery (read-your-own-writes bootstrap): a node that comes
@@ -146,7 +166,21 @@ class _BaseNode:
     def _finish_step(self, aggregated: PyTree | None) -> PyTree | None:
         """Every return path of update_parameters funnels through here so the
         ``on_step`` hook fires exactly once per federation step — including
-        skipped-pull and no-peers steps, which a heartbeat must still count."""
+        skipped-pull and no-peers steps, which a heartbeat must still count.
+        Telemetry rounds tick here too, and every ``flush_every`` rounds the
+        aggregator snapshots into an ``obs/<node>/<seq>`` blob."""
+        tel = self.telemetry
+        if tel.enabled:
+            tel.end_round(aggregated=aggregated is not None)
+            if tel.should_flush():
+                try:
+                    payload = tel.snapshot(self.transport_stats())
+                    self.store.push_obs(self.node_id, payload["seq"], payload,
+                                        keep=tel.obs_keep)
+                except Exception:
+                    # observability must never take down federation
+                    _log.debug("node %s: obs flush failed", self.node_id,
+                               exc_info=True)
         if self.on_step is not None:
             self.on_step(self, aggregated)
         return aggregated
@@ -181,16 +215,23 @@ class AsyncFederatedNode(_BaseNode):
         ``None`` when no peer weights are available / store unchanged (the
         caller keeps training on its current weights — Algorithm 1's 'resume
         training' branch)."""
-        own = self._push(params, num_examples, metrics)
+        tel = self.telemetry
+        with tel.span("push"):
+            own = self._push(params, num_examples, metrics)
         self.counter += 1
 
-        state = self.store.state_hash(exclude_node=self.node_id)
-        if state == self._last_state_hash:
-            # Only our own deposit changed nothing relative to what we already
-            # aggregated → skip the download entirely (paper's hash check).
+        with tel.span("pull"):
+            state = self.store.state_hash(exclude_node=self.node_id)
+            if state == self._last_state_hash:
+                # Only our own deposit changed nothing relative to what we
+                # already aggregated → skip the download entirely (paper's
+                # hash check).
+                peers = None
+            else:
+                peers = self.store.pull(exclude=self.node_id)
+        if peers is None:
             self.num_skipped_pulls += 1
             return self._finish_step(None)
-        peers = self.store.pull(exclude=self.node_id)
         self.num_pulls += 1
         # Record the PRE-pull hash: a peer depositing while we were pulling
         # must show up as a change next round. Re-hashing here would mark that
@@ -199,7 +240,13 @@ class AsyncFederatedNode(_BaseNode):
         self._last_state_hash = state
         if not peers:
             return self._finish_step(None)
-        aggregated = self.strategy.aggregate(own, peers)
+        if tel.enabled:
+            # Update staleness in local-epoch units (the FedAsync signal): how
+            # far behind our own counter each pulled peer update is.
+            for u in peers:
+                tel.observe_staleness(own.counter - u.counter)
+        with tel.span("aggregate"):
+            aggregated = self.strategy.aggregate(own, peers)
         self.num_aggregations += 1
         if self.persist_strategy_state:
             self._persist_strategy_state()
@@ -239,7 +286,9 @@ class SyncFederatedNode(_BaseNode):
     def update_parameters(
         self, params: PyTree, num_examples: int, metrics: dict | None = None
     ) -> PyTree:
-        own = self._push(params, num_examples, metrics)
+        tel = self.telemetry
+        with tel.span("push"):
+            own = self._push(params, num_examples, metrics)
         round_id = self.counter
         self.counter += 1
 
@@ -247,20 +296,25 @@ class SyncFederatedNode(_BaseNode):
         # simulated-clock tests of timeout behavior (and virtual-time
         # harnesses) must be able to age the barrier without real sleeping.
         deadline = self.clock() + self.timeout
-        while True:
-            peers = self.store.pull_round(round_id, exclude=self.node_id)
-            self.num_pulls += 1
-            if len(peers) >= self.num_nodes - 1:
-                break
-            if self.clock() > deadline:
-                raise FederationTimeout(
-                    f"node {self.node_id}: only {len(peers) + 1}/{self.num_nodes} "
-                    f"nodes reached round {round_id} within {self.timeout}s"
-                )
-            time.sleep(self.poll_interval)
+        with tel.span("pull"):
+            while True:
+                peers = self.store.pull_round(round_id, exclude=self.node_id)
+                self.num_pulls += 1
+                if len(peers) >= self.num_nodes - 1:
+                    break
+                if self.clock() > deadline:
+                    raise FederationTimeout(
+                        f"node {self.node_id}: only {len(peers) + 1}/{self.num_nodes} "
+                        f"nodes reached round {round_id} within {self.timeout}s"
+                    )
+                time.sleep(self.poll_interval)
+        if tel.enabled:
+            for u in peers:
+                tel.observe_staleness(own.counter - u.counter)
         # Deterministic aggregation order across clients → identical results.
         peers.sort(key=lambda u: u.node_id)
-        aggregated = self.strategy.aggregate(own, peers)
+        with tel.span("aggregate"):
+            aggregated = self.strategy.aggregate(own, peers)
         self.num_aggregations += 1
         if self.persist_strategy_state:
             self._persist_strategy_state()

@@ -502,6 +502,35 @@ def deserialize_fleet_blob(blob: bytes) -> tuple[str, dict]:
     return str(meta["fleet_of"]), dict(meta.get("payload") or {})
 
 
+# --- observability blobs (store-native telemetry plane) ----------------------
+#
+# Telemetry snapshots ride the store as their own family under ``obs/<node>/
+# <seq>`` — the serverless answer to "where does a round's time go": there is
+# no metrics server, so per-node phase latencies, staleness distributions and
+# wire counters are deposited as blobs and assembled read-only by any peer
+# (``python -m repro.obs``). Same envelope, same exclusion rule as ``fleet/``:
+# an obs deposit must never perturb ``state_hash`` and trigger re-pulls.
+
+
+def serialize_obs_blob(node_id: str, seq: int, payload: dict, *,
+                       compress: str = "none") -> bytes:
+    """One telemetry snapshot deposit for ``obs/<node_id>/<seq>``."""
+    return serialize_params(
+        {}, compress=compress,
+        meta={"obs_of": str(node_id), "seq": int(seq),
+              "payload": dict(payload)},
+    )
+
+
+def deserialize_obs_blob(blob: bytes) -> tuple[str, int, dict]:
+    """-> (node_id, seq, payload). Raises ValueError on non-obs blobs."""
+    _params, meta = deserialize_params(blob)
+    if "obs_of" not in meta:
+        raise ValueError("not a telemetry blob")
+    return (str(meta["obs_of"]), int(meta.get("seq", 0)),
+            dict(meta.get("payload") or {}))
+
+
 # --- int8 compressed payloads (beyond-paper extension #4) -------------------
 
 

@@ -37,7 +37,9 @@ from typing import Any
 
 from .serialize import (
     NodeUpdate,
+    deserialize_obs_blob,
     deserialize_strategy_state,
+    serialize_obs_blob,
     serialize_strategy_state,
 )
 from .transport import (
@@ -48,6 +50,9 @@ from .transport import (
     family_transport_spec,
     parse_folder_uri,
 )
+from repro.logs import get_logger
+
+_log = get_logger("store")
 
 def _exclusion(exclude: "str | tuple[str, ...] | None"):
     """Normalize a state_hash exclusion — None, one exact key, or a tuple of
@@ -606,16 +611,59 @@ class WeightStore:
         except (ValueError, KeyError):
             return None
 
+    # -- observability blobs --------------------------------------------------
+    def attach_telemetry(self, telemetry) -> None:
+        """Route this store's folder round-trips and codec work through a
+        ``Telemetry`` instance (put/get/encode/decode spans)."""
+        self._ctx.telemetry = telemetry
+
+    def push_obs(self, node_id: str, seq: int, payload: dict, *,
+                 keep: int | None = None) -> None:
+        """Deposit one telemetry snapshot under ``obs/<node>/<seq>``.
+
+        Writes go straight to the folder, not through the pipeline context:
+        observability traffic must not skew the wire counters it exists to
+        report. ``keep`` bounds the per-node trail — the deposit ``keep``
+        sequences back is GC'd with each flush.
+        """
+        self.folder.put(f"obs/{node_id}/{seq:06d}",
+                        serialize_obs_blob(node_id, seq, payload))
+        if keep is not None and seq - keep >= 0:
+            try:
+                self.folder.delete(f"obs/{node_id}/{seq - keep:06d}")
+            except OSError:
+                _log.debug("obs GC failed for %s seq %d", node_id, seq - keep,
+                           exc_info=True)
+
+    def pull_obs(self, node_id: str | None = None) -> list[tuple[str, int, dict]]:
+        """All (node_id, seq, payload) telemetry snapshots, seq-ordered."""
+        out = []
+        for key in sorted(self.folder.keys()):
+            if not key.startswith("obs/"):
+                continue
+            nid, _, _seq = key[len("obs/"):].rpartition("/")
+            if node_id is not None and nid != node_id:
+                continue
+            blob = self.folder.get(key)
+            if blob is None:
+                continue
+            try:
+                out.append(deserialize_obs_blob(blob))
+            except (ValueError, KeyError):
+                continue
+        return out
+
     # -- state hash fast path -------------------------------------------------
     def state_hash(self, exclude_node: str | None = None) -> str:
         # A node's deposits span latest/, base/ + chain/ (delta rebases and
         # chain links) and history/; all of them must be excluded or the
         # node's own push would defeat its own skip check. state/ blobs are
         # optimizer recovery data and fleet/ blobs are launcher control
-        # traffic (specs, claims, heartbeats, soak results) — neither is
-        # federation signal, so both are excluded for every node: a heartbeat
-        # landing between two pulls must not trigger a fleet-wide re-pull.
-        exclude: tuple[str, ...] = ("state/", "fleet/")
+        # traffic (specs, claims, heartbeats, soak results) and obs/ blobs
+        # are telemetry snapshots — none is federation signal, so all are
+        # excluded for every node: a heartbeat or telemetry flush landing
+        # between two pulls must not trigger a fleet-wide re-pull.
+        exclude: tuple[str, ...] = ("state/", "fleet/", "obs/")
         if exclude_node:
             exclude = (
                 f"latest/{exclude_node}",
@@ -624,6 +672,7 @@ class WeightStore:
                 f"history/{exclude_node}/",
                 "state/",
                 "fleet/",
+                "obs/",
             )
         return self.folder.state_hash(exclude=exclude)
 
@@ -649,7 +698,7 @@ class WeightStore:
         if v is not None:
             hit = self._decoded_latest.get(key)  # refreshes LRU position
             if hit is not None and hit[0] == v:
-                stats.decode_hits += 1
+                stats.incr("decode_hits")
                 return hit[1]
         for _ in range(3):
             blob = self._ctx.get(key)
@@ -657,7 +706,7 @@ class WeightStore:
                 return None
             update = self._decode(blob, node_id)
             if update is not None:
-                stats.decode_misses += 1
+                stats.incr("decode_misses")
                 if v is not None:
                     self._decoded_latest.put(key, (v, update))
                 return update
@@ -717,8 +766,8 @@ class WeightStore:
                 continue
             if self._pull_latest(node_id) is not None:
                 warmed += 1
-        stats.prefetch_cycles += 1
-        stats.prefetched += warmed
+        stats.incr("prefetch_cycles")
+        stats.incr("prefetched", warmed)
         return warmed
 
     def start_prefetch(self, interval: float = 0.1, *,

@@ -99,6 +99,9 @@ from .serialize import (
     serialize_update_quantized,
 )
 from .tree import LeafSpec, tree_size_bytes
+from repro.logs import get_logger
+
+_log = get_logger("transport")
 
 # cycle/corruption guard on the reader's chain walk; far above any real
 # ``chain=`` bound (writers re-anchor long before this)
@@ -429,7 +432,15 @@ def parse_folder_uri(uri: str) -> tuple[list[tuple[str, dict]], str]:
 class PipelineStats:
     """Every wire counter one transport pipeline accumulates. Replaces the
     ad-hoc counters that used to live directly on ``WeightStore`` — one stats
-    object per pipeline, shared by its codecs, readable as one dict."""
+    object per pipeline, shared by its codecs, readable as one dict.
+
+    Mutations go through ``incr``/``set_value``/``record_max``, all guarded by
+    one lock: the node thread, the background ``Prefetcher`` thread, and
+    in-process soak peers sharing a store all bump these concurrently, and a
+    bare ``+=`` on an instance attribute is a load/add/store race in CPython
+    (tests/test_telemetry.py has the stress case that loses updates without
+    the lock). Fields stay plain attributes for cheap, racy-but-safe reads.
+    """
 
     _INT_FIELDS = (
         "bytes_written", "bytes_read", "encodes", "decodes",
@@ -440,17 +451,38 @@ class PipelineStats:
     _FLOAT_FIELDS = ("residual_norm", "topk_fraction_effective")
 
     def __init__(self):
+        self._lock = threading.Lock()
+        self._zero()
+
+    def _zero(self) -> None:
         for f in self._INT_FIELDS:
             setattr(self, f, 0)
         for f in self._FLOAT_FIELDS:
             setattr(self, f, 0.0)
 
+    def incr(self, field: str, n: int | float = 1) -> None:
+        with self._lock:
+            setattr(self, field, getattr(self, field) + n)
+
+    def set_value(self, field: str, value: int | float) -> None:
+        with self._lock:
+            setattr(self, field, value)
+
+    def record_max(self, field: str, value: int | float) -> None:
+        with self._lock:
+            if value > getattr(self, field):
+                setattr(self, field, value)
+
     def as_dict(self) -> dict[str, int | float]:
-        return {f: getattr(self, f)
-                for f in self._INT_FIELDS + self._FLOAT_FIELDS}
+        with self._lock:
+            return {f: getattr(self, f)
+                    for f in self._INT_FIELDS + self._FLOAT_FIELDS}
 
     def reset(self) -> None:
-        self.__init__()
+        # zero in place under the existing lock — re-running __init__ would
+        # swap the lock out from under a concurrent writer
+        with self._lock:
+            self._zero()
 
 
 class StoreContext:
@@ -463,6 +495,9 @@ class StoreContext:
                  decoded_base_entries: int = 32):
         self.folder = folder
         self.stats = stats
+        # attached by the owning store (``attach_telemetry``): when set and
+        # enabled, folder round-trips and codec work record latency spans
+        self.telemetry = None
         # interned LeafSpecs: one per decoded structure, shared by every
         # FlatUpdate decoded through this context
         self.specs: dict = {}
@@ -472,13 +507,23 @@ class StoreContext:
         self.decoded_bases = _LruCache(decoded_base_entries)
 
     def put(self, key: str, blob: bytes) -> None:
-        self.folder.put(key, blob)
-        self.stats.bytes_written += len(blob)
+        tel = self.telemetry
+        if tel is not None and tel.enabled:
+            with tel.span("put"):
+                self.folder.put(key, blob)
+        else:
+            self.folder.put(key, blob)
+        self.stats.incr("bytes_written", len(blob))
 
     def get(self, key: str) -> bytes | None:
-        blob = self.folder.get(key)
+        tel = self.telemetry
+        if tel is not None and tel.enabled:
+            with tel.span("get"):
+                blob = self.folder.get(key)
+        else:
+            blob = self.folder.get(key)
         if blob is not None:
-            self.stats.bytes_read += len(blob)
+            self.stats.incr("bytes_read", len(blob))
         return blob
 
     def delete(self, key: str) -> None:
@@ -528,7 +573,7 @@ def _deposit_base(update: NodeUpdate, ctx: StoreContext, *, compress: str,
                 ctx.delete(key)
             elif prefix == f"chain/{node}":
                 ctx.delete(key)
-    stats.rebases += 1
+    stats.incr("rebases")
     return full, h
 
 
@@ -687,7 +732,7 @@ class DeltaCodec(Codec):
         if new_flat is None:  # dense-guard rebases already flattened once
             new_flat = spec.flatten(update.params)
         self._chains[node] = _ChainState(h, spec, new_flat)
-        self.stats.chain_depth = 0
+        self.stats.set_value("chain_depth", 0)
         return full, False
 
     def _encode_link(self, update, spec, new_flat, st) -> tuple[bytes, int]:
@@ -709,7 +754,7 @@ class DeltaCodec(Codec):
             # re-anchor: the previous segment's links are unreachable from
             # the new latest — retire them once it is in place
             retire, st.segment_keys = st.segment_keys, []
-            self.stats.reanchors += 1
+            self.stats.incr("reanchors")
         if self.chain > 1 and depth < self.chain:
             # the next link will reference this blob by hash — make it
             # addressable BEFORE latest/ points at it. A blob at the depth
@@ -722,8 +767,8 @@ class DeltaCodec(Codec):
             ctx.delete(key)
         st.prev_hash, st.prev_flat, st.depth = bh, new_flat, depth
         st.age += 1
-        self.stats.chain_depth = depth
-        self.stats.max_chain_depth = max(self.stats.max_chain_depth, depth)
+        self.stats.set_value("chain_depth", depth)
+        self.stats.record_max("max_chain_depth", depth)
 
     def _encode_tree(self, update: NodeUpdate, ctx: StoreContext) -> tuple[bytes, bool]:
         """Per-leaf lossless/quantized path (the pre-chain transport)."""
@@ -811,8 +856,8 @@ class DeltaCodec(Codec):
             # referenced again (writers only ever chain forward)
             ctx.decoded_bases.put(pending[0][0], resolved)
             state = resolved
-        ctx.stats.resolve_hops = hops
-        ctx.stats.max_resolve_hops = max(ctx.stats.max_resolve_hops, hops)
+        ctx.stats.set_value("resolve_hops", hops)
+        ctx.stats.record_max("max_resolve_hops", hops)
         return state
 
     @staticmethod
@@ -887,9 +932,9 @@ class TopKCodec(Codec):
     def _fraction_for(self, node: str, new_flat: np.ndarray,
                       v: np.ndarray) -> float:
         rn = float(np.linalg.norm(v))
-        self.stats.residual_norm = rn
+        self.stats.set_value("residual_norm", rn)
         if not self.adaptive:
-            self.stats.topk_fraction_effective = self.topk_fraction
+            self.stats.set_value("topk_fraction_effective", self.topk_fraction)
             return self.topk_fraction
         rel = rn / (float(np.linalg.norm(new_flat)) + 1e-12)
         ema = self._ema.get(node, rel)
@@ -897,7 +942,7 @@ class TopKCodec(Codec):
         frac = min(max(frac, self.topk_fraction / 8.0),
                    min(1.0, 8.0 * self.topk_fraction))
         self._ema[node] = 0.7 * ema + 0.3 * rel
-        self.stats.topk_fraction_effective = frac
+        self.stats.set_value("topk_fraction_effective", frac)
         return frac
 
     def encode(self, update: NodeUpdate, ctx: StoreContext) -> tuple[bytes, bool]:
@@ -920,7 +965,7 @@ class TopKCodec(Codec):
                 v = new_flat - acc
                 frac = self._fraction_for(node, new_flat, v)
                 k = max(1, int(frac * v.size))
-                self.stats.topk_k = k
+                self.stats.set_value("topk_k", k)
                 nz = int(np.count_nonzero(v))
                 if nz > k:
                     keep = np.argpartition(np.abs(v), v.size - k)[v.size - k:]
@@ -1112,7 +1157,11 @@ class TransportPipeline:
 
     # -- write side ----------------------------------------------------------
     def push(self, update: NodeUpdate, ctx: StoreContext) -> tuple[bytes, bool]:
-        self.stats.encodes += 1
+        self.stats.incr("encodes")
+        tel = ctx.telemetry
+        if tel is not None and tel.enabled:
+            with tel.span("encode"):
+                return self.policy.encode(update, ctx)
         return self.policy.encode(update, ctx)
 
     def encode_history(self, update: NodeUpdate) -> bytes:
@@ -1132,7 +1181,14 @@ class TransportPipeline:
         """Decode a self-describing blob; None when a delta's reference chain
         cannot be resolved yet (caller refetches — the writer is mid-rebase
         or mid-GC)."""
-        self.stats.decodes += 1
+        self.stats.incr("decodes")
+        tel = ctx.telemetry
+        if tel is not None and tel.enabled:
+            with tel.span("decode"):
+                return self._decode(blob, node_id, ctx)
+        return self._decode(blob, node_id, ctx)
+
+    def _decode(self, blob: bytes, node_id: str, ctx: StoreContext) -> NodeUpdate | None:
         raw = blob
         # Decompress exactly once up front: peek_meta and every decode below
         # call maybe_decompress themselves, which is a no-op on raw npz bytes
@@ -1195,7 +1251,9 @@ class Prefetcher:
             try:
                 store.warm_cache(exclude=self.exclude)
             except Exception:
-                pass
+                # routine during rebases/GC; next cycle retries — but leave a
+                # debug trail instead of vanishing the error entirely
+                _log.debug("prefetch sweep failed", exc_info=True)
             del store  # don't pin the store across the sleep
 
     def stop(self) -> None:

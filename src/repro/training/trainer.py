@@ -55,11 +55,18 @@ class Trainer:
         jit: bool = True,
         slowdown: float = 0.0,
         name: str = "trainer",
+        telemetry=None,
     ):
         """``slowdown``: artificial seconds of sleep per step — used by the
         straggler experiments to make one node slower, as the paper does with
-        heterogeneous hardware."""
+        heterogeneous hardware.
+
+        ``telemetry``: an optional ``repro.core.telemetry.Telemetry`` — each
+        ``run_epoch`` then records a ``train`` span and feeds step throughput
+        into the node's ``obs/`` snapshots. Usually the same instance the
+        federated node carries."""
         self.optimizer = optimizer
+        self.telemetry = telemetry
         self.eval_fn = eval_fn
         self.params = init_params
         self.opt_state = optimizer.init(init_params)
@@ -96,6 +103,8 @@ class Trainer:
         # Metric values stay on device for the whole epoch: a per-step
         # float(v) would block on each step's result and serialize JAX's
         # async dispatch. One device_get at the end pays one sync.
+        tel = self.telemetry
+        t_epoch = tel.clock() if tel is not None and tel.enabled else None
         step_metrics: list[dict] = []
         count = 0
         for i, batch in enumerate(batches):
@@ -114,6 +123,12 @@ class Trainer:
         for metrics in jax.device_get(step_metrics):
             for k, v in metrics.items():
                 metrics_acc[k] = metrics_acc.get(k, 0.0) + float(v)
+        if t_epoch is not None:
+            # one span per epoch, recorded after the epoch's single device
+            # sync — no extra mid-epoch host round-trips
+            dur = tel.clock() - t_epoch
+            tel.recorder.record("train", t_epoch, dur)
+            tel.note_train(count, dur)
         return {k: v / max(1, count) for k, v in metrics_acc.items()}
 
     def fit(
