@@ -595,7 +595,24 @@ def bench_llm(trials: int):
             f"acceptance_passed={payload['acceptance']['passed']}")
 
 
-def bench_soak(trials: int, sizes=None):
+def _churn_soak(n: int, uri: str):
+    """One elastic-membership soak at fleet size ``n``: three workers claim
+    leased slots, the seeded worker-kill chaos takes one whole worker down
+    mid-soak, and the survivors must adopt every stranded lease. Returns the
+    SoakReport (recovery + adoption latency both populated)."""
+    from repro.core import ChaosSpec, FleetSpec, run_fleet_local
+
+    spec = FleetSpec(
+        store_uri=uri,
+        name=f"churn{n}", num_nodes=n, rounds=5, runner="thread",
+        param_size=256, round_sleep=0.02, settle=0.5,
+        result_timeout=240.0, lease_ttl=1.0,
+        chaos=ChaosSpec(seed=0, kill_workers=1, kill_workers_after=(1, 3)),
+    )
+    return run_fleet_local(spec, num_workers=3)
+
+
+def bench_soak(trials: int, sizes=None, churn: bool = False):
     """Fleet chaos soak at 8→128 nodes: rounds/sec throughput and SIGKILL→
     resume recovery latency as the fleet grows, two workers partitioning the
     fleet over one shared DiskFolder. Thread runner — at 10² nodes an OS
@@ -603,7 +620,13 @@ def bench_soak(trials: int, sizes=None):
     same store path, claim protocol, chaos schedule, and fleet-hash
     convergence check as the multi-host process soak (CI's soak-smoke job
     runs that one). Writes BENCH_soak.json; acceptance is every size passing
-    the full soak bar (convergence + all victims resumed)."""
+    the full soak bar (convergence + all victims resumed).
+
+    ``churn=True`` (the ``--churn`` flag) additionally runs an elastic-
+    membership soak per size — one of three workers killed whole mid-soak,
+    survivors adopting its leases — and records worker-loss recovery and
+    adoption latency under the same per-size schema; acceptance then also
+    requires every churn soak to pass."""
     import shutil
     import tempfile
 
@@ -659,13 +682,40 @@ def bench_soak(trials: int, sizes=None):
         _report(f"soak/n{n}/rounds_per_sec", 0.0, f"{best.rounds_per_sec:.2f}")
         _report(f"soak/n{n}/recovery_mean_s", 0.0,
                 results[str(n)]["recovery_latency_mean_s"])
+        if churn:
+            churn_dir = tempfile.mkdtemp(prefix=f"bench_churn_{n}_")
+            churn_uri = f"shard{n // 16}+{churn_dir}" if n >= 64 else churn_dir
+            creport = _churn_soak(n, churn_uri)
+            shutil.rmtree(churn_dir, ignore_errors=True)
+            adoption = list(creport.adoption_latency.values())
+            crecovery = list(creport.recovery_latency.values())
+            results[str(n)].update({
+                "churn_workers_lost": len(creport.workers_lost),
+                "churn_nodes_adopted": sum(
+                    1 for v in creport.adopted.values() if v),
+                "churn_nodes_stranded": len(creport.stranded),
+                "churn_adoption_latency_mean_s": round(
+                    float(np.mean(adoption)), 3) if adoption else None,
+                "churn_adoption_latency_max_s": round(
+                    float(np.max(adoption)), 3) if adoption else None,
+                "churn_recovery_latency_mean_s": round(
+                    float(np.mean(crecovery)), 3) if crecovery else None,
+                "churn_passed": creport.passed,
+            })
+            _report(f"soak/n{n}/churn_adoption_mean_s", 0.0,
+                    results[str(n)]["churn_adoption_latency_mean_s"])
+            _report(f"soak/n{n}/churn_passed", 0.0, creport.passed)
     payload = write_bench("BENCH_soak.json", {
         "results": results,
         "acceptance": {
             "criterion": ("every fleet size passes the full soak bar: one "
                           "fleet state hash across workers, every "
-                          "killed-then-restarted node resumed"),
-            "passed": all(r["passed"] for r in results.values()),
+                          "killed-then-restarted node resumed"
+                          + ("; churn soaks additionally lose one whole "
+                             "worker and every stranded lease is adopted"
+                             if churn else "")),
+            "passed": all(r["passed"] for r in results.values()) and all(
+                r.get("churn_passed", True) for r in results.values()),
         },
     }, benchmark="fleet chaos soak (throughput + crash recovery vs fleet size)",
         sizes=sizes)
@@ -826,6 +876,11 @@ def main(argv=None) -> None:
                     help="comma-separated param counts for --only obs "
                          "(default 1e6,1e7); e.g. --obs-sizes 200000 for a "
                          "CI smoke run")
+    ap.add_argument("--churn", action="store_true",
+                    help="with --only soak: also run an elastic-membership "
+                         "soak per size (one of three workers killed whole, "
+                         "survivors adopt its leases) and record adoption "
+                         "latency in BENCH_soak.json")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     names = [args.only] if args.only else list(TABLES)
@@ -837,9 +892,10 @@ def main(argv=None) -> None:
             bench_transport(args.trials,
                             sizes=[int(float(s))
                                    for s in args.transport_sizes.split(",")])
-        elif name == "soak" and args.soak_sizes:
-            bench_soak(args.trials,
-                       sizes=[int(float(s)) for s in args.soak_sizes.split(",")])
+        elif name == "soak" and (args.soak_sizes or args.churn):
+            soak_sizes = ([int(float(s)) for s in args.soak_sizes.split(",")]
+                          if args.soak_sizes else None)
+            bench_soak(args.trials, sizes=soak_sizes, churn=args.churn)
         elif name == "obs" and args.obs_sizes:
             bench_obs(args.trials,
                       sizes=[int(float(s)) for s in args.obs_sizes.split(",")])

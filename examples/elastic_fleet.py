@@ -1,0 +1,131 @@
+"""Elastic fleet membership — workers leave (crash) and join mid-soak.
+
+Fleet workers don't own their slots forever: each claim is a **lease**
+(``fleet/lease/<node>/<epoch>`` blob carrying the worker id and a
+heartbeat-refreshed deadline). A worker that goes silent past
+``FleetSpec.lease_ttl`` forfeits its slots — any live worker adopts the
+lapsed lease with one atomic ``put_if_absent`` at the next epoch and resumes
+the node from its own ``latest/`` deposits. Membership is therefore
+*elastic*: workers can be SIGKILLed whole, and fresh workers can join a
+soak that is already running.
+
+This script demos both directions in one process:
+
+1. two founding workers claim the fleet; ``ChaosSpec(kill_workers=1)``
+   deterministically draws one of them and kills it whole mid-soak
+   (its nodes stop pushing, its leases go stale);
+2. a **late-joining rescuer** worker starts *after* the soak is underway
+   with ``max_slots=0`` — it claims nothing, finds the stranded leases,
+   adopts them at epoch 1, and finishes the dead worker's nodes.
+
+Run it::
+
+    PYTHONPATH=src python examples/elastic_fleet.py
+    PYTHONPATH=src python examples/elastic_fleet.py --nodes 12 --rounds 8
+
+Across real terminals/machines the same flow is the CLI (the rescuer can
+start any time, even after the victim is long dead)::
+
+    PYTHONPATH=src python -m repro.fleet init --store /mnt/shared/soak \\
+        --nodes 9 --rounds 6 --chaos-kill-workers 1 --lease-ttl 2
+    PYTHONPATH=src python -m repro.fleet worker --store /mnt/shared/soak \\
+        --worker-id hostA --max-slots 5 &        # one of these self-SIGKILLs
+    PYTHONPATH=src python -m repro.fleet worker --store /mnt/shared/soak \\
+        --worker-id hostB --max-slots 4 &
+    PYTHONPATH=src python -m repro.fleet worker --store /mnt/shared/soak \\
+        --worker-id rescuer --max-slots 0        # joins late, adopts strays
+
+The soak passes only if every node finished, the survivors agree on one
+fleet-wide ``state_hash``, at least one founding worker was lost, and every
+stranded node reports ``adopted=True`` — the acceptance ``repro.fleet
+report --assert-passed`` checks, and the bar CI's churn tier holds.
+"""
+import argparse
+import tempfile
+import threading
+import time
+
+from repro.core import ChaosSpec, FleetSpec, assemble_report, run_worker
+from repro.core.fleet import control_folder, read_spec, write_spec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--store", default=None,
+                    help="shared folder URI (default: fresh temp dir)")
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--seed", type=int, default=5)
+    ap.add_argument("--lease-ttl", type=float, default=1.0,
+                    help="lease freshness window; a worker silent this long "
+                         "forfeits its slots to adoption")
+    ap.add_argument("--join", action="store_true",
+                    help="skip init: act only as a late-joining rescuer "
+                         "against a soak already running at --store")
+    args = ap.parse_args(argv)
+
+    if args.join:
+        if not args.store:
+            ap.error("--join needs --store pointing at the running soak")
+        report = run_worker(args.store, worker_id="rescuer", max_slots=0)
+        print(f"rescuer adopted: {sorted(report.adoptions)}")
+        raise SystemExit(0)
+
+    store = args.store or tempfile.mkdtemp(prefix="elastic_fleet_")
+    spec = FleetSpec(
+        store_uri=store,
+        num_nodes=args.nodes,
+        rounds=args.rounds,
+        runner="thread",
+        round_sleep=0.05,
+        settle=1.0,
+        lease_ttl=args.lease_ttl,
+        chaos=ChaosSpec(seed=args.seed, kill_workers=1,
+                        kill_workers_after=(1, 3)),
+    )
+    write_spec(control_folder(store), spec)
+    print(f"soaking {spec.num_nodes} nodes x {spec.rounds} rounds over "
+          f"{store!r}: 2 founding workers, kill_workers=1, "
+          f"lease_ttl={spec.lease_ttl}s")
+
+    # Two founding workers split the fleet. The seeded worker-kill chaos
+    # draws one of them; mid-soak it stops dead (threads aborted, leases
+    # left to go stale) — exactly what a SIGKILLed host looks like from the
+    # store's point of view.
+    founders = [
+        threading.Thread(
+            target=run_worker, args=(store,),
+            kwargs=dict(worker_id=f"founder{i}",
+                        max_slots=(spec.num_nodes + 1) // 2),
+            daemon=True)
+        for i in range(2)
+    ]
+    for t in founders:
+        t.start()
+
+    # The rescuer joins while the soak is running. max_slots=0 means it
+    # claims no founding slots at all — its only job is the adoption sweep:
+    # wait for leases to lapse, CAS each one at epoch+1, resume the node
+    # from latest/, and deposit the missing results.
+    time.sleep(1.0)
+    print("rescuer joining the running soak (max_slots=0, adoption only)...")
+    rescue = run_worker(store, worker_id="rescuer", max_slots=0)
+    for t in founders:
+        t.join(timeout=30.0)
+
+    control = control_folder(store)
+    report = assemble_report(control, read_spec(control))
+    print()
+    print(report.summary())
+    if rescue.adoptions:
+        print(f"  rescuer adopted: {sorted(rescue.adoptions)}")
+    else:
+        print("  (the surviving founder won the adoption race this run — "
+              "adoption is a CAS, any live worker may win)")
+    for node, latency in sorted(report.adoption_latency.items()):
+        print(f"  {node}: lease lapsed -> adopted push in {latency:.2f}s")
+    raise SystemExit(0 if report.passed else 1)
+
+
+if __name__ == "__main__":
+    main()

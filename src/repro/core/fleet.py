@@ -23,6 +23,17 @@ The moving parts:
   deposits heartbeat + result blobs. A restarted worker (same ``worker_id``)
   reclaims its own slots.
 
+* **Leases + crash adoption** — slot claims are not permanent: each claim is
+  a lease blob (``fleet/lease/<node>/<epoch>``) whose deadline a background
+  :class:`_LeaseKeeper` refreshes while its worker lives. A claim is valid
+  only while its lease is fresh. When a *worker* dies (not just a node), its
+  leases silently expire, and any surviving worker's adoption sweep
+  re-claims the stranded slot via ``put_if_absent`` on the **next** lease
+  epoch — CAS-by-key, so exactly one adopter wins by construction — then
+  resumes the node from its own ``latest/`` blob. Updates pushed by adopted
+  nodes carry their lease epoch in the wire meta, which FedAsync's epoch-gap
+  discount uses to keep resurrected stragglers from yanking consensus.
+
 * **Chaos engine** — extends ``kill_after`` into a *seeded, randomized
   schedule* derived deterministically from ``(seed, node_id)``: victims park
   mid-round after a drawn number of federation pushes, the worker SIGKILLs
@@ -30,7 +41,11 @@ The moving parts:
   respawns them after ``restart_after`` — the reborn node must *resume*
   (counter, params, strategy state) from its own deposits. Stall events make
   drawn nodes sleep mid-soak (the slow-node/straggler case async federation
-  must absorb).
+  must absorb). ``ChaosSpec.kill_workers`` escalates to *worker-level* chaos:
+  victim workers drawn deterministically from ``(seed, worker_id)`` die whole
+  (SIGKILL of the worker process and its node children under the process
+  runner; an abort that strands every client mid-round under the thread
+  runner), exercising the lease-expiry → adoption path end-to-end.
 
 * **SoakReport** (``repro.fleet watch`` / ``report``, or any worker) —
   assembled purely from the folder: rounds completed per node, crashes
@@ -45,6 +60,8 @@ from __future__ import annotations
 
 import hashlib
 import json
+import os
+import signal
 import threading
 import time
 import uuid
@@ -67,7 +84,8 @@ _log = get_logger("fleet")
 
 FLEET_PREFIX = "fleet/"
 SPEC_KEY = "fleet/spec"
-_CLAIM_PREFIX = "fleet/claim/"
+_CLAIM_PREFIX = "fleet/claim/"  # legacy permanent claims (read-compat only)
+_LEASE_PREFIX = "fleet/lease/"
 _HEARTBEAT_PREFIX = "fleet/heartbeat/"
 _RESULT_PREFIX = "fleet/result/"
 _WORKER_PREFIX = "fleet/worker/"
@@ -92,17 +110,20 @@ class ChaosSpec:
     stalls: int = 0                # distinct slow-node stall victims
     stall_after: tuple = (1, 3)    # stall after U[a,b] pushes
     stall_duration: float = 1.0
+    kill_workers: int = 0          # whole-WORKER kill victims (lease adoption)
+    kill_workers_after: tuple = (1, 3)  # fire once a victim's node pushed U[a,b]
 
     def to_dict(self) -> dict:
         d = asdict(self)
         d["park_after"] = list(self.park_after)
         d["stall_after"] = list(self.stall_after)
+        d["kill_workers_after"] = list(self.kill_workers_after)
         return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "ChaosSpec":
         d = dict(d)
-        for key in ("park_after", "stall_after"):
+        for key in ("park_after", "stall_after", "kill_workers_after"):
             if key in d:
                 d[key] = tuple(int(v) for v in d[key])
         return cls(**d)
@@ -126,6 +147,7 @@ class FleetSpec:
     settle: float = 1.0            # quiescence wait before the fleet hash
     result_timeout: float = 180.0  # how long a worker waits for ALL fleet results
     node_prefix: str = "node"
+    lease_ttl: float = 15.0        # slot-lease freshness horizon (store clock domain)
     chaos: ChaosSpec = field(default_factory=ChaosSpec)
 
     def __post_init__(self) -> None:
@@ -139,8 +161,15 @@ class FleetSpec:
             raise ValueError(f"runner must be 'process' or 'thread', got {self.runner!r}")
         if self.param_size < 1:
             raise ValueError(f"param_size must be >= 1, got {self.param_size}")
-        if self.chaos.kills < 0 or self.chaos.stalls < 0:
-            raise ValueError("chaos.kills / chaos.stalls must be >= 0")
+        if self.lease_ttl <= 0:
+            raise ValueError(f"lease_ttl must be > 0, got {self.lease_ttl}")
+        if self.chaos.kills < 0 or self.chaos.stalls < 0 or self.chaos.kill_workers < 0:
+            raise ValueError(
+                "chaos.kills / chaos.stalls / chaos.kill_workers must be >= 0")
+        if self.chaos.kill_workers and self.rounds < 2:
+            raise ValueError("worker-kill chaos needs rounds >= 2 (a victim's "
+                             "node must push at least once before its worker "
+                             "dies, so the adopter has a blob to resume from)")
         if self.chaos.kills + self.chaos.stalls > self.num_nodes:
             raise ValueError(
                 f"chaos victims ({self.chaos.kills} kills + {self.chaos.stalls} "
@@ -289,33 +318,198 @@ def claim_key(slot: int) -> str:
     return f"{_CLAIM_PREFIX}{slot:04d}"
 
 
-def claim_slots(control: SharedFolder, spec: FleetSpec, worker_id: str, *,
-                max_slots: int | None = None) -> list[int]:
-    """Claim up to ``max_slots`` node slots for ``worker_id`` via atomic
-    ``put_if_absent`` writes — concurrent workers partition the fleet with no
-    messages between them. A worker restarting under the same id reclaims the
-    slots it already owns (its previous claim blobs name it)."""
-    mine: list[int] = []
+# -- leased slot claims -------------------------------------------------------
+#
+# A slot claim is a *lease*: ``fleet/lease/<node>/<epoch>`` carries the owning
+# worker, the lease epoch, and a deadline in the store's wall-clock domain
+# that the owner's _LeaseKeeper refreshes while it lives. Epoch keys are
+# write-once (put_if_absent / link(2)), so contention — the initial claim race
+# at epoch 0, and every adoption race at epoch N+1 — is CAS-by-key with
+# exactly one winner by construction. Epochs only move forward: a worker that
+# observes an expired lease adopts the slot by winning the NEXT epoch's key,
+# and the stale epoch keys are garbage-collected by the winner. Ownership of
+# a slot is therefore: "holder of the freshest epoch key, while fresh".
+
+
+def lease_key(node_id: str, epoch: int) -> str:
+    return f"{_LEASE_PREFIX}{node_id}/{epoch:06d}"
+
+
+def _parse_lease_key(key: str) -> tuple[str, int] | None:
+    if not key.startswith(_LEASE_PREFIX):
+        return None
+    node_id, _, tail = key[len(_LEASE_PREFIX):].rpartition("/")
+    if not node_id or not tail.isdigit():
+        return None
+    return node_id, int(tail)
+
+
+def _lease_blob(spec: FleetSpec, worker_id: str, slot: int, epoch: int) -> bytes:
+    now = time.time()
+    return serialize_fleet_blob("lease", {
+        "worker": worker_id, "slot": slot, "node_id": spec.node_id(slot),
+        "epoch": epoch, "deadline": now + spec.lease_ttl, "time": now})
+
+
+def lease_fresh(payload: dict, now: float | None = None) -> bool:
+    """A lease is valid only while its heartbeat-refreshed deadline has not
+    lapsed. Deadlines live in the store's wall-clock domain (every worker
+    reads the same mount, so ``time.time()`` skew between hosts must stay
+    well under ``lease_ttl`` — the same assumption NFS lock daemons make)."""
+    return float(payload.get("deadline", 0.0)) >= (
+        time.time() if now is None else now)
+
+
+def read_lease_index(control: SharedFolder) -> dict[str, tuple[int, dict | None]]:
+    """node id -> (freshest lease epoch, its payload — None if unreadable)."""
+    freshest: dict[str, int] = {}
+    for key in control.keys():
+        parsed = _parse_lease_key(key)
+        if parsed is None:
+            continue
+        nid, epoch = parsed
+        if epoch > freshest.get(nid, -1):
+            freshest[nid] = epoch
+    return {nid: (epoch, _read_fleet_blob(control, lease_key(nid, epoch)))
+            for nid, epoch in freshest.items()}
+
+
+def _gc_stale_leases(control: SharedFolder, node_id: str, below_epoch: int) -> None:
+    """Delete superseded lease epochs for ``node_id`` — except epoch 0, which
+    is the permanent founding-roster record (worker-kill victim ranking and
+    the report's ``workers_lost`` are both computed from epoch-0 payloads)."""
+    for key in control.keys():
+        parsed = _parse_lease_key(key)
+        if parsed is not None and parsed[0] == node_id and 0 < parsed[1] < below_epoch:
+            control.delete(key)
+
+
+def try_adopt(control: SharedFolder, spec: FleetSpec, worker_id: str,
+              node_id: str, slot: int, epoch: int) -> bool:
+    """CAS-claim ``node_id`` at lease ``epoch`` (the expired lease's epoch
+    + 1). Racing adopters all target the same write-once key, so exactly one
+    wins; the winner GCs the superseded epoch keys. True iff we adopted."""
+    won = control.put_if_absent(
+        lease_key(node_id, epoch), _lease_blob(spec, worker_id, slot, epoch))
+    if won:
+        _gc_stale_leases(control, node_id, epoch)
+        _log.info("worker %s: adopted %s at lease epoch %d", worker_id,
+                  node_id, epoch)
+    return won
+
+
+def claim_leases(control: SharedFolder, spec: FleetSpec, worker_id: str, *,
+                 max_slots: int | None = None) -> dict[int, int]:
+    """Claim up to ``max_slots`` node slots for ``worker_id``; returns
+    slot -> lease epoch claimed at. Unleased slots are claimed at epoch 0;
+    a worker restarting under the same id re-validates its own fresh leases;
+    expired leases (own or foreign) are adopted at the next epoch. Slots
+    under a *fresh* foreign lease are never touched — concurrent workers
+    partition the fleet with no messages between them."""
+    mine: dict[int, int] = {}
+    index = read_lease_index(control)
     for slot in range(spec.num_nodes):
         if max_slots is not None and len(mine) >= max_slots:
             break
-        key = claim_key(slot)
-        blob = serialize_fleet_blob("claim", {
-            "worker": worker_id, "slot": slot,
-            "node_id": spec.node_id(slot), "time": time.time()})
-        if control.put_if_absent(key, blob):
-            mine.append(slot)
+        nid = spec.node_id(slot)
+        have = index.get(nid)
+        if have is None:
+            if control.put_if_absent(
+                    lease_key(nid, 0), _lease_blob(spec, worker_id, slot, 0)):
+                mine[slot] = 0
+                continue
+            # lost the epoch-0 race; the winner's blob is visible now
+            have = (0, _read_fleet_blob(control, lease_key(nid, 0)))
+        epoch, payload = have
+        if payload is None:
             continue
-        existing = control.get(key)
-        if existing is None:
-            continue
-        try:
-            _kind, payload = deserialize_fleet_blob(existing)
-        except (ValueError, KeyError):
-            continue
-        if payload.get("worker") == worker_id:
-            mine.append(slot)  # our own claim, from a previous incarnation
+        now = time.time()
+        if payload.get("worker") == worker_id and lease_fresh(payload, now):
+            # ours (a previous incarnation under this id): refresh and keep.
+            # Only the owner ever rewrites a live epoch key, so this plain
+            # put races nobody.
+            control.put(lease_key(nid, epoch),
+                        _lease_blob(spec, worker_id, slot, epoch))
+            mine[slot] = epoch
+        elif not lease_fresh(payload, now):
+            # expired — even if it was ours: adopt at the next epoch so a
+            # concurrent adopter and we cannot both think we own it
+            if try_adopt(control, spec, worker_id, nid, slot, epoch + 1):
+                mine[slot] = epoch + 1
     return mine
+
+
+def claim_slots(control: SharedFolder, spec: FleetSpec, worker_id: str, *,
+                max_slots: int | None = None) -> list[int]:
+    """Lease-based slot claim (see :func:`claim_leases`); returns the claimed
+    slot numbers, sorted."""
+    return sorted(claim_leases(control, spec, worker_id, max_slots=max_slots))
+
+
+class _LeaseKeeper:
+    """One per worker: refreshes every owned lease at ``lease_ttl / 3`` so
+    ownership survives exactly as long as the worker does. Worker death —
+    SIGKILL, OOM, power loss — needs no cleanup path: the keeper dies with
+    the process, the leases lapse, and survivors adopt. ``stop()`` is for
+    *simulated* death (thread-runner worker-kill chaos) and orderly exits."""
+
+    def __init__(self, control: SharedFolder, spec: FleetSpec, worker_id: str):
+        self._control = control
+        self._spec = spec
+        self._worker_id = worker_id
+        self._owned: dict[str, tuple[int, int]] = {}  # node -> (slot, epoch)
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    def add(self, node_id: str, slot: int, epoch: int) -> None:
+        with self._lock:
+            self._owned[node_id] = (slot, epoch)
+
+    def drop(self, node_id: str) -> None:
+        with self._lock:
+            self._owned.pop(node_id, None)
+
+    def owns(self, node_id: str) -> bool:
+        with self._lock:
+            return node_id in self._owned
+
+    def owned(self) -> dict[str, tuple[int, int]]:
+        with self._lock:
+            return dict(self._owned)
+
+    def epoch_of(self, node_id: str) -> int:
+        with self._lock:
+            entry = self._owned.get(node_id)
+        return entry[1] if entry is not None else 0
+
+    def refresh_now(self) -> None:
+        for nid, (slot, epoch) in self.owned().items():
+            try:
+                self._control.put(
+                    lease_key(nid, epoch),
+                    _lease_blob(self._spec, self._worker_id, slot, epoch))
+            except Exception:
+                _log.debug("worker %s: lease refresh of %s failed",
+                           self._worker_id, nid, exc_info=True)
+
+    def start(self) -> None:
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._run, daemon=True,
+                name=f"lease-keeper-{self._worker_id}")
+            self._thread.start()
+
+    def _run(self) -> None:
+        interval = max(0.05, self._spec.lease_ttl / 3.0)
+        while not self._stop.wait(interval):
+            self.refresh_now()
+
+    def stop(self) -> None:
+        self._stop.set()
+        t = self._thread
+        if t is not None:
+            t.join(timeout=2.0)
 
 
 def _heartbeat(control: SharedFolder, node_id: str, payload: dict) -> None:
@@ -334,6 +528,137 @@ def _read_fleet_blob(control: SharedFolder, key: str) -> dict | None:
 
 
 # --------------------------------------------------------------------------
+# Worker-level chaos: seeded whole-worker kills
+# --------------------------------------------------------------------------
+
+
+def founding_workers(control: SharedFolder) -> list[str]:
+    """The workers holding epoch-0 leases — the roster worker-kill chaos
+    draws its victims from. Epoch 0 never changes after the initial claims,
+    so every host derives the same set (late joiners and adopters hold only
+    higher epochs and are never victims)."""
+    out: set[str] = set()
+    for key in control.keys():
+        parsed = _parse_lease_key(key)
+        if parsed is not None and parsed[1] == 0:
+            payload = _read_fleet_blob(control, key)
+            if payload is not None and payload.get("worker") is not None:
+                out.add(str(payload["worker"]))
+    return sorted(out)
+
+
+def worker_kill_victims(control: SharedFolder, chaos: ChaosSpec) -> list[str]:
+    """The ``chaos.kill_workers`` victim worker ids, deterministically from
+    ``(seed, worker_id)``: rank founding workers by a seeded hash, take the
+    first N. Any host computes the same list from the store alone."""
+    if chaos.kill_workers < 1:
+        return []
+    ranked = sorted(
+        founding_workers(control),
+        key=lambda w: hashlib.sha256(
+            f"{chaos.seed}:workerkill:{w}".encode()).hexdigest())
+    return ranked[:chaos.kill_workers]
+
+
+class _KillSwitch:
+    """Executes ``ChaosSpec.kill_workers`` against the worker it lives in.
+
+    Waits until the whole fleet is claimed (the victim rank must be computed
+    over the complete founding roster on every host), checks whether this
+    worker is drawn, then fires once one of its nodes has pushed a seeded
+    number of times — i.e. mid-soak, while other nodes are still mid-round,
+    so slots are genuinely stranded.
+
+    Firing in ``sigkill`` mode (the CLI worker — a real OS process) SIGKILLs
+    the supervised node children and then the worker process itself: no
+    cleanup, no lease release, exactly a host loss. ``simulate`` mode (for
+    in-process workers sharing a test/benchmark process) stops the lease
+    keeper, aborts the clients, and makes ``run_worker`` return without a
+    results-wait or worker blob — the same observable store state as a real
+    death, minus the signal.
+    """
+
+    def __init__(self, control: SharedFolder, spec: FleetSpec, worker_id: str,
+                 slots: list[int], keeper: _LeaseKeeper, *,
+                 mode: str = "simulate"):
+        if mode not in ("simulate", "sigkill", "off"):
+            raise ValueError(f"unknown worker-kill mode {mode!r}")
+        self._control = control
+        self._spec = spec
+        self._worker_id = worker_id
+        self._slots = list(slots)
+        self._keeper = keeper
+        self.mode = mode
+        self.fired = False
+        self.abort = threading.Event()  # thread-runner clients watch this
+        self._halt = threading.Event()  # stops the watcher without aborting
+        self._reaper: Callable[[], None] | None = None
+        self._thread: threading.Thread | None = None
+
+    def set_reaper(self, fn: Callable[[], None]) -> None:
+        """Runner hook that SIGKILLs/aborts this worker's node children when
+        the switch fires — a dead worker takes its children with it."""
+        self._reaper = fn
+
+    def start(self) -> None:
+        if (self._spec.chaos.kill_workers < 1 or self.mode == "off"
+                or not self._slots):
+            return
+        self._thread = threading.Thread(
+            target=self._run, daemon=True,
+            name=f"kill-switch-{self._worker_id}")
+        self._thread.start()
+
+    def _run(self) -> None:
+        spec, chaos = self._spec, self._spec.chaos
+        deadline = time.monotonic() + default_worker_timeout(spec)
+        while not self._halt.is_set():
+            if len(read_lease_index(self._control)) >= spec.num_nodes:
+                break
+            if time.monotonic() >= deadline:
+                return  # fleet never fully claimed: worker-kill chaos forfeits
+            time.sleep(0.05)
+        if self._worker_id not in worker_kill_victims(self._control, chaos):
+            return
+        r = _node_rng(chaos.seed, f"worker:{self._worker_id}")
+        lo, hi = chaos.kill_workers_after
+        threshold = max(1, min(int(r.integers(min(lo, hi), max(lo, hi) + 1)),
+                               spec.rounds - 1))
+        nids = [spec.node_id(s) for s in self._slots]
+        while not self._halt.is_set() and time.monotonic() < deadline:
+            for nid in nids:
+                hb = _read_fleet_blob(
+                    self._control, f"{_HEARTBEAT_PREFIX}{nid}")
+                if hb is not None and int(hb.get("pushes", 0)) >= threshold:
+                    self.fire()
+                    return
+            time.sleep(0.05)
+
+    def fire(self) -> None:
+        _log.warning("worker %s: worker-kill chaos firing (%s mode)",
+                     self._worker_id, self.mode)
+        self.fired = True
+        self._halt.set()
+        self._keeper.stop()  # death means silence: leases must lapse
+        self.abort.set()
+        reaper = self._reaper
+        if reaper is not None:
+            try:
+                reaper()
+            except Exception:
+                _log.debug("worker %s: reaper failed", self._worker_id,
+                           exc_info=True)
+        if self.mode == "sigkill":
+            os.kill(os.getpid(), signal.SIGKILL)
+
+    def stop(self) -> None:
+        self._halt.set()
+        t = self._thread
+        if t is not None:
+            t.join(timeout=2.0)
+
+
+# --------------------------------------------------------------------------
 # The soak client (module-level: spawn must pickle it)
 # --------------------------------------------------------------------------
 
@@ -343,14 +668,28 @@ class _SimulatedCrash(RuntimeError):
     without depositing a result; the worker restarts it with resume."""
 
 
+class _WorkerAborted(RuntimeError):
+    """Thread-runner stand-in for whole-worker death: the client aborts
+    mid-round with no result and is NOT restarted by its own worker — a
+    surviving worker must adopt the stranded slot."""
+
+
 def _soak_client(spec_dict: dict, slot: int, *, park_after_pushes: int | None = None,
                  stall_after: int | None = None, stall_duration: float = 0.0,
-                 crash_mode: str = "sigkill") -> dict:
+                 crash_mode: str = "sigkill", adopted_epoch: int = 0,
+                 abort_event: "threading.Event | None" = None) -> dict:
     """One fleet node: quadratic consensus training federated through the
     spec's store. Pushes a heartbeat every federation step (via the node's
     ``on_step`` hook), deposits its result blob itself on completion — the
     worker never relays data — and, as a chaos victim, parks mid-round after
-    ``park_after_pushes`` pushes so the SIGKILL lands deterministically."""
+    ``park_after_pushes`` pushes so the SIGKILL lands deterministically.
+
+    A nonzero ``adopted_epoch`` means this run is a surviving worker resuming
+    a slot stranded by worker death: the node stamps the lease epoch into its
+    wire updates (FedAsync's epoch-gap discount reads it back) and counts
+    the adoption in telemetry. ``abort_event`` (thread runner only) is the
+    worker-kill switch: when set, the client dies mid-round exactly as its
+    host would."""
     spec = FleetSpec.from_dict(spec_dict)
     node_id = spec.node_id(slot)
     control = control_folder(spec.store_uri)
@@ -361,6 +700,10 @@ def _soak_client(spec_dict: dict, slot: int, *, park_after_pushes: int | None = 
     # each round (flush_every=1 — soak rounds are few and blobs tiny), which
     # is what SoakReport's telemetry rollups and `repro.obs` read back.
     tel = Telemetry(node_id, enabled=True, flush_every=1)
+    adopted = adopted_epoch > 0
+    if adopted:
+        tel.count("node.adopted")
+        tel.count("node.lease_epoch", adopted_epoch)
 
     def on_step(node, _aggregated) -> None:
         if state["first_push"] is None:
@@ -371,12 +714,13 @@ def _soak_client(spec_dict: dict, slot: int, *, park_after_pushes: int | None = 
             "node_id": node_id, "slot": slot, "counter": node.counter,
             "pushes": node.num_pushes, "status": "running",
             "resumed": node.resumed is not None, "time": time.time(),
+            "adopted": adopted, "lease_epoch": adopted_epoch,
             "obs": tel.brief()})
 
     node = AsyncFederatedNode(
         strategy=get_strategy(spec.strategy), shared_folder=data,
         node_id=node_id, transport=spec.transport, on_step=on_step,
-        telemetry=tel)
+        telemetry=tel, lease_epoch=adopted_epoch)
     resumed = node.resumed is not None
     start_counter = node.counter
     if resumed:
@@ -386,6 +730,8 @@ def _soak_client(spec_dict: dict, slot: int, *, park_after_pushes: int | None = 
     target = np.float32(spec.target_of(slot))
 
     while node.counter < spec.rounds:
+        if abort_event is not None and abort_event.is_set():
+            raise _WorkerAborted(node_id)  # the host died under us
         w = w + np.float32(0.3) * (target - w)  # local "training"
         aggregated = node.update_parameters({"w": w}, num_examples=1 + slot % 5)
         if aggregated is not None:
@@ -412,12 +758,14 @@ def _soak_client(spec_dict: dict, slot: int, *, park_after_pushes: int | None = 
         "first_push_unix": state["first_push"],
         "finished_unix": time.time(),
         "params_l2": float(np.linalg.norm(w)),
+        "adopted": adopted, "lease_epoch": adopted_epoch,
         "transport_stats": dict(node.transport_stats()),
     }
     control.put(f"{_RESULT_PREFIX}{node_id}", serialize_fleet_blob("result", result))
     _heartbeat(control, node_id, {
         "node_id": node_id, "slot": slot, "counter": node.counter,
         "pushes": node.num_pushes, "status": "done", "resumed": resumed,
+        "adopted": adopted, "lease_epoch": adopted_epoch,
         "time": time.time()})
     return result
 
@@ -438,13 +786,17 @@ class WorkerReport:
     wall_seconds: float = 0.0
     recoveries: dict = field(default_factory=dict)  # node -> SIGKILL→first-push s
     results: dict = field(default_factory=dict)     # node -> result payload
+    adoptions: dict = field(default_factory=dict)   # node -> lease-lapse→adopt s
+    killed: bool = False                            # worker-kill chaos fired here
 
 
 def default_worker_timeout(spec: FleetSpec) -> float:
     """Generous bound on one worker's run phase: startup + rounds + chaos."""
     per_round = spec.round_sleep + 1.0
     chaos = spec.chaos.kill_grace + spec.chaos.restart_after if spec.chaos.kills else 0.0
-    return 120.0 + spec.rounds * per_round + chaos + spec.chaos.stalls * spec.chaos.stall_duration
+    churn = spec.lease_ttl * 4 if spec.chaos.kill_workers else 0.0
+    return (120.0 + spec.rounds * per_round + chaos + churn
+            + spec.chaos.stalls * spec.chaos.stall_duration)
 
 
 def fleet_state_hash(spec_or_uri: "FleetSpec | str") -> str:
@@ -479,12 +831,19 @@ def wait_all_results(control: SharedFolder, spec: FleetSpec, *,
 def run_worker(store_uri: str | None = None, *, spec: FleetSpec | None = None,
                worker_id: str | None = None, max_slots: int | None = None,
                timeout: float | None = None, spec_timeout: float = 60.0,
-               control: SharedFolder | None = None) -> WorkerReport:
-    """One host's whole contribution to the soak: read the spec, claim slots,
-    run + chaos the claimed nodes, wait for fleet-wide quiescence, compute
-    the fleet state hash independently, deposit the worker report. Run this
-    once per host (``python -m repro.fleet worker``); no invocation is
-    special — the fleet has no parent."""
+               control: SharedFolder | None = None,
+               worker_kill_mode: str = "simulate") -> WorkerReport:
+    """One host's whole contribution to the soak: read the spec, claim slot
+    leases, run + chaos the claimed nodes (keeping the leases fresh and
+    adopting any slots stranded by a dead worker), wait for fleet-wide
+    quiescence, compute the fleet state hash independently, deposit the
+    worker report. Run this once per host (``python -m repro.fleet worker``);
+    no invocation is special — the fleet has no parent.
+
+    ``worker_kill_mode`` controls how worker-kill chaos lands on a drawn
+    victim: ``"sigkill"`` (the CLI — this worker is its own OS process)
+    really SIGKILLs; ``"simulate"`` (in-process workers) aborts the clients
+    and returns early without a report; ``"off"`` makes this worker immune."""
     if control is None:
         if store_uri is None:
             if spec is None:
@@ -497,12 +856,31 @@ def run_worker(store_uri: str | None = None, *, spec: FleetSpec | None = None,
     if timeout is None:
         timeout = default_worker_timeout(spec)
     t0 = time.time()
-    slots = claim_slots(control, spec, worker_id, max_slots=max_slots)
+    claims = claim_leases(control, spec, worker_id, max_slots=max_slots)
+    slots = sorted(claims)
     _log.info("worker %s: claimed slots %s of fleet %r (%s runner)",
               worker_id, slots, spec.name, spec.runner)
-    schedule = chaos_schedule(spec)
-    runner = _run_slots_threaded if spec.runner == "thread" else _run_slots_processes
-    report = runner(control, spec, worker_id, slots, schedule, timeout)
+    keeper = _LeaseKeeper(control, spec, worker_id)
+    for slot, epoch in claims.items():
+        keeper.add(spec.node_id(slot), slot, epoch)
+    keeper.start()
+    switch = _KillSwitch(control, spec, worker_id, slots, keeper,
+                         mode=worker_kill_mode)
+    switch.start()
+    try:
+        schedule = chaos_schedule(spec)
+        runner = (_run_slots_threaded if spec.runner == "thread"
+                  else _run_slots_processes)
+        report = runner(control, spec, worker_id, claims, schedule, timeout,
+                        keeper=keeper, switch=switch)
+    finally:
+        switch.stop()
+    if switch.fired:
+        # This worker is "dead": no results wait, no hash, no worker blob —
+        # its silence (and lapsing leases) IS the signal survivors act on.
+        report.killed = True
+        report.wall_seconds = time.time() - t0
+        return report
     # Global quiescence, then the fleet-wide hash every worker must agree on.
     report.all_results_seen = wait_all_results(control, spec, timeout=spec.result_timeout)
     if not report.all_results_seen:
@@ -511,14 +889,16 @@ def run_worker(store_uri: str | None = None, *, spec: FleetSpec | None = None,
     time.sleep(spec.settle)
     report.fleet_state_hash = fleet_state_hash(spec)
     report.wall_seconds = time.time() - t0
+    keeper.stop()
     control.put(f"{_WORKER_PREFIX}{worker_id}", serialize_fleet_blob("worker", {
-        "worker": worker_id, "slots": list(slots),
+        "worker": worker_id, "slots": list(report.slots),
         "crashes_injected": report.crashes_injected,
         "restarts": report.restarts,
         "fleet_state_hash": report.fleet_state_hash,
         "all_results_seen": report.all_results_seen,
         "wall_seconds": report.wall_seconds,
         "recoveries": dict(report.recoveries),
+        "adoptions": dict(report.adoptions),
         "time": time.time()}))
     return report
 
@@ -534,20 +914,56 @@ def _chaos_kwargs(events: list[ChaosEvent]) -> dict:
     return kwargs
 
 
+def _stray_leases(control: SharedFolder, spec: FleetSpec,
+                  keeper: _LeaseKeeper) -> list[tuple[str, int, int, float]]:
+    """Slots stranded by a dead worker, as seen from this worker: the lease
+    is not ours, not fresh, and the node has no result blob yet. Returns
+    ``(node_id, slot, lapsed_epoch, lapsed_deadline)`` per stray."""
+    out: list[tuple[str, int, int, float]] = []
+    for nid, (epoch, payload) in read_lease_index(control).items():
+        if payload is None or keeper.owns(nid) or lease_fresh(payload):
+            continue
+        if control.get(f"{_RESULT_PREFIX}{nid}") is not None:
+            continue  # finished before its worker died: nothing to adopt
+        try:
+            slot = int(payload["slot"])
+        except (KeyError, TypeError, ValueError):
+            continue
+        if not 0 <= slot < spec.num_nodes or spec.node_id(slot) != nid:
+            continue
+        out.append((nid, slot, epoch, float(payload.get("deadline", 0.0))))
+    return out
+
+
 def _run_slots_processes(control: SharedFolder, spec: FleetSpec, worker_id: str,
-                         slots: list[int], schedule: dict[str, list[ChaosEvent]],
-                         timeout: float) -> WorkerReport:
+                         claims: dict[int, int],
+                         schedule: dict[str, list[ChaosEvent]],
+                         timeout: float, *, keeper: _LeaseKeeper,
+                         switch: _KillSwitch) -> WorkerReport:
     """Run the claimed slots as real OS processes under a ProcessSupervisor,
     injecting this worker's share of the chaos schedule: SIGKILL a victim the
     moment its parked heartbeat lands (backstop timer otherwise), respawn it
-    after the scheduled delay — the respawn must resume, not restart."""
+    after the scheduled delay — the respawn must resume, not restart. Between
+    polls the worker sweeps for leases stranded by a *dead worker* and adopts
+    them: CAS the next lease epoch, then spawn the node here with resume."""
+    slots = sorted(claims)
     report = WorkerReport(worker_id, list(slots))
     sup = ProcessSupervisor()
     spec_dict = spec.to_dict()
     slot_of = {spec.node_id(s): s for s in slots}
+    # A dead worker takes its children with it: when the kill switch fires it
+    # SIGKILLs every supervised node first, then this process. Otherwise the
+    # orphaned children would finish and deposit results, and the stranded
+    # slots the survivors must adopt would never exist.
+    switch.set_reaper(lambda: [_safe_kill(sup, n) for n in list(slot_of)])
     kill_events: dict[str, ChaosEvent] = {}
     killed_at: dict[str, float] = {}
+    adopt_at: dict[str, float] = {}
     restart_due: dict[str, float] = {}
+    adopt_every = max(0.5, spec.lease_ttl / 2)
+    next_adopt_scan = time.monotonic() + adopt_every
+    results_deadline: float | None = None
+    want_results = spec.chaos.kill_workers > 0
     try:
         for slot in slots:
             nid = spec.node_id(slot)
@@ -560,19 +976,39 @@ def _run_slots_processes(control: SharedFolder, spec: FleetSpec, worker_id: str,
                 # other way, wedged before parking), SIGKILL anyway
                 sup.schedule_kill(nid, spec.chaos.kill_grace)
         deadline = time.monotonic() + timeout
-        while (sup.unsettled() or restart_due) and time.monotonic() < deadline:
+        while time.monotonic() < deadline:
+            if switch.fired:
+                return report  # this worker is dead; the reaper ran already
             for nid in list(kill_events):
+                if control.get(f"{_RESULT_PREFIX}{nid}") is not None:
+                    # Clean finish before the chaos landed (e.g. resumed past
+                    # its rounds): disarm the backstop — a spurious SIGKILL
+                    # after the result blob would count a crash that never
+                    # happened and restart a node that already finished.
+                    kill_events.pop(nid)
+                    sup.cancel_scheduled_kills(nid)
+                    _log.info("worker %s: %s finished before chaos; backstop "
+                              "disarmed", worker_id, nid)
+                    continue
                 hb = _read_fleet_blob(control, f"{_HEARTBEAT_PREFIX}{nid}")
                 if hb is not None and hb.get("status") == "parked":
                     sup.kill(nid)  # mid-round, deterministically
             for nid in sup.poll():
                 kill = kill_events.pop(nid, None)
-                if kill is not None:  # the victim settled by dying
-                    _log.info("worker %s: chaos SIGKILL landed on %s",
+                if kill is None:
+                    continue
+                if control.get(f"{_RESULT_PREFIX}{nid}") is not None:
+                    # Settled *cleanly* between the last scan and the backstop
+                    # firing — that's a finish, not a crash.
+                    sup.cancel_scheduled_kills(nid)
+                    _log.info("worker %s: %s settled cleanly; not a crash",
                               worker_id, nid)
-                    killed_at[nid] = time.time()
-                    report.crashes_injected += 1
-                    restart_due[nid] = time.monotonic() + kill.restart_after
+                    continue
+                _log.info("worker %s: chaos SIGKILL landed on %s",
+                          worker_id, nid)
+                killed_at[nid] = time.time()
+                report.crashes_injected += 1
+                restart_due[nid] = time.monotonic() + kill.restart_after
             now = time.monotonic()
             for nid, due in list(restart_due.items()):
                 if now >= due:
@@ -583,43 +1019,89 @@ def _run_slots_processes(control: SharedFolder, spec: FleetSpec, worker_id: str,
                               worker_id, nid)
                     sup.spawn(nid, _soak_client, (spec_dict, slot_of[nid]), {})
                     report.restarts += 1
+            if spec.chaos.kill_workers and now >= next_adopt_scan:
+                next_adopt_scan = now + adopt_every
+                for nid, slot, epoch, lapsed in _stray_leases(control, spec, keeper):
+                    if not try_adopt(control, spec, worker_id, nid, slot,
+                                     epoch + 1):
+                        continue  # another survivor won the CAS
+                    keeper.add(nid, slot, epoch + 1)
+                    slot_of[nid] = slot
+                    report.adoptions[nid] = max(0.0, time.time() - lapsed)
+                    adopt_at[nid] = time.time()
+                    sup.spawn(nid, _soak_client, (spec_dict, slot),
+                              {"adopted_epoch": epoch + 1})
+            own_done = not sup.unsettled() and not restart_due
+            if own_done:
+                if not want_results:
+                    break
+                # Churn soaks linger briefly after their own slots finish so
+                # a lease stranded by a late worker death still gets adopted.
+                if results_deadline is None:
+                    results_deadline = time.monotonic() + spec.result_timeout
+                have = {k[len(_RESULT_PREFIX):] for k in control.keys()
+                        if k.startswith(_RESULT_PREFIX)}
+                if set(spec.node_ids()) <= have or time.monotonic() >= results_deadline:
+                    break
+            else:
+                results_deadline = None
             time.sleep(0.05)
         sup.join(max(0.0, deadline - time.monotonic()))
     finally:
         sup.shutdown()
-    for slot in slots:
-        nid = spec.node_id(slot)
+    for nid in slot_of:
         res = sup.result(nid)
-        if res.error is None and isinstance(res.result, dict):
+        if res is not None and res.error is None and isinstance(res.result, dict):
             report.results[nid] = res.result
-    for nid, t_kill in killed_at.items():
+    for nid, t_evt in {**killed_at, **adopt_at}.items():
         first_push = (report.results.get(nid) or {}).get("first_push_unix")
         if first_push:
-            report.recoveries[nid] = max(0.0, first_push - t_kill)
+            report.recoveries[nid] = max(0.0, first_push - t_evt)
     return report
 
 
+def _safe_kill(sup: ProcessSupervisor, name: str) -> None:
+    try:
+        sup.kill(name)
+    except Exception:
+        pass  # the reaper runs during worker death; best-effort only
+
+
 def _run_slots_threaded(control: SharedFolder, spec: FleetSpec, worker_id: str,
-                        slots: list[int], schedule: dict[str, list[ChaosEvent]],
-                        timeout: float) -> WorkerReport:
+                        claims: dict[int, int],
+                        schedule: dict[str, list[ChaosEvent]],
+                        timeout: float, *, keeper: _LeaseKeeper,
+                        switch: _KillSwitch) -> WorkerReport:
     """Thread runner for in-process soaks (the 10²-node benchmark regime,
     where an OS process per node would be interpreter-startup-bound). Chaos
     kills become mid-round exceptions that abort the client without a result
     deposit — same observable contract as a SIGKILL minus the signal — and
-    the restarted client must resume exactly as in process mode."""
+    the restarted client must resume exactly as in process mode. Worker-kill
+    chaos becomes the switch's abort event: every client of a drawn worker
+    raises mid-round and is NOT restarted here, stranding its lease for a
+    surviving worker's adoption sweep."""
+    slots = sorted(claims)
     report = WorkerReport(worker_id, list(slots))
     spec_dict = spec.to_dict()
     lock = threading.Lock()
     killed_at: dict[str, float] = {}
+    adopt_at: dict[str, float] = {}
+    threads: list[threading.Thread] = []
 
-    def drive(slot: int) -> None:
+    def drive(slot: int, adopted_epoch: int = 0) -> None:
         nid = spec.node_id(slot)
-        events = schedule.get(nid, [])
+        # Adopted slots run clean: their chaos events belonged to the dead
+        # worker's incarnation, and re-parking a resumed node would deadlock.
+        events = [] if adopted_epoch else schedule.get(nid, [])
         kwargs = _chaos_kwargs(events)
         kill = next((e for e in events if e.kind == "kill"), None)
         while True:
             try:
-                result = _soak_client(spec_dict, slot, crash_mode="raise", **kwargs)
+                result = _soak_client(spec_dict, slot, crash_mode="raise",
+                                      adopted_epoch=adopted_epoch,
+                                      abort_event=switch.abort, **kwargs)
+            except _WorkerAborted:
+                return  # worker death: no result, no restart — strand it
             except _SimulatedCrash:
                 _log.info("worker %s: simulated crash of %s; restarting",
                           worker_id, nid)
@@ -635,22 +1117,58 @@ def _run_slots_threaded(control: SharedFolder, spec: FleetSpec, worker_id: str,
                 report.results[nid] = result
             return
 
-    threads = [threading.Thread(target=drive, args=(slot,), daemon=True,
-                                name=f"fleet-{spec.node_id(slot)}")
-               for slot in slots]
-    for t in threads:
+    def start_driver(slot: int, adopted_epoch: int = 0) -> None:
+        t = threading.Thread(target=drive, args=(slot, adopted_epoch),
+                             daemon=True, name=f"fleet-{spec.node_id(slot)}")
+        threads.append(t)
         t.start()
+
+    for slot in slots:
+        start_driver(slot)
     deadline = time.monotonic() + timeout
+    adopt_every = max(0.5, spec.lease_ttl / 2)
+    next_adopt_scan = time.monotonic() + adopt_every
+    results_deadline: float | None = None
+    want_results = spec.chaos.kill_workers > 0
+    while time.monotonic() < deadline:
+        if switch.fired:
+            return report  # dead worker: leave the drivers to abort
+        now = time.monotonic()
+        if spec.chaos.kill_workers and now >= next_adopt_scan:
+            next_adopt_scan = now + adopt_every
+            for nid, slot, epoch, lapsed in _stray_leases(control, spec, keeper):
+                if not try_adopt(control, spec, worker_id, nid, slot, epoch + 1):
+                    continue  # another survivor won the CAS
+                keeper.add(nid, slot, epoch + 1)
+                with lock:
+                    report.adoptions[nid] = max(0.0, time.time() - lapsed)
+                adopt_at[nid] = time.time()
+                start_driver(slot, adopted_epoch=epoch + 1)
+        own_done = all(not t.is_alive() for t in threads)
+        if own_done:
+            if not want_results:
+                break
+            # Churn soaks linger after their own slots finish so a lease
+            # stranded by a late worker death still gets adopted here.
+            if results_deadline is None:
+                results_deadline = time.monotonic() + spec.result_timeout
+            have = {k[len(_RESULT_PREFIX):] for k in control.keys()
+                    if k.startswith(_RESULT_PREFIX)}
+            if set(spec.node_ids()) <= have or time.monotonic() >= results_deadline:
+                break
+        else:
+            results_deadline = None
+        time.sleep(0.05)
     for t in threads:
-        t.join(timeout=max(0.0, deadline - time.monotonic()))
+        t.join(timeout=0.5)
     # Recoveries are derived AFTER the joins, only for drivers that delivered
     # a result — a straggler thread past the deadline can at worst add a
     # killed_at entry nobody reads, never a half-built latency.
     with lock:
-        for nid, t_kill in killed_at.items():
+        for nid, t_evt in {**killed_at, **adopt_at}.items():
             first_push = (report.results.get(nid) or {}).get("first_push_unix")
             if first_push:
-                report.recoveries[nid] = max(0.0, first_push - t_kill)
+                report.recoveries[nid] = max(0.0, first_push - t_evt)
     return report
 
 
@@ -678,6 +1196,10 @@ class SoakReport:
     crashes_injected: int
     restarts: int
     recovery_latency: dict  # node -> seconds (SIGKILL → restarted node's first push)
+    stranded: list          # nodes whose lease epoch advanced (worker died under them)
+    adopted: dict           # node -> bool (result deposited by an adopter)
+    adoption_latency: dict  # node -> seconds (lease lapse → adoption CAS win)
+    workers_lost: list      # founding workers that never deposited a report
     fleet_hashes: dict      # worker -> fleet state hash
     pipeline_stats: dict    # summed PipelineStats counters across all nodes
     telemetry: dict         # obs/ rollups: per-node staleness + phase latency
@@ -711,6 +1233,16 @@ class SoakReport:
             mean = sum(self.recovery_latency.values()) / len(self.recovery_latency)
             lines.insert(3, f"  recovery latency: mean {mean:.2f}s over "
                             f"{len(self.recovery_latency)} restarts")
+        if self.stranded or self.workers_lost:
+            n_adopted = sum(bool(self.adopted.get(n)) for n in self.stranded)
+            churn = (f"  churn: workers lost {len(self.workers_lost)} "
+                     f"({', '.join(self.workers_lost) or 'none'})  "
+                     f"stranded nodes adopted {n_adopted}/{len(self.stranded)}")
+            if self.adoption_latency:
+                mean = (sum(self.adoption_latency.values())
+                        / len(self.adoption_latency))
+                churn += f"  adoption latency mean {mean:.2f}s"
+            lines.insert(-2, churn)
         return "\n".join(lines)
 
     def _telemetry_line(self) -> str:
@@ -736,6 +1268,8 @@ def assemble_report(control: SharedFolder, spec: FleetSpec | None = None) -> Soa
     results: dict[str, dict] = {}
     workers: dict[str, dict] = {}
     claims: dict[int, str] = {}
+    leases: dict[str, tuple[int, dict]] = {}  # node -> (freshest epoch, payload)
+    founding: set[str] = set()
     for key in control.keys():
         if not key.startswith(FLEET_PREFIX) or key == SPEC_KEY:
             continue
@@ -748,6 +1282,22 @@ def assemble_report(control: SharedFolder, spec: FleetSpec | None = None) -> Soa
             workers[str(payload.get("worker"))] = payload
         elif key.startswith(_CLAIM_PREFIX):
             claims[int(payload.get("slot", -1))] = str(payload.get("worker"))
+        elif key.startswith(_LEASE_PREFIX):
+            parsed = _parse_lease_key(key)
+            if parsed is None:
+                continue
+            nid, epoch = parsed
+            if epoch == 0 and payload.get("worker") is not None:
+                founding.add(str(payload["worker"]))
+            if nid not in leases or epoch > leases[nid][0]:
+                leases[nid] = (epoch, payload)
+    # Leases are the live claim ledger; a legacy permanent claim blob only
+    # stands where no lease was ever written for its slot.
+    for nid, (_epoch, payload) in leases.items():
+        try:
+            claims[int(payload["slot"])] = str(payload.get("worker"))
+        except (KeyError, TypeError, ValueError):
+            pass
     schedule = chaos_schedule(spec)
     victims = sorted(n for n, evs in schedule.items()
                      if any(e.kind == "kill" for e in evs))
@@ -761,6 +1311,16 @@ def assemble_report(control: SharedFolder, spec: FleetSpec | None = None) -> Soa
     for w in workers.values():
         for nid, latency in (w.get("recoveries") or {}).items():
             recovery[str(nid)] = float(latency)
+    # Churn ledger: a lease epoch above 0 means the founding worker died under
+    # that node and someone CAS-won the next epoch — the node was stranded.
+    stranded = sorted(n for n, (epoch, _p) in leases.items() if epoch > 0)
+    adopted = {n: bool(results[n].get("adopted")) for n in stranded
+               if n in results}
+    adoption_latency: dict[str, float] = {}
+    for w in workers.values():
+        for nid, latency in (w.get("adoptions") or {}).items():
+            adoption_latency[str(nid)] = float(latency)
+    workers_lost = sorted(founding - set(workers))
     hashes = {wid: str(w["fleet_state_hash"]) for wid, w in workers.items()
               if w.get("fleet_state_hash")}
     stats: dict[str, float] = {}
@@ -789,9 +1349,14 @@ def assemble_report(control: SharedFolder, spec: FleetSpec | None = None) -> Soa
     complete = set(results) >= set(spec.node_ids())
     converged = complete and len(hashes) >= 1 and len(set(hashes.values())) == 1
     recovered = all(resumed.get(v, False) for v in victims)
+    # A node-kill victim orphaned by its worker's death may never eat its
+    # scheduled SIGKILL — only victims that were NOT stranded owe a crash.
+    crash_ok = crashes >= len([v for v in victims if v not in set(stranded)])
+    adopted_ok = all(adopted.get(n, False) for n in stranded)
+    churn_ok = spec.chaos.kill_workers < 1 or len(workers_lost) >= 1
     passed = (
-        complete and converged and recovered
-        and crashes >= len(victims)
+        complete and converged and recovered and adopted_ok and churn_ok
+        and crash_ok
         and all(rounds_completed.get(n, 0) >= spec.rounds for n in spec.node_ids())
     )
     return SoakReport(
@@ -799,7 +1364,10 @@ def assemble_report(control: SharedFolder, spec: FleetSpec | None = None) -> Soa
         claims=claims, results=results, workers=workers,
         victims=victims, stalled=stalled, resumed=resumed,
         rounds_completed=rounds_completed, crashes_injected=crashes,
-        restarts=restarts, recovery_latency=recovery, fleet_hashes=hashes,
+        restarts=restarts, recovery_latency=recovery,
+        stranded=stranded, adopted=adopted,
+        adoption_latency=adoption_latency, workers_lost=workers_lost,
+        fleet_hashes=hashes,
         pipeline_stats=stats, telemetry=telemetry, total_pushes=total_pushes,
         wall_seconds=wall,
         rounds_per_sec=(total_pushes / active) if active > 0 else 0.0,

@@ -49,6 +49,7 @@ from __future__ import annotations
 
 import hashlib
 import threading
+import time
 from typing import Callable, Iterable, Mapping, Sequence
 
 import numpy as np
@@ -60,7 +61,9 @@ from .serialize import (
     NodeUpdate,
     content_hash,
     decode_params_flat,
+    deserialize_fleet_blob,
     deserialize_group_summary,
+    serialize_fleet_blob,
 )
 from .store import SharedFolder, WeightStore
 from .transport import TransportPipeline, _LruCache
@@ -105,15 +108,81 @@ def balanced_groups(node_ids: Iterable[str], num_groups: int) -> dict[str, int]:
 
 
 # --------------------------------------------------------------------------
+# Roster blobs — epoch-versioned fleet membership, in the store itself
+# --------------------------------------------------------------------------
+#
+# Elastic fleets change composition mid-soak: workers die, their nodes get
+# adopted, new workers join. The membership truth lives where everything else
+# does — as blobs. ``fleet/roster/<epoch>`` holds the sorted node set at that
+# epoch; epochs are write-once (``put_if_absent``), so concurrent publishers
+# race on the *next* key and exactly one wins (same CAS-by-key discipline as
+# slot leases). Readers take the highest epoch present. The ``fleet/`` prefix
+# keeps rosters out of every state hash, like all launcher control traffic.
+
+ROSTER_PREFIX = "fleet/roster/"
+
+
+def _roster_key(epoch: int) -> str:
+    return f"{ROSTER_PREFIX}{epoch:06d}"
+
+
+def read_roster(folder: SharedFolder) -> tuple[int, list[str]] | None:
+    """Freshest roster in ``folder`` -> (epoch, sorted node ids), or None."""
+    best = -1
+    for key in folder.keys():
+        if key.startswith(ROSTER_PREFIX):
+            tail = key[len(ROSTER_PREFIX):]
+            if tail.isdigit():
+                best = max(best, int(tail))
+    # walk downward: the freshest key could lose a race with a concurrent
+    # delete/GC, and an older epoch is a valid (just stale) answer
+    while best >= 0:
+        blob = folder.get(_roster_key(best))
+        if blob is not None:
+            try:
+                kind, payload = deserialize_fleet_blob(blob)
+                if kind == "roster":
+                    return int(payload.get("epoch", best)), [
+                        str(n) for n in payload.get("nodes", [])]
+            except (ValueError, KeyError):
+                pass
+        best -= 1
+    return None
+
+
+def write_roster(folder: SharedFolder, node_ids: Iterable[str], *,
+                 retries: int = 8) -> int:
+    """Publish ``node_ids`` as the current roster; returns the epoch it lives
+    at. No-op (returns the current epoch) when the membership set is unchanged;
+    otherwise CAS-bumps to the next epoch, retrying through concurrent
+    publishers until one epoch holds this exact set."""
+    nodes = sorted(set(str(n) for n in node_ids))
+    for _ in range(retries):
+        cur = read_roster(folder)
+        if cur is not None and cur[1] == nodes:
+            return cur[0]
+        epoch = 0 if cur is None else cur[0] + 1
+        blob = serialize_fleet_blob(
+            "roster", {"epoch": epoch, "nodes": nodes, "time": time.time()})
+        if folder.put_if_absent(_roster_key(epoch), blob):
+            return epoch
+    raise RuntimeError(
+        f"roster write lost {retries} consecutive epoch races; giving up")
+
+
+# --------------------------------------------------------------------------
 # Per-group folder routing
 # --------------------------------------------------------------------------
 
 
 def _append_group(uri: str, group: int) -> str:
     """Derive group ``group``'s folder URI from the base URI, preserving any
-    ``cache+`` wrapping ('shard4+cache+/mnt/x' caches each group folder)."""
+    ``cache+``/``retry+`` wrapping ('shard4+cache+/mnt/x' caches each group
+    folder; 'shard4+retry+/mnt/x' retries each group folder's I/O)."""
     if uri.startswith("cache+"):
         return "cache+" + _append_group(uri[len("cache+"):], group)
+    if uri.startswith("retry+"):
+        return "retry+" + _append_group(uri[len("retry+"):], group)
     if uri.startswith("memory://"):
         # memory:// mints a fresh in-process folder per make_folder call;
         # ShardedFolders caches one instance per group, which is the identity
@@ -258,6 +327,8 @@ class ShardedWeightStore:
         topk_fraction: float = 0.01,
         compress: str = "none",
         decode_cache_entries: int = 256,
+        roster_folder: SharedFolder | None = None,
+        roster_check_every: int = 8,
     ):
         if isinstance(folders, str):
             folders = ShardedFolders.from_uri(folders)
@@ -315,11 +386,24 @@ class ShardedWeightStore:
         self._window: dict[str, int] = {}
         self._served: dict[str, set] = {}
         self._rotation_pending: dict[str, bool] = {}
+        # Elastic membership: group assignment re-resolves against the
+        # freshest ``fleet/roster/<epoch>`` blob (see write_roster). The
+        # roster folder is passed explicitly or lazily derived from the base
+        # URI; URI-less factory stores opt in via roster_folder=. Epoch bumps
+        # are checked every ``roster_check_every`` pushes plus on explicit
+        # refresh_roster() calls; all roster state mutates under self._lock.
+        self._roster_folder = roster_folder
+        self._roster_probed = roster_folder is not None
+        self._roster_check_every = max(1, int(roster_check_every))
+        self._roster_epoch = -1
+        self._roster_groups: dict[str, int] | None = None
+        self._home: dict[str, int] = {}  # last-seen home, for push migration
         # instrumentation — bumped under _stats_lock: a shared instance
         # serves many threaded nodes, and bare += would lose updates
         self._stats_lock = threading.Lock()
         self.num_summary_refreshes = 0
         self.num_summary_forwards = 0
+        self.num_regroups = 0  # roster epoch bumps absorbed
         # summary-layer wire traffic (refresh deposits + ring-forward copies);
         # per-group latest/base/history bytes live on the per-group stores
         self.summary_bytes_written = 0
@@ -329,6 +413,15 @@ class ShardedWeightStore:
 
     # -- routing -------------------------------------------------------------
     def group_of(self, node_id: str) -> int:
+        # roster assignment wins when a roster has been absorbed: it is the
+        # dynamic-membership truth. Nodes the roster has not (yet) heard of
+        # fall through to the static override / stable hash, so a node can
+        # always push before its membership propagates.
+        roster = self._roster_groups
+        if roster is not None:
+            g = roster.get(node_id)
+            if g is not None:
+                return g
         if self._group_of is not None:
             if callable(self._group_of):
                 g = int(self._group_of(node_id))
@@ -339,6 +432,67 @@ class ShardedWeightStore:
             if g is not None:
                 return int(g)
         return default_group_of(node_id, self.num_groups)
+
+    # -- dynamic membership ---------------------------------------------------
+    def _ensure_roster_folder(self) -> SharedFolder | None:
+        """The folder roster blobs live in: explicit ``roster_folder=``, else
+        (for URI-built shards) the wrapper-stripped base URI's folder — the
+        same place ``repro.fleet`` keeps its control plane. Factory-built
+        stores without an explicit folder never probe (there is no base)."""
+        if not self._roster_probed:
+            with self._lock:
+                if not self._roster_probed:
+                    self._roster_probed = True
+                    uri = self.folders.uri
+                    if uri is not None:
+                        from .store import make_folder
+                        from .transport import parse_folder_uri
+
+                        _wrappers, base = parse_folder_uri(uri)
+                        if not base.startswith("memory://"):
+                            self._roster_folder = make_folder(base)
+        return self._roster_folder
+
+    def refresh_roster(self) -> bool:
+        """Absorb the freshest roster epoch, recomputing ``balanced_groups``
+        over its membership. True when the epoch advanced (a regroup)."""
+        folder = self._ensure_roster_folder()
+        if folder is None:
+            return False
+        cur = read_roster(folder)
+        if cur is None:
+            return False
+        epoch, nodes = cur
+        with self._lock:
+            if epoch <= self._roster_epoch:
+                return False
+            self._roster_groups = balanced_groups(nodes, self.num_groups) \
+                if nodes else None
+            self._roster_epoch = epoch
+        with self._stats_lock:
+            self.num_regroups += 1
+        _log.info("roster epoch %d absorbed: %d members regrouped over %d groups",
+                  epoch, len(nodes), self.num_groups)
+        return True
+
+    @property
+    def roster_epoch(self) -> int:
+        """Freshest roster epoch absorbed so far (-1: none)."""
+        return self._roster_epoch
+
+    def _migrate_node(self, node_id: str, old_group: int, new_group: int) -> None:
+        """A regrouped node's deposits move home: drop its keys from the old
+        group's folder so the next push to the new home is the single copy.
+        The old group's summary drains the departed contribution on its next
+        member refresh; readers racing this delete fall back to pull_node's
+        cross-group scan."""
+        folder = self._folder(old_group)
+        prefixes = (f"base/{node_id}/", f"chain/{node_id}/",
+                    f"history/{node_id}/", f"state/{node_id}")
+        for key in folder.keys():
+            if key == f"latest/{node_id}" or key.startswith(prefixes):
+                folder.delete(key)
+        _log.info("node %s migrated group %d -> %d", node_id, old_group, new_group)
 
     def _store(self, group: int) -> WeightStore:
         with self._lock:
@@ -620,7 +774,16 @@ class ShardedWeightStore:
     # -- the WeightStore interface -------------------------------------------
     def push(self, update: NodeUpdate) -> None:
         self._push_seq += 1
+        # paced roster check: one base-folder key listing every
+        # _roster_check_every pushes keeps regrouping live without putting a
+        # scan on every hot-path push
+        if (self._push_seq - 1) % self._roster_check_every == 0:
+            self.refresh_roster()
         group = self.group_of(update.node_id)
+        old = self._home.get(update.node_id)
+        self._home[update.node_id] = group
+        if old is not None and old != group:
+            self._migrate_node(update.node_id, old, group)
         # this push populates ``group`` — never skip it as an empty hole again
         # (an instance shared by many nodes learns this for every group it
         # routes; per-node instances rely on the periodic recheck instead)
@@ -695,7 +858,20 @@ class ShardedWeightStore:
         return self._store(group).pull(exclude=exclude) + self._peer_summaries(group, exclude)
 
     def pull_node(self, node_id: str) -> NodeUpdate | None:
-        return self._store(self.group_of(node_id)).pull_node(node_id)
+        home = self.group_of(node_id)
+        update = self._store(home).pull_node(node_id)
+        if update is None and self._roster_groups is not None:
+            # Regroup race: a roster bump moved the node's home before its
+            # deposits migrated (migration happens on its next push). A
+            # resuming node must still find its latest blob, so fall back to
+            # an O(groups) sweep — miss path only, never the steady state.
+            for g in range(self.num_groups):
+                if g == home:
+                    continue
+                update = self._store(g).pull_node(node_id)
+                if update is not None:
+                    break
+        return update
 
     # -- strategy-state recovery + prefetch: route to the home group ----------
     def push_strategy_state(self, node_id: str, strategy: str, counter: int,

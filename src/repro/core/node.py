@@ -56,7 +56,13 @@ class _BaseNode:
         clock: Callable[[], float] = time.monotonic,
         on_step: "Callable[[_BaseNode, PyTree | None], None] | None" = None,
         telemetry: "Telemetry | bool | None" = None,
+        lease_epoch: int = 0,
     ):
+        # Elastic-fleet provenance: 0 for a node on its original slot claim,
+        # >0 when a surviving worker adopted this slot at that lease epoch.
+        # Rides every pushed update's wire meta so staleness-aware strategies
+        # (FedAsync's epoch-gap discount) can damp resurrected stragglers.
+        self.lease_epoch = int(lease_epoch)
         # Leaf-family selector (LoRA-style adapter federation): one kwarg
         # configures both halves of subset federation. When the node builds
         # its own store it ships only the selected families (``family(...)``
@@ -199,6 +205,7 @@ class _BaseNode:
             counter=self.counter,
             timestamp=self.clock(),
             metrics=metrics or {},
+            lease_epoch=self.lease_epoch,
         )
         self.store.push(update)
         self.num_pushes += 1

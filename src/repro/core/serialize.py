@@ -83,6 +83,12 @@ class NodeUpdate:
     counter: int = 0  # client-local epoch counter (no global round exists)
     timestamp: float = 0.0  # virtual or wall time, for staleness strategies
     metrics: dict = field(default_factory=dict)
+    # Fleet-lease epoch of the writer: 0 for a node on its original claim,
+    # bumped each time the node's slot was adopted by a surviving worker.
+    # Staleness-aware strategies (FedAsync) discount resurrected stragglers
+    # by the epoch gap so an adopted node's resumed-from-old params cannot
+    # yank the consensus backwards.
+    lease_epoch: int = 0
 
 
 class FlatUpdate(NodeUpdate):
@@ -95,13 +101,14 @@ class FlatUpdate(NodeUpdate):
 
     def __init__(self, flat: np.ndarray, spec: LeafSpec, *, num_examples: int,
                  node_id: str, counter: int = 0, timestamp: float = 0.0,
-                 metrics: dict | None = None):
+                 metrics: dict | None = None, lease_epoch: int = 0):
         self.flat = np.asarray(flat, np.float32).reshape(-1)
         self.spec = spec
         self._tree: PyTree | None = None
         NodeUpdate.__init__(
             self, params=None, num_examples=num_examples, node_id=node_id,
             counter=counter, timestamp=timestamp, metrics=metrics or {},
+            lease_epoch=lease_epoch,
         )
 
     @property
@@ -330,6 +337,7 @@ def flat_update_from_meta(spec: LeafSpec, flat: np.ndarray,
         counter=int(meta["counter"]),
         timestamp=float(meta["timestamp"]),
         metrics=meta.get("metrics", {}),
+        lease_epoch=int(meta.get("lease_epoch", 0)),
     )
 
 
@@ -356,6 +364,7 @@ def _update_meta(update: NodeUpdate, **extra: Any) -> dict[str, Any]:
         "counter": int(update.counter),
         "timestamp": float(update.timestamp),
         "metrics": update.metrics,
+        "lease_epoch": int(getattr(update, "lease_epoch", 0)),
         **extra,
     }
 
@@ -368,6 +377,7 @@ def _update_from_meta(params: PyTree, meta: dict[str, Any]) -> NodeUpdate:
         counter=int(meta["counter"]),
         timestamp=float(meta["timestamp"]),
         metrics=meta.get("metrics", {}),
+        lease_epoch=int(meta.get("lease_epoch", 0)),
     )
 
 

@@ -200,6 +200,13 @@ class ProcessSupervisor:
         timer.start()
         c.timers.append(timer)
 
+    def cancel_scheduled_kills(self, name: str) -> None:
+        """Disarm every pending ``schedule_kill`` timer for ``name`` without
+        touching the process. The chaos engine's clean-finish path: a kill
+        victim that deposited its result between the parked heartbeat and the
+        backstop must not eat a spurious SIGKILL (or be counted as a crash)."""
+        self._client(name).cancel_timers()
+
     # -- observation ----------------------------------------------------------
     def poll(self) -> list[str]:
         """Absorb whatever the clients have reported; returns the names that

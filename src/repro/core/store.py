@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import hashlib
 import os
+import random
 import tempfile
 import threading
 import time
@@ -441,6 +442,83 @@ class CachingFolder(SharedFolder):
             }
 
 
+class RetryFolder(SharedFolder):
+    """Transient-I/O armor over any SharedFolder: retries ``get``/``put``/
+    ``keys`` (and ``version``/``delete``) with capped exponential backoff plus
+    jitter when the inner backend raises ``OSError``/``TimeoutError`` — the
+    flaky-NFS / object-store blips that would otherwise kill a fleet worker
+    mid-round. ``retry+<uri>`` in the folder-URI grammar builds one.
+
+    ``put_if_absent`` is deliberately single-attempt: after an ambiguous
+    failure the key may exist with *our* bytes, and a retry would report
+    ``False`` for a claim we actually won. Lease/claim writers already treat
+    an exception as "not mine" and re-scan, which is safe under at-most-once.
+
+    ``retries`` counts attempts that were retried; ``WeightStore`` folds the
+    chain's total into ``PipelineStats.folder_retries`` so it surfaces in
+    ``transport_stats()`` next to every other wire counter.
+    """
+
+    _RETRYABLE = (OSError, TimeoutError)
+
+    def __init__(self, inner: SharedFolder, *, attempts: int = 4,
+                 base_delay: float = 0.05, max_delay: float = 1.0):
+        if attempts < 1:
+            raise ValueError("attempts must be >= 1")
+        self.inner = inner
+        self.attempts = attempts
+        self.base_delay = base_delay
+        self.max_delay = max_delay
+        self.retries = 0
+        self._lock = threading.Lock()
+
+    def _call(self, fn, *args):
+        delay = self.base_delay
+        for attempt in range(self.attempts):
+            try:
+                return fn(*args)
+            except self._RETRYABLE:
+                if attempt == self.attempts - 1:
+                    raise
+                with self._lock:
+                    self.retries += 1
+                # full jitter: sleep U(0, min(cap, base * 2^attempt))
+                time.sleep(random.uniform(0.0, min(self.max_delay, delay)))
+                delay *= 2.0
+
+    def put(self, key: str, blob: bytes) -> None:
+        self._call(self.inner.put, key, blob)
+
+    def put_if_absent(self, key: str, blob: bytes) -> bool:
+        return self.inner.put_if_absent(key, blob)  # at-most-once (see class doc)
+
+    def get(self, key: str) -> bytes | None:
+        return self._call(self.inner.get, key)
+
+    def keys(self) -> list[str]:
+        return self._call(self.inner.keys)
+
+    def delete(self, key: str) -> None:
+        self._call(self.inner.delete, key)
+
+    def version(self, key: str) -> Any | None:
+        return self._call(self.inner.version, key)
+
+    def state_hash(self, exclude: str | tuple[str, ...] | None = None) -> str:
+        return self._call(self.inner.state_hash, exclude)
+
+
+def folder_retries(folder) -> int:
+    """Total transient-I/O retries across a folder's wrapper chain (walks
+    ``.inner`` links so ``cache+retry+<uri>`` compositions count too)."""
+    total = 0
+    while folder is not None:
+        if isinstance(folder, RetryFolder):
+            total += folder.retries
+        folder = getattr(folder, "inner", None)
+    return total
+
+
 TRANSPORTS = ("full", "quantized", "delta", "delta_q", "topk")
 
 
@@ -579,6 +657,9 @@ class WeightStore:
 
     def transport_stats(self) -> dict:
         """Every wire counter of this store's pipeline, one dict."""
+        retried = folder_retries(self.folder)
+        if retried:
+            self.pipeline.stats.set_value("folder_retries", retried)
         return self.pipeline.stats.as_dict()
 
     # -- push ---------------------------------------------------------------
@@ -797,7 +878,9 @@ class WeightStore:
 def make_folder(uri: str):
     """Folder factory: 'memory://', 's3://bucket/prefix', a local path, or any
     of those behind a read-through cache via a 'cache+' prefix
-    (e.g. 'cache+/mnt/shared/exp1', 'cache+s3://bucket/exp1').
+    (e.g. 'cache+/mnt/shared/exp1', 'cache+s3://bucket/exp1') and/or a
+    transient-I/O retry layer via a 'retry+' prefix
+    (e.g. 'retry+/mnt/flaky-nfs/exp1', 'cache+retry+s3://bucket/exp1').
 
     A 'shard<G>+<uri>' prefix returns a ``ShardedFolders`` handle — G
     per-group folders of the inner kind (e.g. 'shard16+/mnt/shared/exp1',
@@ -805,7 +888,8 @@ def make_folder(uri: str):
     gossip-sharded ``ShardedWeightStore`` instead of a flat ``WeightStore``.
 
     The URI grammar is the folder-side half of the transport spec grammar;
-    ``transport.parse_folder_uri`` owns the parse.
+    ``transport.parse_folder_uri`` owns the parse. Wrappers apply
+    outermost-first: 'cache+retry+<base>' caches over the retrying folder.
     """
     wrappers, base = parse_folder_uri(uri)
     for i, (name, _args) in enumerate(wrappers):
@@ -822,6 +906,7 @@ def make_folder(uri: str):
         folder = S3Folder(base[len("s3://"):])
     else:
         folder = DiskFolder(base)
-    for _name, _args in wrappers:  # only cache+ wrappers remain
-        folder = CachingFolder(folder)
+    # innermost wrapper wraps first, so the leftmost prefix ends up outermost
+    for name, _args in reversed(wrappers):
+        folder = RetryFolder(folder) if name == "retry" else CachingFolder(folder)
     return folder

@@ -375,17 +375,29 @@ class FedAsync(Strategy):
     c_own = Π_j (1 − α_j) and c_k = α_k·Π_{j>k} (1 − α_j), so the whole chain
     is a single fused pass over the stacked flats (per-*client* work stays a
     trivial K-length Python loop computing coefficients).
+
+    Elastic-fleet churn adds a second discount axis: a peer whose
+    ``lease_epoch`` is *ahead* of ours was adopted by a surviving worker and
+    resumed from its stranded ``latest/`` blob — its params may encode a
+    trajectory frozen long before its counter suggests. Each adoption hop
+    multiplies that peer's mixing weight by ``(1 + epoch_gap)^(-epoch_a)``
+    (one-sided: only peers *ahead* in epochs are damped, so the resurrected
+    node itself still absorbs the live consensus at full strength instead of
+    yanking it backwards). ``epoch_a = 0`` disables the term; updates without
+    lease metadata (gap 0) aggregate bit-identically to before.
     """
 
     name = "fedasync"
 
     def __init__(self, alpha: float = 0.6, staleness_fn: str = "poly",
-                 a: float = 0.5, b: int = 4, *, use_kernel: bool = False):
+                 a: float = 0.5, b: int = 4, *, epoch_a: float = 1.0,
+                 use_kernel: bool = False):
         super().__init__(use_kernel=use_kernel)
         self.alpha = alpha
         self.staleness_fn = staleness_fn
         self.a = a
         self.b = b
+        self.epoch_a = epoch_a
 
     def _discount(self, staleness: float) -> float:
         s = max(0.0, staleness)
@@ -401,9 +413,13 @@ class FedAsync(Strategy):
         if not peers:
             return own.params
         spec = self._resolve_spec(own)
+        own_epoch = int(getattr(own, "lease_epoch", 0))
         alphas = []
         for peer in peers:
             a_eff = self.alpha * self._discount(float(own.counter - peer.counter))
+            gap = int(getattr(peer, "lease_epoch", 0)) - own_epoch
+            if gap > 0 and self.epoch_a:
+                a_eff *= (1.0 + gap) ** (-self.epoch_a)
             alphas.append(min(max(a_eff, 0.0), 1.0))
         coeffs = np.empty(len(peers) + 1, np.float32)
         suffix = 1.0  # Π_{j>k} (1 − α_j), built back to front

@@ -406,8 +406,13 @@ def telemetry_rollups(obs_by_node: dict[str, list[dict[str, Any]]]) -> dict[str,
             if dt > 0:
                 rate = dr / dt
         transport = last.get("transport") or {}
+        counters = last.get("counters") or {}
         nodes[node_id] = {
             "rounds": last.get("rounds", 0),
+            # Elastic-fleet churn markers: a node counts node.adopted once
+            # when a surviving worker resumes it from a lapsed lease.
+            "adopted": bool(counters.get("node.adopted", 0)),
+            "lease_epoch": int(counters.get("node.lease_epoch", 0)),
             "aggregations": last.get("aggregations", 0),
             "rounds_per_sec": round(float(rate), 4),
             "staleness_mean": round(float(stale.get("mean", 0.0)), 4),
@@ -432,6 +437,7 @@ def telemetry_rollups(obs_by_node: dict[str, list[dict[str, Any]]]) -> dict[str,
         )
         fleet["staleness_p90_max"] = max(v["staleness_p90"] for v in vals)
         fleet["bytes_written"] = sum(v["bytes_written"] for v in vals)
+        fleet["adoptions"] = sum(1 for v in vals if v["adopted"])
         phase_names = sorted({name for v in vals for name in v["phase_ms"]})
         fleet["phase_ms"] = {
             name: round(

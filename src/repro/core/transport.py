@@ -409,7 +409,9 @@ def parse_folder_uri(uri: str) -> tuple[list[tuple[str, dict]], str]:
     """Folder-URI side of the grammar: ``"shard8+cache+/mnt/x"`` →
     ``([("shard", {"groups": 8}), ("cache", {})], "/mnt/x")``. Wrappers apply
     outermost-first; the base URI is whatever remains (path / memory:// /
-    s3://)."""
+    s3://). ``retry+`` wraps the folder beneath it with capped
+    exponential-backoff retries on transient I/O errors (flaky NFS /
+    object-store reads)."""
     wrappers: list[tuple[str, dict]] = []
     while True:
         m = _SHARD_RE.match(uri)
@@ -420,6 +422,10 @@ def parse_folder_uri(uri: str) -> tuple[list[tuple[str, dict]], str]:
         if uri.startswith("cache+"):
             wrappers.append(("cache", {}))
             uri = uri[len("cache+"):]
+            continue
+        if uri.startswith("retry+"):
+            wrappers.append(("retry", {}))
+            uri = uri[len("retry+"):]
             continue
         return wrappers, uri
 
@@ -446,7 +452,7 @@ class PipelineStats:
         "bytes_written", "bytes_read", "encodes", "decodes",
         "decode_hits", "decode_misses", "rebases", "reanchors",
         "chain_depth", "max_chain_depth", "resolve_hops", "max_resolve_hops",
-        "topk_k", "prefetch_cycles", "prefetched",
+        "topk_k", "prefetch_cycles", "prefetched", "folder_retries",
     )
     _FLOAT_FIELDS = ("residual_norm", "topk_fraction_effective")
 

@@ -52,6 +52,13 @@ def _add_spec_args(ap: argparse.ArgumentParser) -> None:
                     help="SIGKILL-then-restart victims (seeded, randomized)")
     ap.add_argument("--chaos-stalls", type=int, default=0,
                     help="slow-node stall victims (seeded, randomized)")
+    ap.add_argument("--chaos-kill-workers", type=int, default=0,
+                    help="whole-WORKER kill victims: the drawn worker dies "
+                         "(SIGKILL, no cleanup) and survivors must adopt its "
+                         "stranded slot leases")
+    ap.add_argument("--lease-ttl", type=float, default=15.0,
+                    help="slot-lease freshness window in seconds; a worker "
+                         "silent this long forfeits its slots to adoption")
     ap.add_argument("--stall-duration", type=float, default=1.0)
     ap.add_argument("--restart-after", type=float, default=0.5)
     ap.add_argument("--kill-grace", type=float, default=30.0)
@@ -70,6 +77,7 @@ def _spec_from_args(args: argparse.Namespace) -> FleetSpec:
         round_sleep=args.round_sleep,
         settle=args.settle,
         result_timeout=args.result_timeout,
+        lease_ttl=args.lease_ttl,
         chaos=ChaosSpec(
             seed=args.seed,
             kills=args.chaos_kills,
@@ -77,6 +85,7 @@ def _spec_from_args(args: argparse.Namespace) -> FleetSpec:
             stall_duration=args.stall_duration,
             restart_after=args.restart_after,
             kill_grace=args.kill_grace,
+            kill_workers=args.chaos_kill_workers,
         ),
     )
 
@@ -130,12 +139,17 @@ def main(argv: list[str] | None = None) -> int:
         return 0
 
     if args.command == "worker":
+        # The CLI worker is its own OS process, so worker-kill chaos can be
+        # the real thing: a drawn victim SIGKILLs itself (exit 137) and its
+        # node children — survivors must adopt the lapsed leases.
         report = run_worker(args.store, worker_id=args.worker_id,
                             max_slots=args.max_slots, timeout=args.timeout,
-                            spec_timeout=args.spec_timeout)
+                            spec_timeout=args.spec_timeout,
+                            worker_kill_mode="sigkill")
         print(f"worker {report.worker_id}: slots={report.slots} "
               f"crashes_injected={report.crashes_injected} "
               f"restarts={report.restarts} "
+              f"adoptions={sorted(report.adoptions)} "
               f"fleet_state_hash={report.fleet_state_hash} "
               f"all_results_seen={report.all_results_seen}")
         return 0 if report.all_results_seen else 1

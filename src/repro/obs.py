@@ -38,11 +38,14 @@ def render_dashboard(obs_by_node: dict, *, printer=print) -> dict:
         return rollups
     rates = sorted(v["rounds_per_sec"] for v in nodes.values())
     median_rate = rates[len(rates) // 2]
+    churn = fleet.get("adoptions", 0)
     printer(f"[obs] {fleet['nodes_reporting']} nodes reporting, "
             f"{fleet.get('rounds_total', 0)} rounds total, "
-            f"fleet staleness mean {fleet.get('staleness_mean', 0.0):.2f}")
+            f"fleet staleness mean {fleet.get('staleness_mean', 0.0):.2f}"
+            + (f", {churn} adopted" if churn else ""))
     header = (f"{'node':<14} {'rounds':>6} {'r/s':>6} {'stale(mean/p90)':>16} "
-              f"{'MB w/r':>12} {'pull':>8} {'push':>8} {'agg':>8} {'train':>8} flags")
+              f"{'MB w/r':>12} {'pull':>8} {'push':>8} {'agg':>8} {'train':>8} "
+              f"{'churn':>6} flags")
     printer(header)
     stragglers = []
     for node_id, v in nodes.items():
@@ -51,15 +54,20 @@ def render_dashboard(obs_by_node: dict, *, printer=print) -> dict:
         if median_rate > 0 and v["rounds_per_sec"] < 0.5 * median_rate:
             flags.append("STRAGGLER")
             stragglers.append(node_id)
+        if v.get("adopted"):
+            flags.append("ADOPTED")
         if v["dropped_spans"]:
             flags.append(f"dropped={v['dropped_spans']}")
+        # CHURN column: the lease epoch the node runs at — 0 for founding
+        # claims, >0 once a surviving worker adopted the slot.
+        churn_txt = f"e{v.get('lease_epoch', 0)}" if v.get("adopted") else "-"
         printer(
             f"{node_id:<14} {v['rounds']:>6} {v['rounds_per_sec']:>6.2f} "
             f"{v['staleness_mean']:>8.2f}/{v['staleness_p90']:<7.2f} "
             f"{v['bytes_written'] / 1e6:>5.2f}/{v['bytes_read'] / 1e6:<6.2f} "
             f"{phase.get('pull', 0.0):>6.2f}ms {phase.get('push', 0.0):>6.2f}ms "
             f"{phase.get('aggregate', 0.0):>6.2f}ms {phase.get('train', 0.0):>6.2f}ms "
-            f"{' '.join(flags)}")
+            f"{churn_txt:>6} {' '.join(flags)}")
     if stragglers:
         printer(f"stragglers (< 0.5x median {median_rate:.2f} r/s): "
                 + ", ".join(stragglers))

@@ -314,3 +314,226 @@ def test_fleet_cli_init_workers_report(tmp_path, capsys):
     assert main(["report", "--store", store, "--assert-passed"]) == 0
     out = capsys.readouterr().out
     assert "passed: True" in out
+
+
+# --- leased claims + crash adoption ------------------------------------------
+
+
+def test_lease_claim_expiry_and_adoption_roundtrip(tmp_path):
+    """The elastic-membership lifecycle at API level: a claim is a lease; a
+    silent worker's lease lapses; a second worker adopts the slot at the next
+    epoch; the original worker cannot sneak back in at the stale epoch."""
+    from repro.core import claim_leases, lease_fresh, read_lease_index
+
+    spec = _spec(tmp_path, num_nodes=2, lease_ttl=0.2)
+    control = InMemoryFolder()
+    first = claim_leases(control, spec, "mortal")
+    assert first == {0: 0, 1: 0}  # founding claims are epoch 0
+    index = read_lease_index(control)
+    assert all(epoch == 0 and lease_fresh(payload)
+               for epoch, payload in index.values())
+    time.sleep(0.3)  # nobody refreshes: every lease lapses
+    assert not any(lease_fresh(p) for _e, p in read_lease_index(control).values())
+    second = claim_leases(control, spec, "adopter")
+    assert second == {0: 1, 1: 1}  # adoption bumps the epoch
+    index = read_lease_index(control)
+    assert all(payload["worker"] == "adopter" for _e, payload in index.values())
+    # the original worker finds fresh foreign leases and gets nothing
+    assert claim_leases(control, spec, "mortal") == {}
+
+
+def test_own_expired_lease_is_readopted_at_next_epoch(tmp_path):
+    """A worker re-claiming its OWN lapsed lease must still go through the
+    epoch-bump CAS — blind refresh at the stale epoch could split-brain with
+    a concurrent foreign adopter."""
+    from repro.core import claim_leases
+
+    spec = _spec(tmp_path, num_nodes=1, lease_ttl=0.15)
+    control = InMemoryFolder()
+    assert claim_leases(control, spec, "w") == {0: 0}
+    time.sleep(0.25)
+    assert claim_leases(control, spec, "w") == {0: 1}
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 10_000))
+def test_exactly_one_adopter_wins_each_epoch(adopters, seed):
+    """Adversarial adoption race: N workers observe the same expired lease
+    concurrently and all try to adopt. The epoch key is write-once, so
+    exactly one wins — no interleaving can mint two owners."""
+    from repro.core import try_adopt
+    from repro.core.fleet import lease_key
+    from repro.core.serialize import serialize_fleet_blob
+
+    spec = FleetSpec(store_uri="/unused", num_nodes=1, rounds=2,
+                     runner="thread", lease_ttl=0.1)
+    control = InMemoryFolder()
+    control.put(lease_key("node0000", 0), serialize_fleet_blob("lease", {
+        "worker": "ghost", "slot": 0, "node_id": "node0000", "epoch": 0,
+        "deadline": time.time() - 60.0, "time": time.time() - 120.0}))
+    winners: list[str] = []
+    barrier = threading.Barrier(adopters)
+
+    def race(wid):
+        barrier.wait()
+        if try_adopt(control, spec, wid, "node0000", 0, 1):
+            winners.append(wid)
+
+    threads = [threading.Thread(target=race, args=(f"w{i}-{seed}",))
+               for i in range(adopters)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(winners) == 1
+
+
+def test_diskfolder_adoption_race_single_winner(tmp_path):
+    """Same race over DiskFolder: the link(2) CAS is what guarantees a single
+    adopter on a real shared mount, so exercise exactly that code path."""
+    from repro.core import try_adopt
+    from repro.core.fleet import lease_key
+    from repro.core.serialize import serialize_fleet_blob
+
+    spec = _spec(tmp_path, num_nodes=1, lease_ttl=0.1)
+    control = DiskFolder(str(tmp_path / "control"))
+    control.put(lease_key("node0000", 0), serialize_fleet_blob("lease", {
+        "worker": "ghost", "slot": 0, "node_id": "node0000", "epoch": 0,
+        "deadline": time.time() - 60.0, "time": time.time() - 120.0}))
+    winners: list[str] = []
+    barrier = threading.Barrier(8)
+
+    def race(i):
+        barrier.wait()
+        if try_adopt(control, spec, f"w{i}", "node0000", 0, 1):
+            winners.append(f"w{i}")
+
+    threads = [threading.Thread(target=race, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(winners) == 1
+    # stale intermediate epochs are GC'd by the winner; epoch 0 (the founding
+    # record) survives for victim ranking and workers_lost accounting
+    keys = [k for k in control.keys() if k.startswith("fleet/lease/")]
+    assert sorted(keys) == [lease_key("node0000", 0), lease_key("node0000", 1)]
+
+
+def test_worker_kill_victims_deterministic(tmp_path):
+    """Victim selection is a pure function of the store's founding leases and
+    the seed — every host computes the same victim list with no messages."""
+    from repro.core import claim_leases, worker_kill_victims
+
+    spec = _spec(tmp_path, num_nodes=6, lease_ttl=30.0,
+                 chaos=ChaosSpec(seed=3, kill_workers=1))
+    control = InMemoryFolder()
+    for wid in ("hostA", "hostB", "hostC"):
+        claim_leases(control, spec, wid, max_slots=2)
+    first = worker_kill_victims(control, spec.chaos)
+    assert len(first) == 1 and first[0] in {"hostA", "hostB", "hostC"}
+    assert worker_kill_victims(control, spec.chaos) == first
+    # more victims requested than workers exist -> every founder is drawn
+    assert len(worker_kill_victims(
+        control, ChaosSpec(seed=3, kill_workers=99))) == 3
+    assert worker_kill_victims(control, ChaosSpec(seed=3)) == []
+
+
+# --- churn soak: worker death mid-soak, survivors adopt ----------------------
+
+
+def test_churn_soak_worker_death_and_adoption(tmp_path):
+    """The tentpole end-to-end: 3 workers, one drawn victim dies whole
+    mid-soak (its clients abort, its leases lapse), the survivors adopt every
+    stranded slot, resume the nodes, and still agree on one fleet hash."""
+    spec = _spec(tmp_path, num_nodes=6, rounds=6, round_sleep=0.05,
+                 lease_ttl=0.8, result_timeout=60.0,
+                 chaos=ChaosSpec(seed=5, kill_workers=1,
+                                 kill_workers_after=(1, 3)))
+    report = run_fleet_local(spec, num_workers=3)
+    assert report.passed, report.summary()
+    assert len(report.workers_lost) == 1
+    assert report.stranded, "the dead worker must have stranded its slots"
+    for nid in report.stranded:
+        assert report.adopted[nid] is True
+        assert report.results[nid]["lease_epoch"] >= 1
+    assert report.adoption_latency, "adopters must report adoption latency"
+    assert all(lat >= 0.0 for lat in report.adoption_latency.values())
+    # exactly the two survivors report, and they agree on the hash
+    assert len(report.fleet_hashes) == 2
+    assert len(set(report.fleet_hashes.values())) == 1
+    # the summary carries the churn line the CI tier greps for
+    assert "adopted" in report.summary()
+
+
+def test_late_joiner_adopts_ghost_fleet(tmp_path):
+    """Elastic join: a worker arriving AFTER the founding worker died finds
+    only expired leases, adopts every slot, and completes the soak alone."""
+    from repro.core.fleet import lease_key
+    from repro.core.serialize import serialize_fleet_blob
+
+    spec = _spec(tmp_path, num_nodes=3, rounds=3, lease_ttl=0.3,
+                 result_timeout=60.0, chaos=ChaosSpec(seed=1, kill_workers=1))
+    control = control_folder(spec.store_uri)
+    write_spec(control, spec)
+    now = time.time()
+    for slot in range(spec.num_nodes):
+        nid = spec.node_id(slot)
+        control.put(lease_key(nid, 0), serialize_fleet_blob("lease", {
+            "worker": "ghost", "slot": slot, "node_id": nid, "epoch": 0,
+            "deadline": now - 60.0, "time": now - 120.0}))
+    report = run_worker(spec=spec, control=control, worker_id="rescuer",
+                        max_slots=0, timeout=60.0)
+    assert sorted(report.adoptions) == [spec.node_id(s) for s in range(3)]
+    fleet = assemble_report(control, spec)
+    assert fleet.passed, fleet.summary()
+    assert fleet.workers_lost == ["ghost"]
+    assert fleet.stranded == sorted(spec.node_ids())
+    assert all(fleet.adopted[n] for n in fleet.stranded)
+
+
+def test_fleet_spec_validates_churn_fields(tmp_path):
+    with pytest.raises(ValueError):
+        _spec(tmp_path, lease_ttl=0.0)
+    with pytest.raises(ValueError):
+        _spec(tmp_path, chaos=ChaosSpec(kill_workers=-1))
+    with pytest.raises(ValueError):
+        _spec(tmp_path, rounds=1, chaos=ChaosSpec(kill_workers=1))
+    spec = _spec(tmp_path, lease_ttl=2.5,
+                 chaos=ChaosSpec(kill_workers=1, kill_workers_after=(2, 4)))
+    clone = FleetSpec.from_dict(spec.to_dict())
+    assert clone.lease_ttl == 2.5
+    assert clone.chaos.kill_workers == 1
+    assert clone.chaos.kill_workers_after == (2, 4)
+
+
+# --- backstop timer vs clean finish (regression) -----------------------------
+
+
+@pytest.mark.multiprocess
+def test_backstop_disarmed_when_victim_finishes_cleanly(tmp_path):
+    """Regression: a kill victim whose node finishes cleanly (here: resuming
+    a store already past its rounds, so it deposits a result immediately)
+    must NOT be SIGKILLed by the armed backstop, counted as a crash, or
+    restarted."""
+    clean = _spec(tmp_path, runner="process", num_nodes=2, rounds=3,
+                  round_sleep=0.05, settle=0.3, result_timeout=60.0)
+    report = run_fleet_local(clean, num_workers=1, timeout=120.0)
+    assert report.passed, report.summary()
+    control = control_folder(clean.store_uri)
+    for key in list(control.keys()):  # clear the control plane, keep latest/
+        if key.startswith("fleet/"):
+            control.delete(key)
+    chaotic = _spec(tmp_path, runner="process", num_nodes=2, rounds=3,
+                    round_sleep=0.05, settle=0.3, result_timeout=60.0,
+                    chaos=ChaosSpec(seed=2, kills=1, kill_grace=1.0,
+                                    restart_after=0.1))
+    write_spec(control, chaotic)
+    report = run_worker(spec=chaotic, control=control, worker_id="rerun",
+                        timeout=120.0)
+    # every node resumed past its rounds and finished instantly — the armed
+    # backstop must have been cancelled, not fired
+    assert report.crashes_injected == 0
+    assert report.restarts == 0
+    fleet = assemble_report(control, chaotic)
+    assert fleet.complete and fleet.crashes_injected == 0

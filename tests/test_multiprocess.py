@@ -394,3 +394,31 @@ def test_run_multiprocess_rejects_bad_kill_index():
 def test_run_multiprocess_rejects_mismatched_names():
     with pytest.raises(ValueError):
         run_multiprocess([_returns_value, _returns_value], names=["only-one"])
+
+
+def _sleeps_then_returns(delay, value):
+    time.sleep(delay)
+    return value
+
+
+def test_supervisor_cancel_scheduled_kills_lets_client_finish(tmp_path):
+    """The fleet worker's clean-finish path: an armed backstop SIGKILL can be
+    disarmed without touching the process, so a victim that finishes cleanly
+    before the timer fires completes normally — no crash, no -9 exitcode."""
+    import threading
+
+    from repro.core import ProcessSupervisor
+
+    sup = ProcessSupervisor()
+    try:
+        sup.spawn("survivor", _sleeps_then_returns, (1.0, 7))
+        sup.schedule_kill("survivor", 0.4)  # would land mid-sleep
+        sup.cancel_scheduled_kills("survivor")
+        sup.join(60.0)
+        res = sup.result("survivor")
+        assert res.error is None, res.traceback
+        assert res.result == 7 and res.exitcode == 0
+    finally:
+        sup.shutdown()
+    assert not any(isinstance(t, threading.Timer) and t.is_alive()
+                   for t in threading.enumerate())

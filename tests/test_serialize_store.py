@@ -139,3 +139,22 @@ def test_diskfolder_version_changes_on_overwrite(tmp_path):
     v2 = folder.version("k")
     assert v1 is not None and v2 is not None
     assert v1 != v2  # fresh temp-file inode ⇒ version moves even at same mtime
+
+
+def test_lease_epoch_rides_the_wire_meta():
+    """Adopted nodes stamp their lease epoch into updates; decoders read it
+    back, and updates predating the field default to epoch 0."""
+    u = NodeUpdate(params(), num_examples=3, node_id="adoptee", counter=5,
+                   lease_epoch=2)
+    out = deserialize_update(serialize_update(u))
+    assert out.lease_epoch == 2
+    legacy = NodeUpdate(params(), num_examples=3, node_id="n0", counter=5)
+    assert deserialize_update(serialize_update(legacy)).lease_epoch == 0
+
+
+def test_lease_epoch_survives_weight_store_roundtrip(tmp_path):
+    store = WeightStore(DiskFolder(str(tmp_path)))
+    store.push(NodeUpdate(params(), num_examples=1, node_id="adoptee",
+                          counter=1, lease_epoch=3))
+    pulled = store.pull_node("adoptee")
+    assert pulled is not None and pulled.lease_epoch == 3

@@ -166,3 +166,55 @@ def test_fedbuff_counts_distinct_nodes_not_updates():
     assert tree_allclose(out, own.params)  # still only {own, p} buffered
     out = strat.aggregate(own, [upd(3.0, node="q", counter=0)])
     assert not tree_allclose(out, own.params)  # third distinct node → flush
+
+
+# --- FedAsync epoch-gap discount (elastic-fleet churn) -----------------------
+
+
+def eupd(val, *, node="x", counter=0, lease_epoch=0, n=10):
+    u = upd(val, n=n, node=node, counter=counter)
+    u.lease_epoch = lease_epoch
+    return u
+
+
+def test_fedasync_epoch_gap_damps_adopted_peers():
+    """A peer running at a higher lease epoch (adopted after worker death)
+    mixes in with weight α·(1+gap)^(-epoch_a); const staleness isolates the
+    epoch term."""
+    strat = FedAsync(alpha=0.4, staleness_fn="const", epoch_a=1.0)
+    base = strat.aggregate(eupd(0.0), [eupd(10.0, node="p")])
+    assert np.allclose(base["layer"]["w"], 4.0)  # α alone
+    damped = strat.aggregate(eupd(0.0), [eupd(10.0, node="p", lease_epoch=1)])
+    assert np.allclose(damped["layer"]["w"], 2.0)  # α/(1+1)
+    more = strat.aggregate(eupd(0.0), [eupd(10.0, node="p", lease_epoch=3)])
+    assert np.allclose(more["layer"]["w"], 1.0)  # α/(1+3)
+
+
+def test_fedasync_epoch_gap_is_one_sided():
+    """Only peers AHEAD in epochs are damped: the adopted node itself (own
+    epoch high, peers at 0) absorbs the live consensus at full strength."""
+    strat = FedAsync(alpha=0.4, staleness_fn="const", epoch_a=1.0)
+    own = eupd(0.0, lease_epoch=2)
+    out = strat.aggregate(own, [eupd(10.0, node="p", lease_epoch=0)])
+    assert np.allclose(out["layer"]["w"], 4.0)  # no damping
+
+
+def test_fedasync_epoch_gap_disabled_and_backcompat():
+    """epoch_a=0 disables the term; gap-0 updates aggregate bit-identically
+    to a strategy that predates lease epochs."""
+    off = FedAsync(alpha=0.4, staleness_fn="const", epoch_a=0.0)
+    out = off.aggregate(eupd(0.0), [eupd(10.0, node="p", lease_epoch=5)])
+    assert np.allclose(out["layer"]["w"], 4.0)
+    legacy = FedAsync(alpha=0.4, staleness_fn="const")
+    a = legacy.aggregate(upd(0.0), [upd(10.0, node="p")])
+    b = legacy.aggregate(eupd(0.0), [eupd(10.0, node="p", lease_epoch=0)])
+    assert np.array_equal(a["layer"]["w"], b["layer"]["w"])
+
+
+def test_fedasync_epoch_gap_composes_with_staleness():
+    strat = FedAsync(alpha=0.8, staleness_fn="poly", a=1.0, epoch_a=1.0)
+    own = eupd(0.0, counter=3)
+    peer = eupd(10.0, node="p", counter=1, lease_epoch=1)
+    out = strat.aggregate(own, [peer])
+    # α · (1+staleness=2)^(-1) · (1+gap=1)^(-1) = 0.8/3/2
+    assert np.allclose(out["layer"]["w"], 10.0 * 0.8 / 6.0, rtol=1e-5)

@@ -749,3 +749,122 @@ def test_prefetcher_does_not_pin_its_store():
     assert ref() is None, "prefetch thread kept the store alive"
     handle._thread.join(timeout=5.0)
     assert not handle.running
+
+
+# --- retry+ folder wrapper (flaky-store hardening) ---------------------------
+
+
+def test_parse_folder_uri_retry_wrapper():
+    from repro.core import parse_folder_uri
+
+    assert parse_folder_uri("retry+/mnt/x") == ([("retry", {})], "/mnt/x")
+    wrappers, base = parse_folder_uri("retry+cache+/mnt/x")
+    assert wrappers == [("retry", {}), ("cache", {})] and base == "/mnt/x"
+    wrappers, base = parse_folder_uri("shard4+retry+cache+/mnt/x")
+    assert wrappers == [("shard", {"groups": 4}), ("retry", {}), ("cache", {})]
+
+
+def test_make_folder_retry_composition(tmp_path):
+    from repro.core import CachingFolder, DiskFolder, RetryFolder, make_folder
+
+    f = make_folder(f"retry+{tmp_path}")
+    assert isinstance(f, RetryFolder) and isinstance(f.inner, DiskFolder)
+    # leftmost prefix is the outermost wrapper: retries wrap the cache's
+    # misses, a cached hit never pays the retry machinery
+    rc = make_folder(f"retry+cache+{tmp_path}")
+    assert isinstance(rc, RetryFolder) and isinstance(rc.inner, CachingFolder)
+    cr = make_folder(f"cache+retry+{tmp_path}")
+    assert isinstance(cr, CachingFolder) and isinstance(cr.inner, RetryFolder)
+    rc.put("k", b"v")
+    assert rc.get("k") == b"v" and cr.get("k") == b"v"
+
+
+class _FlakyFolder:
+    """SharedFolder test double that fails the first N calls per method with
+    a transient OSError, then behaves."""
+
+    def __init__(self, inner, failures=2):
+        self.inner = inner
+        self._left = {}
+        self._failures = failures
+        self.calls = 0
+
+    def _maybe_fail(self, op):
+        self.calls += 1
+        left = self._left.setdefault(op, self._failures)
+        if left > 0:
+            self._left[op] = left - 1
+            raise OSError(f"transient {op} failure")
+
+    def get(self, key):
+        self._maybe_fail("get")
+        return self.inner.get(key)
+
+    def put(self, key, data):
+        self._maybe_fail("put")
+        return self.inner.put(key, data)
+
+    def keys(self):
+        self._maybe_fail("keys")
+        return self.inner.keys()
+
+    def delete(self, key):
+        self._maybe_fail("delete")
+        return self.inner.delete(key)
+
+    def version(self, key):
+        return self.inner.version(key)
+
+    def state_hash(self, exclude=None):
+        return self.inner.state_hash(exclude=exclude)
+
+    def put_if_absent(self, key, data):
+        return self.inner.put_if_absent(key, data)
+
+
+def test_retry_folder_rides_out_transient_faults():
+    from repro.core import InMemoryFolder, RetryFolder
+    from repro.core.store import folder_retries
+
+    flaky = _FlakyFolder(InMemoryFolder(), failures=2)
+    folder = RetryFolder(flaky, attempts=4, base_delay=0.01, max_delay=0.05)
+    folder.put("k", b"v")           # 2 transient put failures absorbed
+    assert folder.get("k") == b"v"  # 2 transient get failures absorbed
+    assert "k" in folder.keys()
+    assert folder.retries == 6
+    assert folder_retries(folder) == 6
+
+
+def test_retry_folder_gives_up_after_attempts():
+    from repro.core import InMemoryFolder, RetryFolder
+
+    flaky = _FlakyFolder(InMemoryFolder(), failures=99)
+    folder = RetryFolder(flaky, attempts=3, base_delay=0.01, max_delay=0.02)
+    with pytest.raises(OSError):
+        folder.get("missing")
+    assert folder.retries == 2  # attempts-1 retries, then the error surfaces
+
+
+def test_retry_folder_put_if_absent_is_single_shot():
+    """CAS must not retry: a timeout whose first attempt actually landed
+    would turn 'exactly one winner' into 'nobody knows'. The call passes
+    through once and any failure surfaces immediately."""
+    from repro.core import InMemoryFolder, RetryFolder
+
+    inner = InMemoryFolder()
+    folder = RetryFolder(inner, attempts=4, base_delay=0.01)
+    assert folder.put_if_absent("k", b"first") is True
+    assert folder.put_if_absent("k", b"second") is False
+    assert inner.get("k") == b"first"
+    assert folder.retries == 0
+
+
+def test_retry_counter_flows_into_transport_stats():
+    from repro.core import InMemoryFolder, NodeUpdate, RetryFolder, WeightStore
+
+    flaky = _FlakyFolder(InMemoryFolder(), failures=1)
+    store = WeightStore(RetryFolder(flaky, attempts=3, base_delay=0.01))
+    store.push(NodeUpdate({"w": np.ones(4, np.float32)}, num_examples=1,
+                          node_id="n0", counter=0))
+    stats = store.transport_stats()
+    assert stats["folder_retries"] >= 1
