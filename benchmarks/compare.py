@@ -19,14 +19,21 @@ import os
 from ._schema import numeric_metrics
 
 DEFAULT_NAMES = ("BENCH_agg.json", "BENCH_transport.json", "BENCH_soak.json",
-                 "BENCH_llm.json", "BENCH_obs.json")
+                 "BENCH_llm.json", "BENCH_obs.json", "BENCH_gossip.json")
 
 
 def load(path: str) -> dict | None:
+    """A missing, corrupt, or non-object file is just 'no data' — a stale or
+    truncated baseline must degrade every metric to 'new', never crash the
+    nightly report."""
     if not os.path.exists(path):
         return None
-    with open(path) as f:
-        return json.load(f)
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError, OSError):
+        return None
+    return data if isinstance(data, dict) else None
 
 
 def compare_payloads(baseline: dict | None, current: dict) -> list[tuple[str, float | None, float, float | None]]:

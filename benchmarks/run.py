@@ -240,6 +240,150 @@ def bench_sharded(trials: int):
             f"{growth_sharded:.2f}x (acceptance: < 2x at fixed group size)")
 
 
+def bench_gossip(trials: int, sizes=None):
+    """Hierarchical gossip scaling: per-push summary work and a cold reader's
+    scan (state_hash + pull) as the fleet grows 10^3 → 10^5 simulated nodes at
+    FIXED group size (100), on the 2-level summary tree (``shard<G>x2``) with
+    the single-tier ring (``shard<G>``) alongside. The tree bounds every
+    folder at O(group + branching) entries, so both probe costs should stay
+    flat within ~3x across two decades of fleet growth while the single-tier
+    curve inherits the O(num_groups) folder listings. Store-level only — one
+    tiny deposit per node — this measures coordination cost, not training.
+    Writes BENCH_gossip.json; acceptance is the 2-level push and fresh-scan
+    costs at the largest fleet within 3x of the smallest, with exact pull
+    coverage (fleet−1 examples, no double counting) at every size."""
+    from repro.core import InMemoryFolder, NodeUpdate
+    from repro.core.gossip import ShardedFolders, ShardedWeightStore
+
+    group_size = 100
+    sizes = sizes or [1_000, 10_000, 100_000]
+    p = {"w": np.zeros((16,), np.float32)}
+    seed_rounds = 4
+    results = {}
+
+    for fleet in sizes:
+        num_groups = max(1, fleet // group_size)
+        gof = lambda nid: int(nid[1:]) % num_groups  # noqa: E731
+        per_tier = {}
+        for levels in (1, 2):
+            folders = ShardedFolders(num_groups, levels=levels,
+                                     factory=lambda g: InMemoryFolder())
+            store = ShardedWeightStore(folders, group_of=gof)
+            # populate: deposit every node's update straight into its group
+            # store (no gossip) — the O(fleet) setup is not the claim under
+            # test, per-push and per-scan work at steady state are
+            t0 = time.time()
+            for i in range(fleet):
+                store._store(i % num_groups).push(NodeUpdate(
+                    p, num_examples=1, node_id=f"n{i}", counter=0))
+            populate_s = time.time() - t0
+            # representative rounds in ring order (node n{g} lives in group
+            # g): one ascending pass cascades summaries the whole way around
+            # each ring, so a handful of rounds reaches gossip steady state
+            t0 = time.time()
+            for r in range(1, seed_rounds + 1):
+                for g in range(num_groups):
+                    store.push(NodeUpdate(p, num_examples=1, node_id=f"n{g}",
+                                          counter=r))
+            seed_s = time.time() - t0
+
+            # per-push summary work: a probe node's full push (refresh +
+            # forward + tier folds), min over reps — noise only ever ADDS time
+            ctr = {"c": seed_rounds}
+            forwards0 = store.num_summary_forwards
+            folds0 = store.num_super_folds
+
+            def probe_push():
+                ctr["c"] += 1
+                store.push(NodeUpdate(p, num_examples=1, node_id="n0",
+                                      counter=ctr["c"]))
+
+            probe_push()  # warmup: fault in caches along the probe's chain
+            push_s = min(_timed(probe_push) for _ in range(7))
+            pushes_timed = 8
+
+            # fresh scan: a cold reader (empty index memo + decode caches)
+            # doing one skip-check + pull over the converged folders
+            def fresh_scan():
+                cold = ShardedWeightStore(folders, group_of=gof)
+                t0 = time.time()
+                cold.state_hash(exclude_node="n0")
+                cold.pull(exclude="n0")
+                return time.time() - t0
+
+            scan_s = min(fresh_scan() for _ in range(3))
+
+            # coverage: an unbounded-sample pull must weigh the foreign fleet
+            # exactly once — summaries partition it, members fill the rest
+            wide = ShardedWeightStore(folders, group_of=gof,
+                                      summary_sample=max(16, 2 * num_groups))
+            total = sum(u.num_examples for u in wide.pull(exclude="n0"))
+            coverage_exact = bool(total == fleet - 1)
+
+            own_keys = len(list(folders.group_folder(0).keys()))
+            # how many rotating pulls a node needs before it has been served
+            # every foreign (super-)summary once — the staleness window the
+            # tree collapses from O(num_groups) to O(branching × levels)
+            foreign = sum(len(v) for v in store.hierarchy.scope(0).values())
+            rotation_pulls = int(np.ceil(foreign / store.summary_sample))
+            per_tier[str(levels)] = {
+                "num_groups": num_groups,
+                "levels": levels,
+                "branching": store.hierarchy.branching,
+                "push_us": round(push_s * 1e6, 1),
+                "fresh_scan_us": round(scan_s * 1e6, 1),
+                "own_folder_keys": own_keys,
+                "foreign_summary_entries": foreign,
+                "rotation_pulls_to_cover": rotation_pulls,
+                "forwards_per_push": round(
+                    (store.num_summary_forwards - forwards0) / pushes_timed, 2),
+                "super_folds_per_push": round(
+                    (store.num_super_folds - folds0) / pushes_timed, 2),
+                "populate_s": round(populate_s, 2),
+                "seed_rounds_s": round(seed_s, 2),
+                "coverage_exact": coverage_exact,
+            }
+            tag = f"gossip/L{levels}/n{fleet}_g{num_groups}"
+            _report(f"{tag}/push", push_s,
+                    f"folds/push={per_tier[str(levels)]['super_folds_per_push']}")
+            _report(f"{tag}/fresh_scan", scan_s,
+                    f"own_folder_keys={own_keys} coverage_exact={coverage_exact}")
+            del store, wide, folders
+        results[str(fleet)] = per_tier
+
+    from ._schema import write_bench
+
+    lo, hi = str(min(sizes)), str(max(sizes))
+    growth = {}
+    for levels in ("1", "2"):
+        for metric in ("push_us", "fresh_scan_us"):
+            growth[f"L{levels}_{metric}"] = round(
+                results[hi][levels][metric]
+                / max(results[lo][levels][metric], 1e-9), 2)
+    span = max(sizes) / max(min(sizes), 1)
+    payload = write_bench("BENCH_gossip.json", {
+        "group_size": group_size,
+        "seed_rounds": seed_rounds,
+        "results": results,
+        "acceptance": {
+            "criterion": ("2-level push and fresh-scan cost at the largest "
+                          "fleet within 3x of the smallest (single-tier "
+                          "curve recorded alongside), exact pull coverage "
+                          "at every size"),
+            "fleet_span": f"{lo}->{hi}",
+            "growth": growth,
+            "passed": bool(
+                (span <= 1 or (growth["L2_push_us"] <= 3.0
+                               and growth["L2_fresh_scan_us"] <= 3.0))
+                and all(t["coverage_exact"]
+                        for r in results.values() for t in r.values())),
+        },
+    }, benchmark="hierarchical gossip scaling (per-push work + cold scan vs fleet size)",
+        sizes=sizes)
+    _report("gossip/BENCH_gossip.json", 0.0,
+            f"acceptance_passed={payload['acceptance']['passed']}")
+
+
 def bench_agg(trials: int, sizes=None):
     """Aggregation hot path at 10^6/10^7/10^8 params: the PR-2 per-leaf tree
     path vs the flat stacked-vector path vs the kernel-routed flat path, in
@@ -595,6 +739,17 @@ def bench_llm(trials: int):
             f"acceptance_passed={payload['acceptance']['passed']}")
 
 
+def _churn_lease_ttl(n: int) -> float:
+    """Lease TTL for the churn soak at fleet size ``n``. The TTL is a
+    deployment knob, not part of the bar: hundreds of node threads sharing
+    one core starve a sub-second heartbeat cadence into spurious expiry, and
+    a live worker whose lease lapses gets its nodes adopted out from under
+    it — mass re-adoption thrash, not elastic membership. Scale the TTL with
+    thread density so expiry means death; adoption latency is then read
+    against the recorded TTL."""
+    return max(2.0, n / 16)
+
+
 def _churn_soak(n: int, uri: str):
     """One elastic-membership soak at fleet size ``n``: three workers claim
     leased slots, the seeded worker-kill chaos takes one whole worker down
@@ -606,7 +761,7 @@ def _churn_soak(n: int, uri: str):
         store_uri=uri,
         name=f"churn{n}", num_nodes=n, rounds=5, runner="thread",
         param_size=256, round_sleep=0.02, settle=0.5,
-        result_timeout=240.0, lease_ttl=1.0,
+        result_timeout=max(240.0, float(n)), lease_ttl=_churn_lease_ttl(n),
         chaos=ChaosSpec(seed=0, kill_workers=1, kill_workers_after=(1, 3)),
     )
     return run_fleet_local(spec, num_workers=3)
@@ -626,7 +781,12 @@ def bench_soak(trials: int, sizes=None, churn: bool = False):
     membership soak per size — one of three workers killed whole mid-soak,
     survivors adopting its leases — and records worker-loss recovery and
     adoption latency under the same per-size schema; acceptance then also
-    requires every churn soak to pass."""
+    requires every churn soak to pass.
+
+    ``sizes`` entries are either plain node counts or ``(nodes, store_spec)``
+    pairs (the ``--soak-sizes 512:shard32x2`` form), pinning that size to an
+    explicit store layout — e.g. a 2-level summary tree — so adoption latency
+    can be read against store depth in BENCH_soak.json."""
     import shutil
     import tempfile
 
@@ -635,8 +795,9 @@ def bench_soak(trials: int, sizes=None, churn: bool = False):
     from ._schema import write_bench
 
     sizes = sizes or [8, 32, 128]
+    entries = [s if isinstance(s, tuple) else (s, None) for s in sizes]
     results = {}
-    for n in sizes:
+    for n, store_spec in entries:
         best = spec = None
         for _ in range(max(1, trials)):
             # fresh store per trial: reusing one would make every node resume
@@ -646,7 +807,11 @@ def bench_soak(trials: int, sizes=None, churn: bool = False):
             # 16): a flat store's per-push scan decodes every peer — O(fleet²)
             # per round, which measures the known flat-store wall, not the
             # launcher. Sharding is precisely the fix PR 2 shipped for this.
-            uri = f"shard{n // 16}+{store_dir}" if n >= 64 else store_dir
+            # An explicit per-size spec (``512:shard32x2``) overrides the rule.
+            if store_spec:
+                uri = f"{store_spec}+{store_dir}"
+            else:
+                uri = f"shard{n // 16}+{store_dir}" if n >= 64 else store_dir
             spec = FleetSpec(
                 store_uri=uri,
                 name=f"bench{n}", num_nodes=n, rounds=5, runner="thread",
@@ -662,11 +827,24 @@ def bench_soak(trials: int, sizes=None, churn: bool = False):
             if best is None or (report.passed, report.rounds_per_sec) > (
                     best.passed, best.rounds_per_sec):
                 best = report
+        if store_spec:
+            import re as _re
+
+            m = _re.match(r"^shard(\d+)(?:x(\d+))?$", store_spec)
+            groups = int(m.group(1)) if m else 0
+            levels = int(m.group(2) or 1) if m else 0
+            store_label = f"sharded(groups={groups},levels={levels})"
+        else:
+            groups = n // 16 if n >= 64 else 0
+            levels = 1 if n >= 64 else 0
+            store_label = "sharded(group=16)" if n >= 64 else "flat"
         recovery = list(best.recovery_latency.values())
-        results[str(n)] = {
+        key = f"{n}:{store_spec}" if store_spec else str(n)
+        results[key] = {
             "nodes": n,
             "workers": 2,
-            "store": "sharded(group=16)" if n >= 64 else "flat",
+            "store": store_label,
+            "store_levels": levels,
             "rounds_per_node": spec.rounds,
             "total_pushes": best.total_pushes,
             "rounds_per_sec": round(best.rounds_per_sec, 2),
@@ -679,17 +857,21 @@ def bench_soak(trials: int, sizes=None, churn: bool = False):
             "converged": best.converged,
             "passed": best.passed,
         }
-        _report(f"soak/n{n}/rounds_per_sec", 0.0, f"{best.rounds_per_sec:.2f}")
-        _report(f"soak/n{n}/recovery_mean_s", 0.0,
-                results[str(n)]["recovery_latency_mean_s"])
+        _report(f"soak/n{key}/rounds_per_sec", 0.0, f"{best.rounds_per_sec:.2f}")
+        _report(f"soak/n{key}/recovery_mean_s", 0.0,
+                results[key]["recovery_latency_mean_s"])
         if churn:
             churn_dir = tempfile.mkdtemp(prefix=f"bench_churn_{n}_")
-            churn_uri = f"shard{n // 16}+{churn_dir}" if n >= 64 else churn_dir
+            if store_spec:
+                churn_uri = f"{store_spec}+{churn_dir}"
+            else:
+                churn_uri = f"shard{n // 16}+{churn_dir}" if n >= 64 else churn_dir
             creport = _churn_soak(n, churn_uri)
             shutil.rmtree(churn_dir, ignore_errors=True)
             adoption = list(creport.adoption_latency.values())
             crecovery = list(creport.recovery_latency.values())
-            results[str(n)].update({
+            results[key].update({
+                "churn_lease_ttl_s": _churn_lease_ttl(n),
                 "churn_workers_lost": len(creport.workers_lost),
                 "churn_nodes_adopted": sum(
                     1 for v in creport.adopted.values() if v),
@@ -702,9 +884,9 @@ def bench_soak(trials: int, sizes=None, churn: bool = False):
                     float(np.mean(crecovery)), 3) if crecovery else None,
                 "churn_passed": creport.passed,
             })
-            _report(f"soak/n{n}/churn_adoption_mean_s", 0.0,
-                    results[str(n)]["churn_adoption_latency_mean_s"])
-            _report(f"soak/n{n}/churn_passed", 0.0, creport.passed)
+            _report(f"soak/n{key}/churn_adoption_mean_s", 0.0,
+                    results[key]["churn_adoption_latency_mean_s"])
+            _report(f"soak/n{key}/churn_passed", 0.0, creport.passed)
     payload = write_bench("BENCH_soak.json", {
         "results": results,
         "acceptance": {
@@ -718,7 +900,7 @@ def bench_soak(trials: int, sizes=None, churn: bool = False):
                 r.get("churn_passed", True) for r in results.values()),
         },
     }, benchmark="fleet chaos soak (throughput + crash recovery vs fleet size)",
-        sizes=sizes)
+        sizes=[n for n, _spec in entries])
     _report("soak/BENCH_soak.json", 0.0,
             f"acceptance_passed={payload['acceptance']['passed']}")
 
@@ -847,6 +1029,7 @@ TABLES = {
     "timing": figure_timing_straggler,
     "multiprocess": bench_multiprocess,
     "sharded": bench_sharded,
+    "gossip": bench_gossip,
     "kernels": bench_kernels,
     "agg": bench_agg,
     "transport": bench_transport,
@@ -854,6 +1037,15 @@ TABLES = {
     "soak": bench_soak,
     "obs": bench_obs,
 }
+
+
+def _parse_soak_size(token: str):
+    """``'512'`` -> ``(512, None)``; ``'512:shard32x2'`` -> ``(512,
+    'shard32x2')`` — a fleet size optionally pinned to a store layout."""
+    if ":" in token:
+        n, spec = token.split(":", 1)
+        return int(float(n)), spec.strip()
+    return int(float(token)), None
 
 
 def main(argv=None) -> None:
@@ -870,8 +1062,14 @@ def main(argv=None) -> None:
                          "for a CI smoke run")
     ap.add_argument("--soak-sizes", default=None,
                     help="comma-separated fleet sizes for --only soak "
-                         "(default 8,32,128); e.g. --soak-sizes 8 for a CI "
-                         "smoke run")
+                         "(default 8,32,128); a size may pin its store "
+                         "layout as <nodes>:<spec>, e.g. "
+                         "--soak-sizes 8,512:shard32x2 runs the 512-node "
+                         "soak over a 2-level summary tree")
+    ap.add_argument("--gossip-sizes", default=None,
+                    help="comma-separated fleet sizes for --only gossip "
+                         "(default 1e3,1e4,1e5); e.g. --gossip-sizes "
+                         "400,2000 for a CI smoke run")
     ap.add_argument("--obs-sizes", default=None,
                     help="comma-separated param counts for --only obs "
                          "(default 1e6,1e7); e.g. --obs-sizes 200000 for a "
@@ -893,9 +1091,14 @@ def main(argv=None) -> None:
                             sizes=[int(float(s))
                                    for s in args.transport_sizes.split(",")])
         elif name == "soak" and (args.soak_sizes or args.churn):
-            soak_sizes = ([int(float(s)) for s in args.soak_sizes.split(",")]
+            soak_sizes = ([_parse_soak_size(s)
+                           for s in args.soak_sizes.split(",")]
                           if args.soak_sizes else None)
             bench_soak(args.trials, sizes=soak_sizes, churn=args.churn)
+        elif name == "gossip" and args.gossip_sizes:
+            bench_gossip(args.trials,
+                         sizes=[int(float(s))
+                                for s in args.gossip_sizes.split(",")])
         elif name == "obs" and args.obs_sizes:
             bench_obs(args.trials,
                       sizes=[int(float(s)) for s in args.obs_sizes.split(",")])

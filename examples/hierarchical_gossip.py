@@ -1,0 +1,137 @@
+"""Hierarchical gossip — a 2-level summary tree over a ``shard<G>x<L>`` store.
+
+A single-tier ring (``shard<G>+``) keeps per-step scans O(group), but every
+folder still collects one summary per foreign group: O(G) keys, and a pull's
+bounded rotating sample needs O(G) pulls to cover the fleet. ``shard<G>x2+``
+folds level-0 group summaries into super-summaries along deterministically
+elected aggregator groups (stable hash of ``(level, origin)`` — no
+coordinator, every node derives the same election), forwarded on a ring that
+is ``⌈√G⌉``× shorter and down-copied back into every member folder. Per-push
+work and the staleness window then scale with the branching factor, not G.
+
+    PYTHONPATH=src python examples/hierarchical_gossip.py
+    PYTHONPATH=src python examples/hierarchical_gossip.py --nodes 36 --groups 9 --levels 2
+
+The demo federates threaded clients over a 2-level in-process store, prints
+the derived tree (segments, elected aggregators, per-level rings), the
+per-level gossip telemetry spans, and the exact-coverage accounting of one
+pull (home peers + level-0 summaries + supers = fleet, nothing twice).
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import (
+    AsyncFederatedNode,
+    GossipHierarchy,
+    InMemoryFolder,
+    ShardedFolders,
+    ShardedWeightStore,
+    Telemetry,
+    balanced_groups,
+    run_threaded,
+)
+from repro.core.gossip import GROUP_PEER_PREFIX
+from repro.core.strategies import FedAvg
+
+
+def print_tree(hier: GossipHierarchy) -> None:
+    print(f"summary tree: {hier.num_groups} groups, {hier.levels} levels, "
+          f"branching {hier.branching}, diameter {hier.diameter()} rounds")
+    for level in range(1, hier.levels):
+        holders = {o: hier.holder(level, o) for o in range(hier.counts[level])}
+        print(f"  level {level}: {hier.counts[level]} origins, elected "
+              f"aggregator groups {holders}")
+    scope = hier.scope(0)
+    pretty = {lvl: sorted(origins) for lvl, origins in scope.items()}
+    print(f"  group 0 pull scope (level -> foreign origins): {pretty}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--nodes", type=int, default=18)
+    ap.add_argument("--groups", type=int, default=9)
+    ap.add_argument("--levels", type=int, default=2)
+    ap.add_argument("--epochs", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    folders = ShardedFolders(args.groups, levels=args.levels,
+                             factory=lambda g: InMemoryFolder())
+    node_ids = [f"client{i}" for i in range(args.nodes)]
+    mapping = balanced_groups(node_ids, args.groups)
+    targets = {nid: float(i) for i, nid in enumerate(node_ids)}
+    print(f"weight store: shard{args.groups}x{args.levels}+memory://")
+    print_tree(GossipHierarchy(args.groups, args.levels))
+
+    # one store shared by the threaded clients (exactly what a fleet of
+    # processes would reconstruct per-node from the URI), with telemetry on
+    # so the per-level gossip phases show up as named spans
+    tel = Telemetry("hierarchical_gossip", enabled=True)
+    store = ShardedWeightStore(folders, group_of=mapping)
+    store.attach_telemetry(tel)
+    finals, nodes = {}, {}
+
+    def client(nid):
+        node = AsyncFederatedNode(strategy=FedAvg(), store=store, node_id=nid)
+        nodes[nid] = node
+        w = np.zeros((8,), np.float32)
+        for _ in range(args.epochs):
+            w = w + 0.3 * (np.float32(targets[nid]) - w)  # local step
+            aggregated = node.update_parameters({"w": w}, num_examples=10)
+            if aggregated is not None:
+                w = aggregated["w"]
+            time.sleep(0.01)
+        finals[nid] = (float(w.mean()), w)
+
+    results = run_threaded([lambda n=n: client(n) for n in node_ids])
+    errors = [r for r in results if r.error is not None]
+    assert not errors, [r.traceback for r in errors]
+
+    # settle: ring-order re-pushes (one member per group, same weights, same
+    # example counts) carry the last epoch's summaries up the tree, around
+    # the shorter rings, and back down — ``diameter()`` rounds bound it
+    hier = store.hierarchy
+    rep = {}
+    for nid in node_ids:
+        rep.setdefault(mapping[nid], nid)
+    for _ in range(hier.diameter()):
+        for g in sorted(rep):
+            nid = rep[g]
+            nodes[nid].update_parameters({"w": finals[nid][1]}, num_examples=10)
+
+    values = [v for v, _ in finals.values()]
+    print(f"\n{args.nodes} clients, {args.epochs} epochs: consensus spread "
+          f"{max(values) - min(values):.2f} (targets spanned "
+          f"{max(targets.values()) - min(targets.values()):.1f})")
+    print(f"summary refreshes={store.num_summary_refreshes} "
+          f"forwards={store.num_summary_forwards} "
+          f"super_folds={store.num_super_folds}")
+
+    spans = {name: st for name, st in tel.recorder.phase_stats().items()
+             if name.startswith("gossip")}
+    print("\nper-level gossip spans (count, total ms):")
+    for name in sorted(spans):
+        st = spans[name]
+        print(f"  {name:20s} n={st['count']:5d} "
+              f"total={st['total_s'] * 1e3:8.1f}ms")
+
+    # exact coverage: one pull weighs the foreign fleet exactly once —
+    # home peers as real updates, segment siblings as level-0 summaries,
+    # the rest as supers
+    probe = node_ids[0]
+    pulled = store.pull(exclude=probe)
+    home = [u for u in pulled if not u.node_id.startswith(GROUP_PEER_PREFIX)]
+    l0 = [u for u in pulled if u.node_id.startswith(GROUP_PEER_PREFIX)
+          and not u.node_id.startswith(f"{GROUP_PEER_PREFIX}L")]
+    supers = [u for u in pulled if u.node_id.startswith(f"{GROUP_PEER_PREFIX}L")]
+    total = sum(u.num_examples for u in pulled)
+    expect = 10 * (args.nodes - 1)  # every client deposited 10 examples
+    print(f"\npull coverage for {probe}: {len(home)} home peers + "
+          f"{len(l0)} level-0 summaries + {len(supers)} supers "
+          f"= {total} examples (10 x (fleet - self) = {expect})")
+    assert total == expect, "coverage must be exact — no double counting"
+
+
+if __name__ == "__main__":
+    main()

@@ -11,8 +11,8 @@ serverless design exactly: there is no coordinator in the data path.
 The moving parts:
 
 * **FleetSpec** — nodes, rounds, strategy, transport pipeline spec, store URI
-  (the existing ``cache+`` / ``shard<G>+`` grammar), runner kind and a seeded
-  chaos schedule. ``repro.fleet init`` serializes it to the shared folder;
+  (the existing ``cache+`` / ``shard<G>[x<L>]+`` grammar), runner kind and a
+  seeded chaos schedule. ``repro.fleet init`` serializes it to the shared folder;
   from then on any host can join.
 
 * **Workers** (``repro.fleet worker --store <uri>``) — each host reads the
@@ -135,7 +135,7 @@ class FleetSpec:
     share of the fleet. Serialized to the shared folder (``fleet/spec``) —
     the spec travels with the store, not with any process."""
 
-    store_uri: str                 # data plane; cache+/shard<G>+ grammar
+    store_uri: str                 # data plane; cache+/shard<G>[x<L>]+ grammar
     name: str = "soak"
     num_nodes: int = 8
     rounds: int = 10               # federation pushes per node, across incarnations
@@ -278,7 +278,7 @@ def chaos_schedule(spec: FleetSpec) -> dict[str, list[ChaosEvent]]:
 
 def fleet_control_uri(store_uri: str) -> str:
     """The control-plane folder URI for a data-plane store URI: the innermost
-    base with every ``cache+`` / ``shard<G>+`` wrapper stripped. For a flat
+    base with every ``cache+`` / ``shard<G>[x<L>]+`` wrapper stripped. For a flat
     disk store, control and data share one folder (``fleet/`` keys are
     excluded from every state hash); for a sharded store the control blobs
     live in the base directory *above* the per-group folders."""
@@ -761,7 +761,18 @@ def _soak_client(spec_dict: dict, slot: int, *, park_after_pushes: int | None = 
         "adopted": adopted, "lease_epoch": adopted_epoch,
         "transport_stats": dict(node.transport_stats()),
     }
-    control.put(f"{_RESULT_PREFIX}{node_id}", serialize_fleet_blob("result", result))
+    blob = serialize_fleet_blob("result", result)
+    if adopted:
+        # An adopter's deposit always stands: if the node's original driver is
+        # still alive (its worker's lease lapsed spuriously — starvation, not
+        # death — and we split-brained it), the churn ledger must still read
+        # adopted=True for this stranded lease no matter which driver wrote.
+        control.put(f"{_RESULT_PREFIX}{node_id}", blob)
+    elif not control.put_if_absent(f"{_RESULT_PREFIX}{node_id}", blob):
+        # Epoch-0 deposit racing an adopter that already wrote: never clobber
+        # it — this driver lost its lease, the adopter owns the record.
+        _log.info("%s: result already deposited by an adopter; keeping theirs",
+                  node_id)
     _heartbeat(control, node_id, {
         "node_id": node_id, "slot": slot, "counter": node.counter,
         "pushes": node.num_pushes, "status": "done", "resumed": resumed,

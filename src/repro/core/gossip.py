@@ -35,6 +35,23 @@ hop per gossip round: every group hears about it within ``num_groups`` rounds
 (the ring diameter) — the property test in ``tests/test_gossip.py`` proves the
 bound under adversarial push orderings.
 
+**Hierarchical tiers** (``shard<G>x<L>+<uri>``): one flat ring still makes
+every group index every other group's summary — O(num_groups) per pull. With
+``L > 1`` the groups form a *summary tree* instead (``GossipHierarchy``):
+level-0 rings are confined to segments of ``branching ≈ G**(1/L)`` groups;
+each segment deterministically elects (stable hash — no coordinator, no
+messages) an *aggregator* group whose folder collects the segment's summaries
+and holds their fold — one level-1 ``SuperSummary`` blob under
+``summary1/<origin>/…`` — forwarded on a shorter ring of aggregators,
+recursively, until the top tier is a single ring. Any segment member's push
+performs the aggregator duties by writing into the elected folder, so the
+election never needs the aggregator group to have live members. A push then
+touches O(branching · levels) = O(G**(1/L) · L) folders and a pull indexes one
+summary chain — own segment at level 0 plus one sibling set per tier — instead
+of N/G summaries; the per-tier sibling sets partition the fleet, so nothing is
+double-counted. Information crosses the fleet within ``levels ×
+per-ring-diameter`` pushes (property-tested at ≥2 levels).
+
 Consistency model: the summary layer is eventually consistent. Two same-group
 writers racing a refresh can leave one contribution out of the summary until
 either pushes again (last-writer-wins per version scalar); real ``latest/``
@@ -47,7 +64,9 @@ exactly as strong as the flat store.
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
+import math
 import threading
 import time
 from typing import Callable, Iterable, Mapping, Sequence
@@ -59,10 +78,12 @@ from .serialize import (
     FlatUpdate,
     GroupSummary,
     NodeUpdate,
+    SuperSummary,
     content_hash,
     decode_params_flat,
     deserialize_fleet_blob,
     deserialize_group_summary,
+    deserialize_super_summary,
     serialize_fleet_blob,
 )
 from .store import SharedFolder, WeightStore
@@ -74,6 +95,23 @@ _log = get_logger("gossip")
 
 _SUMMARY_PREFIX = "summary/"
 GROUP_PEER_PREFIX = "group:"  # node_id prefix of summary pseudo-peers in pull()
+_NULL_SPAN = contextlib.nullcontext()
+
+
+def _summary_prefix(level: int) -> str:
+    """Key prefix of one summary tier: level 0 keeps the flat-ring layout
+    (``summary/``) so single-tier stores are the L=1 degenerate case on disk
+    too; tiers deposit under ``summary<level>/``."""
+    return _SUMMARY_PREFIX if level == 0 else f"summary{level}/"
+
+
+def group_peer_id(origin: int, level: int = 0) -> str:
+    """Pseudo-peer node id a (super-)summary decodes to: ``group:<origin>``
+    at level 0 (unchanged from the flat ring), ``group:L<level>.<origin>``
+    for tiers."""
+    if level == 0:
+        return f"{GROUP_PEER_PREFIX}{origin}"
+    return f"{GROUP_PEER_PREFIX}L{level}.{origin}"
 
 # one grammar owns all routing: the shard-wrapper syntax is defined once, in
 # transport.py, next to the rest of the folder-URI/pipeline grammar
@@ -171,6 +209,126 @@ def write_roster(folder: SharedFolder, node_ids: Iterable[str], *,
 
 
 # --------------------------------------------------------------------------
+# Hierarchical topology — a pure function of (num_groups, levels)
+# --------------------------------------------------------------------------
+
+
+def _elect(level: int, origin: int, size: int) -> int:
+    """Stable-hash aggregator election: which of the ``size`` children of
+    (level, origin) carries the segment's super-summary. Every participant
+    computes the same answer from the tuple alone — no coordinator, no
+    messages, no dependence on who is alive."""
+    h = int.from_bytes(
+        hashlib.sha256(f"agg:{level}:{origin}".encode()).digest()[:8], "big")
+    return h % size
+
+
+class GossipHierarchy:
+    """Static summary-tree topology over ``num_groups`` level-0 groups.
+
+    Everything here is arithmetic on origin indices — deterministic in
+    (num_groups, levels), so every node (and every fresh store instance)
+    derives the identical tree with zero communication. Level-t *origins*
+    (0..counts[t]) name summary blobs: a level-0 origin is a group, a level-t
+    origin is one segment of level-(t-1) origins, folded into a single
+    ``SuperSummary`` held in the folder of its hash-elected aggregator group
+    (``holder``). Rings at every non-top level are confined to one parent
+    segment; the top level is a single global ring. ``levels=1`` degenerates
+    exactly to the flat ring (one level-0 ring over all groups, no tiers).
+    """
+
+    def __init__(self, num_groups: int, levels: int = 1):
+        if num_groups < 1:
+            raise ValueError(f"num_groups must be >= 1, got {num_groups}")
+        if levels < 1:
+            raise ValueError(f"levels must be >= 1, got {levels}")
+        self.num_groups = num_groups
+        self.levels = levels
+        # L-th root of G: every tier's rings end up comparably sized, which is
+        # what makes the per-push folder count O(G**(1/L) * L) = O(log G)
+        self.branching = (
+            max(2, math.ceil(num_groups ** (1.0 / levels))) if levels > 1
+            else num_groups
+        )
+        counts = [num_groups]
+        for _ in range(1, levels):
+            counts.append(max(1, math.ceil(counts[-1] / self.branching)))
+        self.counts = counts  # counts[t] = number of level-t origins
+        self._holders: dict[tuple[int, int], int] = {}
+        self._scopes: dict[int, dict[int, frozenset[int]]] = {}
+
+    def children(self, level: int, origin: int) -> range:
+        """Level-(level-1) origins folded into (level, origin)."""
+        s = self.branching
+        lo = origin * s
+        return range(lo, min(lo + s, self.counts[level - 1]))
+
+    def holder(self, level: int, origin: int) -> int:
+        """The group whose folder holds (level, origin)'s summary blob. Level
+        0: the group itself. Tiers: the elected child's holder, recursively —
+        distinct origins at one level have disjoint subtrees, so their holders
+        never collide."""
+        if level == 0:
+            return origin
+        key = (level, origin)
+        g = self._holders.get(key)
+        if g is None:
+            kids = self.children(level, origin)
+            g = self.holder(level - 1, kids[_elect(level, origin, len(kids))])
+            self._holders[key] = g
+        return g
+
+    def path(self, group: int) -> list[int]:
+        """``group``'s ancestor origin at each level: path[0] is the group,
+        path[t] the level-t segment covering it (contiguous chunking makes
+        this a plain integer division)."""
+        p = [group]
+        for _ in range(1, self.levels):
+            p.append(p[-1] // self.branching)
+        return p
+
+    def ring(self, level: int, origin: int) -> range:
+        """Origins of the level-``level`` ring containing ``origin``: the
+        sibling chunk under one parent, except the top level — one global
+        ring (its origins have no parent to confine them)."""
+        if level >= self.levels - 1:
+            return range(self.counts[level])
+        s = self.branching
+        lo = (origin // s) * s
+        return range(lo, min(lo + s, self.counts[level]))
+
+    def scope(self, group: int) -> dict[int, frozenset[int]]:
+        """Pull admissibility: level -> origins whose (super-)summaries
+        ``group``'s pulls fold in as pseudo-peers. Level 0 covers the own
+        segment's other groups; each tier covers exactly the leaf groups no
+        lower level reaches (the own-path origin is excluded at every level —
+        it covers the puller itself). The per-level sets therefore partition
+        the foreign fleet: nothing is double-counted."""
+        sc = self._scopes.get(group)
+        if sc is None:
+            p = self.path(group)
+            sc = {
+                t: frozenset(o for o in self.ring(t, p[t]) if o != p[t])
+                for t in range(self.levels)
+            }
+            self._scopes[group] = sc
+        return sc
+
+    def diameter(self) -> int:
+        """Worst-case push count for information to cross the fleet:
+        ``levels × max per-ring diameter`` (the property-tested bound)."""
+        per_ring = max(
+            len(self.ring(t, 0)) for t in range(self.levels)
+        )
+        return self.levels * per_ring
+
+    def __repr__(self) -> str:
+        return (f"GossipHierarchy(num_groups={self.num_groups}, "
+                f"levels={self.levels}, branching={self.branching}, "
+                f"counts={self.counts})")
+
+
+# --------------------------------------------------------------------------
 # Per-group folder routing
 # --------------------------------------------------------------------------
 
@@ -205,13 +363,17 @@ class ShardedFolders:
         num_groups: int,
         uri: str | None = None,
         *,
+        levels: int = 1,
         factory: Callable[[int], SharedFolder] | None = None,
     ):
         if num_groups < 1:
             raise ValueError(f"num_groups must be >= 1, got {num_groups}")
+        if levels < 1:
+            raise ValueError(f"levels must be >= 1, got {levels}")
         if (uri is None) == (factory is None):
             raise ValueError("pass exactly one of uri= or factory=")
         self.num_groups = num_groups
+        self.levels = levels  # summary tiers the store gossips over (1 = flat ring)
         self.uri = uri
         self._factory = factory
         self._folders: dict[int, SharedFolder] = {}
@@ -221,8 +383,12 @@ class ShardedFolders:
     def from_uri(cls, uri: str) -> "ShardedFolders":
         m = SHARD_URI_RE.match(uri)
         if not m:
-            raise ValueError(f"not a shard URI: {uri!r} (expected 'shard<G>+<uri>')")
-        return cls(int(m.group(1)), m.group(2))
+            raise ValueError(
+                f"not a shard URI: {uri!r} (expected 'shard<G>[x<L>]+<uri>')")
+        levels = int(m.group(2)) if m.group(2) is not None else 1
+        if levels < 1:
+            raise ValueError(f"shard<G>x<L>+ needs L >= 1, got {uri!r}")
+        return cls(int(m.group(1)), m.group(3), levels=levels)
 
     def group_uri(self, group: int) -> str | None:
         if self.uri is None:
@@ -245,16 +411,18 @@ class ShardedFolders:
             return folder
 
     @classmethod
-    def from_folders(cls, folders: Sequence[SharedFolder]) -> "ShardedFolders":
+    def from_folders(cls, folders: Sequence[SharedFolder], *,
+                     levels: int = 1) -> "ShardedFolders":
         folders = list(folders)
-        return cls(len(folders), factory=lambda g: folders[g])
+        return cls(len(folders), levels=levels, factory=lambda g: folders[g])
 
     def __len__(self) -> int:
         return self.num_groups
 
     def __repr__(self) -> str:
         src = self.uri if self.uri is not None else "<factory>"
-        return f"ShardedFolders(num_groups={self.num_groups}, uri={src!r})"
+        return (f"ShardedFolders(num_groups={self.num_groups}, "
+                f"levels={self.levels}, uri={src!r})")
 
 
 # --------------------------------------------------------------------------
@@ -262,28 +430,36 @@ class ShardedFolders:
 # --------------------------------------------------------------------------
 
 
-def _summary_key(origin: int, version: int, blob_hash: str) -> str:
-    """``summary/<origin>/<version>-<hash>``: the zero-padded version makes
-    freshness a plain string comparison from a key listing, and the content
-    hash makes the key name its exact bytes — two racing refreshes that land
-    on the same version scalar produce *distinct* keys, every folder picks the
-    same (lexically largest) winner, and decoded-summary caches keyed on the
-    key can never alias different params."""
-    return f"{_SUMMARY_PREFIX}{origin:04d}/{version:012d}-{blob_hash}"
+def _summary_key(origin: int, version: int, blob_hash: str, *,
+                 level: int = 0) -> str:
+    """``summary[<level>]/<origin>/<version>-<hash>``: the zero-padded version
+    makes freshness a plain string comparison from a key listing, and the
+    content hash makes the key name its exact bytes — two racing refreshes
+    that land on the same version scalar produce *distinct* keys, every folder
+    picks the same (lexically largest) winner, and decoded-summary caches
+    keyed on the key can never alias different params."""
+    return f"{_summary_prefix(level)}{origin:04d}/{version:012d}-{blob_hash}"
 
 
-def _parse_summary_key(key: str) -> tuple[str, str] | None:
-    """-> (zero-padded origin string, 'version-hash'). Both components stay
-    strings on the scan path — zero-padding makes lexical order numeric, and
-    skipping int conversions matters when every pull re-indexes every summary
-    key; the composite version orders by scalar first, content hash as the
-    deterministic tie-break."""
-    if not key.startswith(_SUMMARY_PREFIX):
+def _parse_summary_key(key: str) -> tuple[int, str, str] | None:
+    """-> (level, zero-padded origin string, 'version-hash'). Origin and
+    version stay strings on the scan path — zero-padding makes lexical order
+    numeric, and skipping int conversions matters when a pull re-indexes every
+    summary key; the composite version orders by scalar first, content hash as
+    the deterministic tie-break."""
+    if not key.startswith("summary"):
         return None
-    origin, _, version = key[len(_SUMMARY_PREFIX):].partition("/")
+    tier, _, tail = key[len("summary"):].partition("/")
+    if tier == "":
+        level = 0  # flat 'summary/' prefix — the level-0 layout
+    elif tier.isdigit():
+        level = int(tier)
+    else:
+        return None
+    origin, _, version = tail.partition("/")
     if not (origin.isdigit() and version):
         return None
-    return origin, version
+    return level, origin, version
 
 
 def _version_scalar(composite: str) -> int:
@@ -336,6 +512,10 @@ class ShardedWeightStore:
             folders = ShardedFolders.from_folders(folders)
         self.folders = folders
         self.num_groups = folders.num_groups
+        # summary-tree depth rides on the folder handle ('shard<G>x<L>+');
+        # levels=1 is the flat ring — one global level-0 ring, no tiers
+        self.levels = max(1, int(getattr(folders, "levels", 1)))
+        self.hierarchy = GossipHierarchy(self.num_groups, self.levels)
         # fail fast, like WeightStore: per-group stores are built lazily on
         # first push, far too late to learn transport= or compress= was
         # misspelled (or zstd unavailable). The throwaway pipeline runs the
@@ -363,6 +543,14 @@ class ShardedWeightStore:
         # valid wherever the blob was copied by gossip)
         self._specs: dict = {}
         self._stores: dict[int, WeightStore] = {}
+        # Memoized summary indexes, group -> (listing token, index, populated).
+        # ``SharedFolder.list_version()`` is a folder-level listing-change
+        # token: while it holds still, the parsed index is reused verbatim and
+        # steady-state pulls/forwards skip the O(keys) re-split entirely
+        # (hits/misses surface via PipelineStats). Entries are only ever
+        # replaced whole (atomic under the GIL) and the cached index is
+        # treated as read-only by every consumer.
+        self._index_memo: dict[int, tuple] = {}
         self._lock = threading.Lock()
         self._push_seq = 0  # paces the empty-group rechecks in _forward
         self._assumed_empty: set[int] = set()  # groups last seen memberless
@@ -402,7 +590,8 @@ class ShardedWeightStore:
         # serves many threaded nodes, and bare += would lose updates
         self._stats_lock = threading.Lock()
         self.num_summary_refreshes = 0
-        self.num_summary_forwards = 0
+        self.num_summary_forwards = 0  # ring copies + tier down-copies
+        self.num_super_folds = 0  # SuperSummary deposits (levels > 1)
         self.num_regroups = 0  # roster epoch bumps absorbed
         # summary-layer wire traffic (refresh deposits + ring-forward copies);
         # per-group latest/base/history bytes live on the per-group stores
@@ -469,6 +658,14 @@ class ShardedWeightStore:
             self._roster_groups = balanced_groups(nodes, self.num_groups) \
                 if nodes else None
             self._roster_epoch = epoch
+        # A regroup dissolves the old grouping: summaries (and supers folded
+        # from them) computed under the previous epoch still credit departed
+        # members, so cached decodes must not satisfy post-epoch pulls — drop
+        # them along with the listing memo and the empty-group assumptions,
+        # and let the folders' own refresh cycle rebuild the fresh view.
+        self._summary_cache.clear()
+        self._index_memo.clear()
+        self._assumed_empty.clear()
         with self._stats_lock:
             self.num_regroups += 1
         _log.info("roster epoch %d absorbed: %d members regrouped over %d groups",
@@ -528,26 +725,50 @@ class ShardedWeightStore:
 
     # -- summary plumbing -----------------------------------------------------
     @staticmethod
-    def _summary_index(keys: Iterable[str]) -> dict[str, list]:
-        """zero-padded origin string -> [freshest 'version-hash', its key,
-        stale keys], from a key listing alone — freshness comparisons AND
+    def _summary_index(keys: Iterable[str]) -> dict[tuple[int, str], list]:
+        """(level, zero-padded origin string) -> [freshest 'version-hash', its
+        key, stale keys], from a key listing alone — freshness comparisons AND
         garbage collection need no blob reads and no relisting (stale keys a
         racing writer adds after this listing are caught by the next pass)."""
-        index: dict[str, list] = {}
+        index: dict[tuple[int, str], list] = {}
         for key in keys:
             parsed = _parse_summary_key(key)
             if parsed is None:
                 continue
-            origin, version = parsed
-            have = index.get(origin)
+            level, origin, version = parsed
+            have = index.get((level, origin))
             if have is None:
-                index[origin] = [version, key, []]
+                index[(level, origin)] = [version, key, []]
             elif version > have[0]:
                 have[2].append(have[1])
                 have[0], have[1] = version, key
             else:
                 have[2].append(key)
         return index
+
+    def _indexed(self, group: int) -> tuple[dict[tuple[int, str], list], bool]:
+        """``group``'s folder summary index plus its populated flag (any
+        ``latest/`` key), memoized on the folder's listing-change token.
+        While ``list_version()`` holds still the parsed index is reused —
+        steady-state pulls and no-op forwards skip the O(keys) re-split.
+        Backends without a token (None) re-index every call; a missed
+        DiskFolder invalidation self-heals on the next listing change, and
+        the returned index must be treated as read-only (it is shared)."""
+        folder = self._folder(group)
+        stats = self._store(group).pipeline.stats
+        token = folder.list_version()
+        if token is not None:
+            memo = self._index_memo.get(group)
+            if memo is not None and memo[0] == token:
+                stats.incr("summary_index_hits")
+                return memo[1], memo[2]
+        stats.incr("summary_index_misses")
+        keys = folder.keys()
+        index = self._summary_index(keys)
+        populated = any(k.startswith("latest/") for k in keys)
+        if token is not None:
+            self._index_memo[group] = (token, index, populated)
+        return index, populated
 
     @staticmethod
     def _replace_summaries(folder: SharedFolder, stale: list | None) -> None:
@@ -558,20 +779,23 @@ class ShardedWeightStore:
             folder.delete(key)
         folder.delete(stale[1])
 
-    def load_summary(self, group: int, origin: int) -> GroupSummary | None:
-        """Freshest readable summary of ``origin`` held in ``group``'s folder
-        (diagnostics + tests; pull() uses the same resolution)."""
+    def load_summary(self, group: int, origin: int,
+                     level: int = 0) -> GroupSummary | SuperSummary | None:
+        """Freshest readable level-``level`` summary of ``origin`` held in
+        ``group``'s folder (diagnostics + tests; pull() uses the same
+        resolution)."""
         folder = self._folder(group)
-        entry = self._summary_index(folder.keys()).get(f"{origin:04d}")
+        entry = self._summary_index(folder.keys()).get((level, f"{origin:04d}"))
         if entry is None:
             return None
         _vtag, freshest, stale = entry
+        loads = deserialize_group_summary if level == 0 else deserialize_super_summary
         # freshest first, stale fallbacks next — tolerates a racing GC
         for key in [freshest, *sorted(stale, reverse=True)]:
             blob = folder.get(key)
             if blob is not None:
                 try:
-                    return deserialize_group_summary(blob)
+                    return loads(blob)
                 except (ValueError, KeyError):
                     continue
         return None
@@ -612,8 +836,7 @@ class ShardedWeightStore:
         vv = {u.node_id: int(u.counter) for u in updates}
         version = sum(c + 1 for c in vv.values())
         folder = store.folder
-        keys = folder.keys()
-        current = self._summary_index(keys).get(f"{group:04d}")
+        current = self._indexed(group)[0].get((0, f"{group:04d}"))
         if current is not None and _version_scalar(current[0]) >= version:
             return
         weights = [max(1, u.num_examples) for u in updates]
@@ -636,34 +859,41 @@ class ShardedWeightStore:
                    group, version, len(updates), len(blob))
 
     def _forward(self, group: int) -> None:
-        """Forward every summary ``group``'s folder holds to the next
-        ``gossip_fanout`` populated groups on the ring. Empty groups en route
-        don't count toward the fanout — so hash-assignment holes never cut the
+        """Forward the level-0 summaries ``group``'s folder holds to the next
+        ``gossip_fanout`` populated groups on its level-0 ring (the whole
+        fleet at ``levels=1``; the group's own segment under a hierarchy —
+        cross-segment flow is the tiers' job). Empty groups en route don't
+        count toward the fanout — so hash-assignment holes never cut the
         ring — and are *seeded once* per origin rather than kept fresh (their
         folder is read only by a node that later joins, whose own pushes then
         pull the group into the live ring); between periodic rechecks they
         don't even cost a listing. A populated target that is already as
         fresh costs one key listing, no writes."""
-        if self.num_groups <= 1:
+        ring = self.hierarchy.ring(0, group)
+        if len(ring) <= 1:
             return
-        folder = self._folder(group)
-        held = self._summary_index(folder.keys())
+        index, _populated = self._indexed(group)
+        ringset = set(ring)
+        held = [
+            (k, e) for k, e in index.items()
+            if k[0] == 0 and int(k[1]) in ringset
+        ]
         if not held:
             return
+        folder = self._folder(group)
         blobs: dict[str, bytes | None] = {}  # one home-folder read per origin,
         relayed = 0                          # however many targets need it
         # every 16th push, re-list groups assumed empty: one that gained its
         # first member starts receiving forwards within bounded delay
         recheck = self._push_seq % 16 == 0
-        for step in range(1, self.num_groups):
-            target = (group + step) % self.num_groups
+        pos = group - ring[0]
+        for step in range(1, len(ring)):
+            target = ring[(pos + step) % len(ring)]
             if target in self._assumed_empty and not recheck:
                 continue
             target_folder = self._folder(target)
-            target_keys = target_folder.keys()
-            target_index = self._summary_index(target_keys)
-            populated = any(k.startswith("latest/") for k in target_keys)
-            for origin, (vtag, key, _stale) in held.items():
+            target_index, populated = self._indexed(target)
+            for origin, (vtag, key, _stale) in held:
                 have = target_index.get(origin)
                 if have is not None and (not populated or have[0] >= vtag):
                     continue  # empty targets: seed once, don't keep fresh
@@ -685,27 +915,196 @@ class ShardedWeightStore:
             else:
                 self._assumed_empty.add(target)
 
+    # -- summary tiers (levels > 1) -------------------------------------------
+    def _fold_super(self, level: int, origin: int, holder_group: int) -> None:
+        """Fold (level, origin)'s child summaries — gathered in the holder
+        group's folder by the level-(level-1) ring — into one ``SuperSummary``
+        deposit, if any child is fresher than the current super. The version
+        scalar is the sum of folded child version scalars, so it is monotone
+        in child freshness and comparable from key listings alone; the
+        freshness check therefore reads no blobs in the steady state."""
+        hier = self.hierarchy
+        folder = self._folder(holder_group)
+        index, _pop = self._indexed(holder_group)
+        child_entries = []
+        for child in hier.children(level, origin):
+            e = index.get((level - 1, f"{child:04d}"))
+            if e is not None:
+                child_entries.append((child, e))
+        if not child_entries:
+            return
+        version = sum(_version_scalar(e[0]) for _, e in child_entries)
+        cur = index.get((level, f"{origin:04d}"))
+        if cur is not None and _version_scalar(cur[0]) >= version:
+            return
+        updates, weights = [], []
+        child_versions: dict[str, int] = {}
+        vv: dict[str, int] = {}
+        for child, (vtag, key, _stale) in child_entries:
+            update = self._summary_cache.get(key)
+            if update is None:
+                blob = folder.get(key)
+                if blob is None:
+                    continue  # GC'd under us — a racing folder is fresher
+                update = self._decode_summary(blob)
+                if update is None:
+                    continue
+                self._summary_cache.put(key, update)
+            updates.append(update)
+            weights.append(max(1, update.num_examples))
+            child_versions[str(child)] = _version_scalar(vtag)
+            # per-child counter maxima, NOT a fleet-wide node vector: the
+            # propagated counter (max over children) stays exact at every
+            # level while blob metadata stays O(branching), and the per-node
+            # truth remains one level-0 hop away via child_versions
+            vv[update.node_id] = int(update.counter)
+        if not updates:
+            return
+        version = sum(child_versions.values())
+        if cur is not None and _version_scalar(cur[0]) >= version:
+            return  # undecodable stragglers dropped us below the held super
+        summary = SuperSummary(
+            params=self._group_mean(updates, weights),
+            num_examples=sum(weights),
+            origin=origin,
+            level=level,
+            version=version,
+            child_versions=child_versions,
+            version_vector=vv,
+            timestamp=max(u.timestamp for u in updates),
+        )
+        blob = self._store(holder_group).pipeline.encode_super_summary(summary)
+        folder.put(_summary_key(origin, version, content_hash(blob),
+                                level=level), blob)
+        with self._stats_lock:
+            self.summary_bytes_written += len(blob)
+            self.num_super_folds += 1
+        self._replace_summaries(folder, cur)
+        _log.debug("super L%d.%d folded v%d (%d children, %d bytes) -> group %d",
+                   level, origin, version, len(updates), len(blob), holder_group)
+
+    def _forward_super(self, level: int, origin: int, holder_group: int) -> None:
+        """Forward the level-``level`` supers the holder's folder carries to
+        the next ``gossip_fanout`` aggregators on the level-``level`` ring.
+        Unlike level 0 there is no populated check and no seeding: ring
+        positions are origins, their holder folders are structurally active
+        whether or not the holder group has live members (any descendant's
+        push writes into them)."""
+        hier = self.hierarchy
+        ring = hier.ring(level, origin)
+        if len(ring) <= 1:
+            return
+        index, _pop = self._indexed(holder_group)
+        ringset = set(ring)
+        held = [
+            (k, e) for k, e in index.items()
+            if k[0] == level and int(k[1]) in ringset
+        ]
+        if not held:
+            return
+        folder = self._folder(holder_group)
+        blobs: dict[str, bytes | None] = {}
+        pos = origin - ring[0]
+        for step in range(1, min(len(ring), self.gossip_fanout + 1)):
+            target_origin = ring[(pos + step) % len(ring)]
+            target_group = hier.holder(level, target_origin)
+            if target_group == holder_group:
+                continue
+            target_folder = self._folder(target_group)
+            target_index, _tp = self._indexed(target_group)
+            for key2, (vtag, key, _stale) in held:
+                have = target_index.get(key2)
+                if have is not None and have[0] >= vtag:
+                    continue
+                if key not in blobs:
+                    blobs[key] = folder.get(key)
+                blob = blobs[key]
+                if blob is None:
+                    continue
+                target_folder.put(key, blob)
+                with self._stats_lock:
+                    self.summary_bytes_written += len(blob)
+                    self.num_summary_forwards += 1
+                self._replace_summaries(target_folder, have)
+
+    def _down_copy(self, group: int, level: int, holder_group: int) -> None:
+        """Copy the sibling supers ``group``'s pulls are scoped to from its
+        level-``level`` chain folder into its own folder, so a pull touches
+        exactly one folder no matter how deep the tree. Own-path origins are
+        skipped (they cover the puller itself); fresh copies land under the
+        same content-addressed keys, so decoded-summary caching is unaffected
+        by which folder a blob was read from."""
+        if holder_group == group:
+            return
+        allowed = self.hierarchy.scope(group).get(level)
+        if not allowed:
+            return
+        index, _pop = self._indexed(holder_group)
+        held = [
+            (k, e) for k, e in index.items()
+            if k[0] == level and int(k[1]) in allowed
+        ]
+        if not held:
+            return
+        own_index, _op = self._indexed(group)
+        folder = self._folder(holder_group)
+        own_folder = self._folder(group)
+        for key2, (vtag, key, _stale) in held:
+            have = own_index.get(key2)
+            if have is not None and have[0] >= vtag:
+                continue
+            blob = folder.get(key)
+            if blob is None:
+                continue
+            own_folder.put(key, blob)
+            with self._stats_lock:
+                self.summary_bytes_written += len(blob)
+                self.num_summary_forwards += 1
+            self._replace_summaries(own_folder, have)
+
+    def _tier_work(self, group: int) -> None:
+        """One push's tier duties along ``group``'s ancestor chain: fold the
+        covering super at each level, forward it on that level's ring, and
+        down-copy sibling supers into the home folder for the next pull.
+        O(branching) key work per level — O(branching × levels) per push."""
+        hier = self.hierarchy
+        path = hier.path(group)
+        for t in range(1, self.levels):
+            origin = path[t]
+            holder_group = hier.holder(t, origin)
+            with self._span(f"gossip.l{t}.fold"):
+                self._fold_super(t, origin, holder_group)
+            with self._span(f"gossip.l{t}.forward"):
+                self._forward_super(t, origin, holder_group)
+            with self._span("gossip.down"):
+                self._down_copy(group, t, holder_group)
+
     def _decode_summary(self, blob: bytes) -> NodeUpdate | None:
-        """Summary blob → pseudo-peer update, decoded straight into a flat
-        vector (a ``FlatUpdate`` sharing this store's interned specs) so that
-        downstream client-side aggregation stays on the flat hot path; falls
-        back to the tree decode for non-f32-embeddable params."""
+        """(Super-)summary blob → pseudo-peer update, decoded straight into a
+        flat vector (a ``FlatUpdate`` sharing this store's interned specs) so
+        that downstream client-side aggregation stays on the flat hot path;
+        falls back to the tree decode for non-f32-embeddable params."""
         try:
             spec, flat, meta = decode_params_flat(blob, self._specs)
-            if "summary_of" not in meta:
+            if "summary_of" in meta:
+                origin, level = int(meta["summary_of"]), 0
+            elif "super_summary_of" in meta:
+                origin = int(meta["super_summary_of"])
+                level = int(meta.get("level", 1))
+            else:
                 return None
-            origin = int(meta["summary_of"])
             version_vector = meta.get("version_vector", {})
             return FlatUpdate(
                 flat, spec,
                 num_examples=int(meta["num_examples"]),
-                node_id=f"{GROUP_PEER_PREFIX}{origin}",
-                # Node-counter units (freshest member's counter), NOT the
-                # version scalar: staleness-aware strategies (FedAsync)
-                # compare this against their own epoch counter.
+                node_id=group_peer_id(origin, level),
+                # Node-counter units (freshest covered member's counter), NOT
+                # the version scalar: staleness-aware strategies (FedAsync)
+                # compare this against their own epoch counter. For tiers the
+                # max over per-child maxima IS the max over covered nodes.
                 counter=max((int(v) for v in version_vector.values()), default=0),
                 timestamp=float(meta.get("timestamp", 0.0)),
-                metrics={"summary_of": origin,
+                metrics={"summary_of": origin, "summary_level": level,
                          "summary_version": int(meta["version"])},
             )
         except FlatDecodeUnsupported:
@@ -717,44 +1116,57 @@ class ShardedWeightStore:
             return None
         try:
             summary = deserialize_group_summary(blob)
+            level = 0
         except (ValueError, KeyError, ImportError):
-            return None
+            try:
+                summary = deserialize_super_summary(blob)
+                level = summary.level
+            except (ValueError, KeyError, ImportError):
+                return None
         return NodeUpdate(
             params=summary.params,
             num_examples=summary.num_examples,
-            node_id=f"{GROUP_PEER_PREFIX}{summary.origin}",
+            node_id=group_peer_id(summary.origin, level),
             counter=max(summary.version_vector.values(), default=0),
             timestamp=summary.timestamp,
-            metrics={"summary_of": summary.origin,
+            metrics={"summary_of": summary.origin, "summary_level": level,
                      "summary_version": summary.version},
         )
 
     def _peer_summaries(self, group: int, exclude: str) -> list[NodeUpdate]:
-        """Foreign-group summaries in ``group``'s folder as pseudo-peer
+        """Foreign (super-)summaries in ``group``'s folder as pseudo-peer
         updates, bounded to ``summary_sample`` per pull (rotating through all
-        origins across successive pulls). Tracks which (origin, version)
+        admissible entries across successive pulls). Under a hierarchy only
+        the scope partition is admissible — own level-0 segment plus one
+        sibling set per tier — so a leaked or stale out-of-scope blob can
+        never double-count a subtree. Tracks which ((level, origin), version)
         pairs ``exclude``'s pulls have been handed so ``state_hash`` can keep
         nudging the node until the rotation has covered everything."""
         folder = self._folder(group)
-        index = self._summary_index(folder.keys())
-        index.pop(f"{group:04d}", None)  # own group's members arrive as real updates
-        origins = sorted(index)  # zero-padded strings: lexical order IS numeric
-        current = {(o, index[o][0]) for o in origins}
+        index, _pop = self._indexed(group)
+        scope = self.hierarchy.scope(group)
+        # (level, zero-padded origin) pairs sort level-major, numeric within a
+        # level — a deterministic rotation order shared by every node
+        admissible = sorted(
+            k for k in index
+            if k[0] < self.levels and int(k[1]) in scope[k[0]]
+        )
+        current = {(k, index[k][0]) for k in admissible}
         served = self._served.get(exclude, set()) & current  # drop superseded pairs
         seq = self._window.get(exclude, 0)
         self._window[exclude] = seq + 1
-        window = origins
-        if self.summary_sample and len(origins) > self.summary_sample:
-            # Tile the origin space per pulling node: ITS successive pulls see
-            # disjoint sample windows, so all groups are covered in
+        window = admissible
+        if self.summary_sample and len(admissible) > self.summary_sample:
+            # Tile the entry space per pulling node: ITS successive pulls see
+            # disjoint sample windows, so all entries are covered in
             # ceil(n/sample) of its pulls and the decoded-summary cache
             # reaches steady state just as fast.
-            start = (seq * self.summary_sample) % len(origins)
-            window = (origins + origins)[start:start + self.summary_sample]
+            start = (seq * self.summary_sample) % len(admissible)
+            window = (admissible + admissible)[start:start + self.summary_sample]
         out = []
-        for origin in window:
-            vtag, key, _stale = index[origin]
-            served.add((origin, vtag))  # handed to this pull, readable or not
+        for key2 in window:
+            vtag, key, _stale = index[key2]
+            served.add((key2, vtag))  # handed to this pull, readable or not
             cached = self._summary_cache.get(key)  # refreshes LRU position
             if cached is not None:
                 out.append(cached)
@@ -770,6 +1182,14 @@ class ShardedWeightStore:
         self._served[exclude] = served
         self._rotation_pending[exclude] = len(served) < len(current)
         return out
+
+    def _span(self, name: str):
+        """Telemetry span when attached and enabled, shared no-op otherwise —
+        lets the per-level gossip phases nest without branching at each site."""
+        tel = self._telemetry
+        if tel is not None and tel.enabled:
+            return tel.span(name)
+        return _NULL_SPAN
 
     # -- the WeightStore interface -------------------------------------------
     def push(self, update: NodeUpdate) -> None:
@@ -789,14 +1209,15 @@ class ShardedWeightStore:
         # routes; per-node instances rely on the periodic recheck instead)
         self._assumed_empty.discard(group)
         self._store(group).push(update)
-        tel = self._telemetry
-        if tel is not None and tel.enabled:
-            with tel.span("gossip"):
+        # the outer "gossip" span keeps the PR-7 dashboard phase; the l<k>
+        # sub-spans show where summary time goes per level ('repro.obs watch')
+        with self._span("gossip"):
+            with self._span("gossip.l0.refresh"):
                 self._refresh_summary(group)
+            with self._span("gossip.l0.forward"):
                 self._forward(group)
-        else:
-            self._refresh_summary(group)
-            self._forward(group)
+            if self.levels > 1:
+                self._tier_work(group)
 
     def state_hash(self, exclude_node: str | None = None) -> str:
         """O(group-folder keys): only the caller's home folder is hashed. The
@@ -814,12 +1235,18 @@ class ShardedWeightStore:
                     exclude=("state/", "fleet/", "obs/")).encode())
             return h.hexdigest()[:16]
         group = self.group_of(exclude_node)
+        # own-path summary prefixes at every level: the node's own push
+        # refreshes its group summary AND (when it is on an aggregator's
+        # folder) re-folds the covering supers — self-inflicted churn that
+        # must not defeat Algorithm 1's skip check. Sibling entries at each
+        # level stay included: their arrival IS the cross-group signal.
+        path = self.hierarchy.path(group)
         exclude = (
             f"latest/{exclude_node}",
             f"base/{exclude_node}/",
             f"chain/{exclude_node}/",
             f"history/{exclude_node}/",
-            f"{_SUMMARY_PREFIX}{group:04d}/",
+            *(f"{_summary_prefix(t)}{path[t]:04d}/" for t in range(self.levels)),
             "state/",
             "fleet/",
             "obs/",
@@ -935,6 +1362,7 @@ class ShardedWeightStore:
         # populated/seeded/served memos are all invalid — drop every bit of
         # derived state along with the blobs.
         self._summary_cache.clear()
+        self._index_memo.clear()
         self._assumed_empty.clear()
         self._window.clear()
         self._served.clear()
@@ -946,6 +1374,7 @@ class ShardedWeightStore:
         including the gossip summary traffic (refreshes + ring forwards) —
         often the dominant wire cost at fleet scale."""
         hits = misses = read = 0
+        index_hits = index_misses = 0
         written = self.summary_bytes_written
         with self._lock:
             stores = list(self._stores.values())
@@ -954,6 +1383,11 @@ class ShardedWeightStore:
             misses += store.decode_misses
             written += store.bytes_written
             read += store.bytes_read
+            pstats = store.pipeline.stats.as_dict()
+            index_hits += pstats.get("summary_index_hits", 0)
+            index_misses += pstats.get("summary_index_misses", 0)
         return {"decode_hits": hits, "decode_misses": misses,
                 "bytes_written": written, "bytes_read": read,
-                "summary_bytes_written": self.summary_bytes_written}
+                "summary_bytes_written": self.summary_bytes_written,
+                "summary_index_hits": index_hits,
+                "summary_index_misses": index_misses}

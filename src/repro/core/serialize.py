@@ -452,6 +452,65 @@ def deserialize_group_summary(blob: bytes) -> GroupSummary:
     )
 
 
+# --- super-summaries (hierarchical gossip tiers) ------------------------------
+#
+# A level-k aggregator's fold of one ring segment: the example-weighted mean of
+# the segment's child summaries, plus per-child freshness (``child_versions``)
+# so staleness is detectable per level without decoding. The version vector
+# carries per-child counter *maxima* (keyed by the child's pseudo-peer id),
+# not a fleet-wide node vector: the propagated counter — what ``FedAsync``
+# discounting compares against its own epoch — stays exact through arbitrarily
+# many tiers while blob metadata stays O(branching), and the true per-node
+# vector remains one level-0 hop away. Dispatches on ``super_summary_of`` like
+# every other wire family.
+
+
+@dataclass
+class SuperSummary:
+    """One ring segment's folded deposit at tier ``level`` of the summary tree."""
+
+    params: PyTree              # example-weighted mean of the child summaries
+    num_examples: int           # total examples behind that mean
+    origin: int                 # segment index at this level
+    level: int                  # tier (>= 1; level-0 deposits are GroupSummary)
+    version: int                # sum of the child version scalars (monotone)
+    child_versions: dict        # child origin key -> version scalar folded in
+    version_vector: dict        # child pseudo-peer id -> its counter maximum
+    timestamp: float = 0.0      # newest child timestamp
+
+
+def serialize_super_summary(summary: SuperSummary, *, compress: str = "none") -> bytes:
+    return serialize_params(
+        summary.params,
+        compress=compress,
+        meta={
+            "super_summary_of": int(summary.origin),
+            "level": int(summary.level),
+            "num_examples": int(summary.num_examples),
+            "version": int(summary.version),
+            "child_versions": {str(k): int(v) for k, v in summary.child_versions.items()},
+            "version_vector": {str(k): int(v) for k, v in summary.version_vector.items()},
+            "timestamp": float(summary.timestamp),
+        },
+    )
+
+
+def deserialize_super_summary(blob: bytes) -> SuperSummary:
+    params, meta = deserialize_params(blob)
+    if "super_summary_of" not in meta:
+        raise ValueError("not a super-summary blob")
+    return SuperSummary(
+        params=params,
+        num_examples=int(meta["num_examples"]),
+        origin=int(meta["super_summary_of"]),
+        level=int(meta["level"]),
+        version=int(meta["version"]),
+        child_versions={str(k): int(v) for k, v in meta["child_versions"].items()},
+        version_vector={str(k): int(v) for k, v in meta["version_vector"].items()},
+        timestamp=float(meta.get("timestamp", 0.0)),
+    )
+
+
 # --- strategy-state recovery blobs -------------------------------------------
 #
 # A node's optimizer state (FedAvgM momentum, FedAdam/FedYogi/FedAdagrad

@@ -93,6 +93,15 @@ class SharedFolder(ABC):
         missing) — callers must fetch."""
         return None
 
+    def list_version(self) -> Any | None:
+        """Cheap folder-level change token: two calls returning equal
+        non-None values imply the *key listing* (membership, not blob
+        contents) is unchanged, so a parsed index over ``keys()`` may be
+        reused. ``None`` means the backend cannot answer cheaper than
+        listing — callers must re-list. Used by the sharded gossip store to
+        skip re-splitting every summary key on steady-state pulls."""
+        return None
+
     def put_if_absent(self, key: str, blob: bytes) -> bool:
         """Create ``key`` only if it does not exist; True when THIS call
         created it. The fleet launcher's slot-claim primitive: concurrent
@@ -153,12 +162,19 @@ class InMemoryFolder(SharedFolder):
 
     def delete(self, key: str) -> None:
         with self._lock:
-            self._blobs.pop(key, None)
+            # the vclock doubles as the listing token, so deletes must
+            # advance it even though the departed key's version is dropped
+            if self._blobs.pop(key, None) is not None:
+                self._vclock += 1
             self._versions.pop(key, None)
 
     def version(self, key: str) -> int | None:
         with self._lock:
             return self._versions.get(key)
+
+    def list_version(self) -> int:
+        with self._lock:
+            return self._vclock
 
     def put_if_absent(self, key: str, blob: bytes) -> bool:
         with self._lock:
@@ -266,6 +282,18 @@ class DiskFolder(SharedFolder):
         # put() always replaces via a fresh temp file, so the inode changes on
         # every write — (inode, mtime, size) survives coarse mtime clocks.
         return (st.st_ino, st.st_mtime_ns, st.st_size)
+
+    def list_version(self) -> tuple[int, int, int] | None:
+        """Directory stat as the listing token: every put (mkstemp + rename
+        into the directory) and delete (unlink) updates the directory's
+        mtime/ctime on POSIX. A sub-nanosecond double-write could repeat a
+        token, so consumers must only use this where a missed invalidation
+        self-heals on the next write (the gossip summary index does)."""
+        try:
+            st = os.stat(self.directory)
+        except FileNotFoundError:
+            return None
+        return (st.st_mtime_ns, st.st_ctime_ns, st.st_size)
 
     def state_hash(self, exclude: str | tuple[str, ...] | None = None) -> str:
         skip = _exclusion(exclude)
@@ -429,6 +457,9 @@ class CachingFolder(SharedFolder):
     def version(self, key: str) -> Any | None:
         return self.inner.version(key)
 
+    def list_version(self) -> Any | None:
+        return self.inner.list_version()
+
     def state_hash(self, exclude: str | tuple[str, ...] | None = None) -> str:
         return self.inner.state_hash(exclude=exclude)
 
@@ -503,6 +534,9 @@ class RetryFolder(SharedFolder):
 
     def version(self, key: str) -> Any | None:
         return self._call(self.inner.version, key)
+
+    def list_version(self) -> Any | None:
+        return self._call(self.inner.list_version)
 
     def state_hash(self, exclude: str | tuple[str, ...] | None = None) -> str:
         return self._call(self.inner.state_hash, exclude)
@@ -886,6 +920,9 @@ def make_folder(uri: str):
     per-group folders of the inner kind (e.g. 'shard16+/mnt/shared/exp1',
     'shard8+cache+s3://bucket/exp1') — which the federated nodes turn into a
     gossip-sharded ``ShardedWeightStore`` instead of a flat ``WeightStore``.
+    'shard<G>x<L>+<uri>' (e.g. 'shard64x2+/mnt/shared/exp1') additionally
+    federates the G groups through an L-level hierarchical summary tree
+    (rings of rings) instead of one flat ring — the planetary-scale layout.
 
     The URI grammar is the folder-side half of the transport spec grammar;
     ``transport.parse_folder_uri`` owns the parse. Wrappers apply

@@ -37,7 +37,7 @@ Spec grammar::
     so sub-specs nest inside ``family(...)`` without escaping.
 
     folder URIs share the stage idea with "+" as the separator:
-    uri       := (wrapper "+")* base           # wrapper: cache | shard<G>
+    uri       := (wrapper "+")* base   # wrapper: cache | retry | shard<G>[x<L>]
     base      := path | memory:// | s3://bucket/prefix
 
 Legacy ``transport=`` strings map onto the grammar (``delta_q`` →
@@ -93,6 +93,7 @@ from .serialize import (
     maybe_decompress,
     peek_meta,
     serialize_group_summary,
+    serialize_super_summary,
     serialize_update,
     serialize_update_delta,
     serialize_update_delta_from_flat,
@@ -156,7 +157,10 @@ class _LruCache:
 # --------------------------------------------------------------------------
 
 _STAGE_RE = re.compile(r"^([A-Za-z_][\w]*)\s*(?:\((.*)\))?$", re.DOTALL)
-_SHARD_RE = re.compile(r"^shard(\d+)\+(.+)$", re.DOTALL)
+# ``shard<G>+<uri>`` — G node groups, single gossip ring (level 1);
+# ``shard<G>x<L>+<uri>`` — G groups federated through an L-level summary tree
+# (hierarchical gossip: rings of rings, push cost O(fanout·levels))
+_SHARD_RE = re.compile(r"^shard(\d+)(?:x(\d+))?\+(.+)$", re.DOTALL)
 
 _POLICIES = ("full", "quantized", "delta", "topk", "family")
 _ENVELOPES = ("npz", "zstd")
@@ -407,7 +411,9 @@ def family_transport_spec(families, default: str = "full") -> str:
 
 def parse_folder_uri(uri: str) -> tuple[list[tuple[str, dict]], str]:
     """Folder-URI side of the grammar: ``"shard8+cache+/mnt/x"`` →
-    ``([("shard", {"groups": 8}), ("cache", {})], "/mnt/x")``. Wrappers apply
+    ``([("shard", {"groups": 8, "levels": 1}), ("cache", {})], "/mnt/x")``.
+    ``shard8x2+...`` parses to ``{"groups": 8, "levels": 2}`` — an 8-group
+    store gossiping through a 2-level summary tree. Wrappers apply
     outermost-first; the base URI is whatever remains (path / memory:// /
     s3://). ``retry+`` wraps the folder beneath it with capped
     exponential-backoff retries on transient I/O errors (flaky NFS /
@@ -416,8 +422,13 @@ def parse_folder_uri(uri: str) -> tuple[list[tuple[str, dict]], str]:
     while True:
         m = _SHARD_RE.match(uri)
         if m:
-            wrappers.append(("shard", {"groups": int(m.group(1))}))
-            uri = m.group(2)
+            levels = int(m.group(2)) if m.group(2) is not None else 1
+            if levels < 1:
+                raise ValueError(
+                    f"shard<G>x<L>+ needs L >= 1, got {levels} in {uri!r}")
+            wrappers.append(("shard", {"groups": int(m.group(1)),
+                                       "levels": levels}))
+            uri = m.group(3)
             continue
         if uri.startswith("cache+"):
             wrappers.append(("cache", {}))
@@ -453,6 +464,10 @@ class PipelineStats:
         "decode_hits", "decode_misses", "rebases", "reanchors",
         "chain_depth", "max_chain_depth", "resolve_hops", "max_resolve_hops",
         "topk_k", "prefetch_cycles", "prefetched", "folder_retries",
+        # gossip summary-listing memo (ShardedWeightStore): a hit means the
+        # folder's listing token was unchanged and the parsed summary index
+        # was reused without re-splitting every key
+        "summary_index_hits", "summary_index_misses",
     )
     _FLOAT_FIELDS = ("residual_norm", "topk_fraction_effective")
 
@@ -1177,6 +1192,10 @@ class TransportPipeline:
     def encode_summary(self, summary) -> bytes:
         """Gossip group summaries ride the pipeline's envelope."""
         return serialize_group_summary(summary, compress=self.compress_arg)
+
+    def encode_super_summary(self, summary) -> bytes:
+        """Hierarchical-gossip tier folds ride the same envelope."""
+        return serialize_super_summary(summary, compress=self.compress_arg)
 
     @property
     def compress_arg(self) -> str:

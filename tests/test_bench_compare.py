@@ -1,0 +1,75 @@
+"""benchmarks.compare robustness: the nightly trend table is report-only, so
+a missing, corrupt, or partially-overlapping baseline must degrade to "new"
+rows — never crash the workflow."""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.compare import (  # noqa: E402
+    DEFAULT_NAMES,
+    compare_payloads,
+    load,
+    main,
+    render_markdown,
+)
+
+
+def _bench(results):
+    return {"schema_version": 1, "git_sha": "deadbeef", "timestamp": "t",
+            "results": results, "acceptance": {"passed": True}}
+
+
+def test_gossip_bench_is_compared_by_default():
+    assert "BENCH_gossip.json" in DEFAULT_NAMES
+
+
+def test_load_tolerates_corrupt_and_non_dict_files(tmp_path):
+    missing = tmp_path / "nope.json"
+    corrupt = tmp_path / "corrupt.json"
+    corrupt.write_text("{truncated nightly upload")
+    nondict = tmp_path / "list.json"
+    nondict.write_text("[1, 2, 3]")
+    ok = tmp_path / "ok.json"
+    ok.write_text(json.dumps(_bench({"a": 1.0})))
+    assert load(str(missing)) is None
+    assert load(str(corrupt)) is None
+    assert load(str(nondict)) is None
+    assert load(str(ok))["results"] == {"a": 1.0}
+
+
+def test_missing_baseline_key_reports_new_not_crash():
+    baseline = _bench({"1000": {"push_us": 10.0}})
+    current = _bench({"1000": {"push_us": 12.0},
+                      "100000": {"push_us": 11.0}})  # key absent in baseline
+    rows = dict((p, (b, c, d)) for p, b, c, d in
+                compare_payloads(baseline, current))
+    assert rows["results/1000/push_us"][2] is not None  # delta computed
+    base, _cur, delta = rows["results/100000/push_us"]
+    assert base is None and delta is None
+    md = render_markdown("BENCH_gossip.json", baseline, current)
+    assert "| new |" in md and "+20.0%" in md
+
+
+def test_main_survives_corrupt_baseline_dir(tmp_path, capsys):
+    base_dir = tmp_path / "baseline"
+    cur_dir = tmp_path / "cur"
+    base_dir.mkdir()
+    cur_dir.mkdir()
+    (base_dir / "BENCH_gossip.json").write_text("not json at all")
+    (cur_dir / "BENCH_gossip.json").write_text(
+        json.dumps(_bench({"1000": {"push_us": 5.0}})))
+    rc = main(["--baseline-dir", str(base_dir), "--current-dir", str(cur_dir),
+               "--names", "BENCH_gossip.json"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "new" in out  # every metric degrades to new, report still renders
+
+
+def test_main_flags_missing_current(tmp_path, capsys):
+    rc = main(["--baseline-dir", str(tmp_path), "--current-dir", str(tmp_path),
+               "--names", "BENCH_gossip.json"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "current run missing" in out

@@ -466,6 +466,34 @@ def test_churn_soak_worker_death_and_adoption(tmp_path):
     assert "adopted" in report.summary()
 
 
+def test_adopter_result_survives_split_brain_deposit_race(tmp_path):
+    """A lease can lapse under a LIVE worker (heartbeat starvation on an
+    oversubscribed host, not death); an adopter then double-drives the node.
+    Whichever driver deposits last, the churn ledger must read adopted=True
+    for the stranded lease: epoch-0 deposits never clobber an adopter's."""
+    from repro.core.fleet import _RESULT_PREFIX, _read_fleet_blob, _soak_client
+
+    spec = _spec(tmp_path, num_nodes=1, rounds=2, round_sleep=0.0)
+    control = control_folder(spec.store_uri)
+    nid = spec.node_id(0)
+
+    # adopter deposits first; the original (epoch-0) driver finishes later
+    # and must keep the adopter's record
+    _soak_client(spec.to_dict(), 0, adopted_epoch=1)
+    _soak_client(spec.to_dict(), 0)
+    result = _read_fleet_blob(control, f"{_RESULT_PREFIX}{nid}")
+    assert result["adopted"] is True and result["lease_epoch"] == 1
+
+    # reverse order in a fresh store: the adopter overwrites the epoch-0
+    # deposit, so adopted=True sticks either way
+    spec2 = _spec(tmp_path / "b", num_nodes=1, rounds=2, round_sleep=0.0)
+    control2 = control_folder(spec2.store_uri)
+    _soak_client(spec2.to_dict(), 0)
+    _soak_client(spec2.to_dict(), 0, adopted_epoch=1)
+    result2 = _read_fleet_blob(control2, f"{_RESULT_PREFIX}{nid}")
+    assert result2["adopted"] is True and result2["lease_epoch"] == 1
+
+
 def test_late_joiner_adopts_ghost_fleet(tmp_path):
     """Elastic join: a worker arriving AFTER the founding worker died finds
     only expired leases, adopts every slot, and completes the soak alone."""
@@ -524,9 +552,12 @@ def test_backstop_disarmed_when_victim_finishes_cleanly(tmp_path):
     for key in list(control.keys()):  # clear the control plane, keep latest/
         if key.startswith("fleet/"):
             control.delete(key)
+    # kill_grace must comfortably exceed process spawn + import time on a
+    # loaded machine: the victim only "finishes cleanly" if it gets to run
+    # before the backstop fires (1.0s flaked under full-suite load)
     chaotic = _spec(tmp_path, runner="process", num_nodes=2, rounds=3,
                     round_sleep=0.05, settle=0.3, result_timeout=60.0,
-                    chaos=ChaosSpec(seed=2, kills=1, kill_grace=1.0,
+                    chaos=ChaosSpec(seed=2, kills=1, kill_grace=5.0,
                                     restart_after=0.1))
     write_spec(control, chaotic)
     report = run_worker(spec=chaotic, control=control, worker_id="rerun",

@@ -39,9 +39,10 @@ def params(v, n=4):
     return {"w": np.full((n,), float(v), np.float32)}
 
 
-def fresh_sharded(num_groups, **kwargs):
+def fresh_sharded(num_groups, levels=1, **kwargs):
     return ShardedWeightStore(
-        ShardedFolders(num_groups, factory=lambda g: InMemoryFolder()), **kwargs
+        ShardedFolders(num_groups, levels=levels,
+                       factory=lambda g: InMemoryFolder()), **kwargs
     )
 
 
@@ -71,6 +72,35 @@ def test_deserialize_group_summary_rejects_non_summary():
     blob = serialize_update(NodeUpdate(params(0.0), num_examples=1, node_id="n"))
     with pytest.raises(ValueError):
         deserialize_group_summary(blob)
+
+
+def test_super_summary_roundtrip_and_meta_dispatch():
+    from repro.core import SuperSummary, deserialize_super_summary, serialize_super_summary
+
+    s = SuperSummary(
+        params=params(2.5),
+        num_examples=120,
+        origin=2,
+        level=1,
+        version=31,
+        child_versions={"6": 14, "7": 17},
+        version_vector={"group:6": 4, "group:7": 9},
+        timestamp=3.5,
+    )
+    blob = serialize_super_summary(s)
+    meta = peek_meta(blob)  # cheap dispatch, like summary_of / delta_of
+    assert meta["super_summary_of"] == 2 and meta["level"] == 1
+    s2 = deserialize_super_summary(blob)
+    assert np.array_equal(s2.params["w"], s.params["w"])
+    assert (s2.num_examples, s2.origin, s2.level, s2.version, s2.timestamp) == (
+        120, 2, 1, 31, 3.5)
+    assert s2.child_versions == {"6": 14, "7": 17}
+    assert s2.version_vector == {"group:6": 4, "group:7": 9}
+    # a plain group summary is NOT a super-summary
+    g = GroupSummary(params=params(1.0), num_examples=1, origin=0, version=1,
+                     version_vector={"a": 0})
+    with pytest.raises(ValueError):
+        deserialize_super_summary(serialize_group_summary(g))
 
 
 # --- group assignment properties ---------------------------------------------
@@ -537,12 +567,16 @@ def test_summary_index_breaks_version_ties_deterministically():
             "summary/0001/000000000010-bbbb2222",
             "summary/0001/000000000009-cccc3333"]
     index = S._summary_index(keys)
-    version, winner, stale = index["0001"]
+    version, winner, stale = index[(0, "0001")]
     assert winner == "summary/0001/000000000010-bbbb2222"
     assert set(stale) == set(keys) - {winner}
     # and a higher version always beats any hash
     index2 = S._summary_index(keys + ["summary/0001/000000000011-0000aaaa"])
-    assert index2["0001"][1] == "summary/0001/000000000011-0000aaaa"
+    assert index2[(0, "0001")][1] == "summary/0001/000000000011-0000aaaa"
+    # tier keys index separately from same-origin level-0 keys
+    index3 = S._summary_index(keys + ["summary1/0001/000000000007-dddd4444"])
+    assert index3[(1, "0001")][1] == "summary1/0001/000000000007-dddd4444"
+    assert index3[(0, "0001")][1] == winner
 
 
 def test_forward_seeds_empty_groups_once_not_per_push():
@@ -753,3 +787,285 @@ def test_factory_store_without_uri_skips_roster_probe():
     assert explicit.refresh_roster() is True
     assert explicit.roster_epoch == 0
     assert explicit.group_of("a") == balanced_groups(["a", "b", "c"], 2)["a"]
+
+
+# --- hierarchical tiers (shard<G>x<L>+) --------------------------------------
+
+
+def _leaves(hier, level, origin):
+    """Level-0 origins covered by (level, origin) in the summary tree."""
+    if level == 0:
+        return [origin]
+    out = []
+    for child in hier.children(level, origin):
+        out.extend(_leaves(hier, level - 1, child))
+    return out
+
+
+@settings(max_examples=20)
+@given(st.integers(1, 40), st.integers(1, 4))
+def test_hierarchy_topology_invariants(num_groups, levels):
+    """The summary tree is pure arithmetic on (num_groups, levels): holders
+    are distinct per level and descend from their own subtree, and every
+    group's pull scope partitions the foreign fleet — each leaf group is
+    covered by exactly one admissible (level, origin)."""
+    from repro.core import GossipHierarchy
+
+    h = GossipHierarchy(num_groups, levels)
+    assert h.counts[0] == num_groups
+    for t in range(1, levels):
+        holders = [h.holder(t, o) for o in range(h.counts[t])]
+        assert len(set(holders)) == h.counts[t]  # disjoint subtrees: no collisions
+        for o, g in enumerate(holders):
+            assert g in _leaves(h, t, o)
+        # a second instance derives the identical election with no communication
+        assert holders == [GossipHierarchy(num_groups, levels).holder(t, o)
+                           for o in range(h.counts[t])]
+    for g in range(num_groups):
+        covered = [g]
+        for t, origins in h.scope(g).items():
+            for o in origins:
+                covered.extend(_leaves(h, t, o))
+        assert sorted(covered) == list(range(num_groups)), (g, h)
+
+
+def test_shard_levels_uri_routing(tmp_path):
+    f = make_folder(f"shard8x2+{tmp_path}")
+    assert isinstance(f, ShardedFolders)
+    assert f.num_groups == 8 and f.levels == 2
+    store = ShardedWeightStore(f)
+    assert store.levels == 2
+    assert store.hierarchy.branching == 3  # ceil(8 ** (1/2))
+    # plain shard<G>+ is the L=1 degenerate case
+    assert make_folder(f"shard4+{tmp_path}").levels == 1
+    with pytest.raises(ValueError):
+        make_folder("shard8x0+memory://")
+
+
+def _run_marked_round(store, counters, order, marked, tstamp):
+    """One gossip round where ``marked``'s pushes carry ``tstamp`` — a
+    monotone marker that (super-)summaries propagate via their max-timestamp
+    fold, so 'group g has heard' is readable from g's folder alone."""
+    for nid in order:
+        counters[nid] += 1
+        store.push(NodeUpdate(params(counters[nid]), num_examples=1, node_id=nid,
+                              counter=counters[nid],
+                              timestamp=tstamp if nid == marked else 0.0))
+
+
+def _groups_hearing(store, tstamp):
+    """Groups whose own folder holds any (super-)summary carrying the marker."""
+    from repro.core.gossip import _parse_summary_key
+
+    heard = set()
+    for g in range(store.num_groups):
+        for key in store.folders.group_folder(g).keys():
+            parsed = _parse_summary_key(key)
+            if parsed is None:
+                continue
+            level, ostr, _v = parsed
+            s = store.load_summary(g, int(ostr), level)
+            if s is not None and s.timestamp >= tstamp:
+                heard.add(g)
+                break
+    return heard
+
+
+@settings(max_examples=6)
+@given(st.integers(4, 9), st.integers(2, 3), st.integers(1, 2),
+       st.integers(0, 2**31 - 1))
+def test_update_crosses_hierarchy_within_tiered_diameter(num_groups, levels,
+                                                         per_group, seed):
+    """The ≥2-level convergence bound: information planted in an arbitrary
+    level-0 group reaches every group within ``levels × per-ring-diameter``
+    rounds (``GossipHierarchy.diameter()``), under adversarial per-round push
+    orderings — level-0 rings carry it to the aggregator, tier folds lift it,
+    shorter rings spread it, down-copies land it in every home folder."""
+    node_ids = [f"n{i}" for i in range(num_groups * per_group)]
+    mapping = {nid: i % num_groups for i, nid in enumerate(node_ids)}
+    store = fresh_sharded(num_groups, levels=levels, group_of=mapping)
+    rng = np.random.default_rng(seed)
+    counters = {nid: -1 for nid in node_ids}
+    marked = "n0"  # lives in group 0; the planted group is arbitrary by symmetry
+    MARK = 1e9
+
+    order = list(node_ids)
+    rng.shuffle(order)
+    _run_marked_round(store, counters, order, None, 0.0)  # seed round
+
+    bound = store.hierarchy.diameter()
+    rounds_needed = None
+    for r in range(1, bound + 1):
+        order = list(node_ids)
+        rng.shuffle(order)
+        _run_marked_round(store, counters, order, marked, MARK)
+        if _groups_hearing(store, MARK) == set(range(num_groups)):
+            rounds_needed = r
+            break
+    assert rounds_needed is not None and rounds_needed <= bound, (
+        num_groups, levels, per_group, seed, _groups_hearing(store, MARK))
+
+
+def test_two_level_pull_covers_fleet_exactly_once():
+    """The scope partition in action: after convergence every node's pull —
+    home peers as real updates, segment siblings as level-0 summaries, the
+    rest of the fleet as supers — covers the fleet's example weight exactly
+    once, and the weighted mean equals the global mean (no double counting,
+    nothing dropped)."""
+    num_groups, per_group = 9, 2
+    node_ids = [f"n{i}" for i in range(num_groups * per_group)]
+    mapping = {nid: i % num_groups for i, nid in enumerate(node_ids)}
+    store = fresh_sharded(num_groups, levels=2, group_of=mapping)
+    # fixed per-node values (counters still advance so versions stay monotone);
+    # summaries lag a round in *staleness* but never in *value*
+    values = {nid: float(i) for i, nid in enumerate(node_ids)}
+    for rnd in range(store.hierarchy.diameter() + 1):
+        for nid in node_ids:
+            store.push(NodeUpdate(params(values[nid]), num_examples=1,
+                                  node_id=nid, counter=rnd))
+    fleet_mean = np.mean([values[nid] for nid in node_ids])
+    for nid in node_ids:
+        pulled = store.pull(exclude=nid)
+        ids = [u.node_id for u in pulled]
+        assert len(ids) == len(set(ids)), ids  # no duplicate peers
+        total = sum(u.num_examples for u in pulled)
+        assert total == len(node_ids) - 1, (nid, ids)
+        acc = sum(u.num_examples * np.asarray(u.params["w"], np.float64)
+                  for u in pulled)
+        mean = (acc + values[nid]) / len(node_ids)
+        assert np.allclose(mean, fleet_mean, rtol=1e-5), (nid, mean, fleet_mean)
+
+
+def test_super_summary_counter_is_max_descendant_counter():
+    """FedAsync-style discounting sees true staleness through the tiers: a
+    super pseudo-peer's counter equals the max node counter it covers, even
+    though its version vector is per-child maxima, not a fleet-wide vector."""
+    num_groups = 9
+    node_ids = [f"n{i}" for i in range(num_groups)]
+    mapping = {nid: i for i, nid in enumerate(node_ids)}
+    store = fresh_sharded(num_groups, levels=2, group_of=mapping)
+    # node i pushes up to counter i: per-group staleness differs
+    for rnd in range(num_groups):
+        for i, nid in enumerate(node_ids):
+            if i >= rnd:
+                store.push(NodeUpdate(params(i), num_examples=1, node_id=nid,
+                                      counter=rnd))
+    for _ in range(store.hierarchy.diameter()):
+        for i, nid in enumerate(node_ids):
+            store.push(NodeUpdate(params(i), num_examples=1, node_id=nid,
+                                  counter=i))
+    hier = store.hierarchy
+    pulled = store.pull(exclude="n0")
+    supers = [u for u in pulled if u.node_id.startswith(f"{GROUP_PEER_PREFIX}L")]
+    assert supers, [u.node_id for u in pulled]
+    for u in supers:
+        origin = u.metrics["summary_of"]
+        level = u.metrics["summary_level"]
+        covered = _leaves(hier, level, origin)
+        assert u.counter == max(covered), (u.node_id, u.counter, covered)
+
+
+def test_own_push_does_not_defeat_skip_check_hierarchical():
+    """Algorithm 1's fast path survives the tiers: a push on an aggregator
+    group refreshes its level-0 summary AND re-folds the covering supers into
+    its own folder — all excluded from the pusher's own state hash."""
+    from repro.core import GossipHierarchy
+
+    hier = GossipHierarchy(4, 2)
+    # pick the group that holds its own covering super (an aggregator)
+    agg = next(g for g in range(4) if hier.holder(1, hier.path(g)[1]) == g)
+    store = fresh_sharded(4, levels=2, group_of={"solo": agg})
+    node = AsyncFederatedNode(strategy=FedAvg(), store=store, node_id="solo")
+    assert node.update_parameters(params(1.0), 10) is None
+    pulls = node.num_pulls
+    for i in range(3):
+        assert node.update_parameters(params(float(i)), 10) is None
+    assert node.num_pulls == pulls
+    assert node.num_skipped_pulls >= 3
+
+
+# --- the listing memo (PipelineStats: summary_index_hits/misses) -------------
+
+
+def test_summary_listing_memo_skips_reindex_on_quiet_folders():
+    """Steady-state pulls with unchanged listings reuse the parsed summary
+    index (keyed on the folder's listing-change token); any deposit moves the
+    token and forces exactly one re-index."""
+    store = fresh_sharded(2, group_of={"a": 0, "b": 1})
+    counters = {"a": -1, "b": -1}
+    for _ in range(3):
+        _run_round(store, counters, ["a", "b"])
+    store.pull(exclude="a")  # warm-up: absorb the last round's token move
+    base = store.cache_stats()
+    assert base["summary_index_misses"] > 0  # cold indexes were built
+    for _ in range(5):
+        store.pull(exclude="a")
+    after = store.cache_stats()
+    assert after["summary_index_hits"] >= base["summary_index_hits"] + 5
+    assert after["summary_index_misses"] == base["summary_index_misses"]
+    # b's push forwards a fresher summary into a's folder -> token moves
+    counters["b"] += 1
+    store.push(NodeUpdate(params(5.0), num_examples=1, node_id="b",
+                          counter=counters["b"]))
+    store.pull(exclude="a")
+    assert store.cache_stats()["summary_index_misses"] > after["summary_index_misses"]
+
+
+def test_listing_memo_never_serves_stale_index():
+    """The memo is an optimization, not a consistency layer: a fresh deposit
+    must be visible to the next pull (the token moved), and pulls on a
+    tokenless backend still work (every call re-indexes)."""
+    store = fresh_sharded(3, group_of={"a": 0, "b": 1})
+    counters = {"a": -1, "b": -1}
+    for _ in range(4):
+        _run_round(store, counters, ["a", "b"])
+    before = [u for u in store.pull(exclude="a")
+              if u.node_id == f"{GROUP_PEER_PREFIX}1"]
+    assert before
+    v0 = before[0].metrics["summary_version"]
+    counters["b"] += 1
+    store.push(NodeUpdate(params(123.0), num_examples=1, node_id="b",
+                          counter=counters["b"]))
+    counters["a"] += 1
+    store.push(NodeUpdate(params(0.0), num_examples=1, node_id="a",
+                          counter=counters["a"]))
+    after = [u for u in store.pull(exclude="a")
+             if u.node_id == f"{GROUP_PEER_PREFIX}1"]
+    assert after and after[0].metrics["summary_version"] > v0
+
+
+# --- regroup invalidation (satellite: stale caches must not survive epochs) --
+
+
+def test_regroup_invalidates_decoded_summary_and_index_caches():
+    """Regression: a roster epoch bump regroups the fleet — summaries decoded
+    under the old grouping (and memoized listings) must not satisfy post-epoch
+    pulls; the caches drop and rebuild from the folders."""
+    from repro.core import write_roster
+
+    roster = InMemoryFolder()
+    store = ShardedWeightStore(
+        ShardedFolders(3, factory=lambda g: InMemoryFolder()),
+        roster_folder=roster, roster_check_every=10**6)
+    nodes = [f"node{i:04d}" for i in range(9)]
+    write_roster(roster, nodes)
+    assert store.refresh_roster() is True
+    counters = {n: -1 for n in nodes}
+    for _ in range(4):
+        _run_round(store, counters, nodes)
+    for n in nodes:
+        store.pull(exclude=n)
+    assert len(store._summary_cache) > 0
+    assert store._index_memo
+    # membership changes -> next epoch -> regroup: derived caches are dropped
+    write_roster(roster, nodes[:6])
+    assert store.refresh_roster() is True
+    assert len(store._summary_cache) == 0
+    assert not store._index_memo
+    # and the post-epoch pull path rebuilds cleanly from the folders
+    survivors = {n: counters[n] for n in nodes[:6]}
+    for _ in range(4):
+        _run_round(store, survivors, nodes[:6])
+    pulled = store.pull(exclude=nodes[0])
+    assert pulled  # fresh decodes, no crash, no pre-epoch cache hits
+    assert len(store._summary_cache) > 0

@@ -397,7 +397,11 @@ def test_pipeline_spec_grammar_and_legacy_mapping():
     assert normalize_transport("delta(chain=1)") == "delta"
     # the folder-URI side of the grammar is the same parser family
     wrappers, base = parse_folder_uri("shard8+cache+/mnt/x")
-    assert wrappers == [("shard", {"groups": 8}), ("cache", {})]
+    assert wrappers == [("shard", {"groups": 8, "levels": 1}), ("cache", {})]
+    assert base == "/mnt/x"
+    # the x<L> extension selects hierarchical summary tiers
+    wrappers, base = parse_folder_uri("shard64x2+/mnt/x")
+    assert wrappers == [("shard", {"groups": 64, "levels": 2})]
     assert base == "/mnt/x"
     assert parse_folder_uri("memory://") == ([], "memory://")
 
@@ -761,7 +765,8 @@ def test_parse_folder_uri_retry_wrapper():
     wrappers, base = parse_folder_uri("retry+cache+/mnt/x")
     assert wrappers == [("retry", {}), ("cache", {})] and base == "/mnt/x"
     wrappers, base = parse_folder_uri("shard4+retry+cache+/mnt/x")
-    assert wrappers == [("shard", {"groups": 4}), ("retry", {}), ("cache", {})]
+    assert wrappers == [("shard", {"groups": 4, "levels": 1}),
+                        ("retry", {}), ("cache", {})]
 
 
 def test_make_folder_retry_composition(tmp_path):
