@@ -19,7 +19,8 @@ import os
 from ._schema import numeric_metrics
 
 DEFAULT_NAMES = ("BENCH_agg.json", "BENCH_transport.json", "BENCH_soak.json",
-                 "BENCH_llm.json", "BENCH_obs.json", "BENCH_gossip.json")
+                 "BENCH_llm.json", "BENCH_obs.json", "BENCH_gossip.json",
+                 "BENCH_serve.json")
 
 
 def load(path: str) -> dict | None:

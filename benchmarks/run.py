@@ -990,6 +990,141 @@ def bench_obs(trials: int, sizes=None):
             f"acceptance_passed={payload['acceptance']['passed']}")
 
 
+def bench_serve(trials: int, sizes=None):
+    """Serving-tier SLOs: a pusher thread plays the fleet (fresh aggregated
+    rounds) while a ServingNode serves batched greedy decode continuously.
+    Measures tokens/sec, hot-swap latency percentiles, rounds-behind-store
+    staleness, and per-token decode latency DURING swaps vs steady state.
+    Writes BENCH_serve.json; acceptance (the zero-downtime claim, measured):
+    p99 decode latency during swaps <= 2x steady-state p99 at the largest
+    size."""
+    import threading
+    import uuid
+
+    import jax
+
+    from repro.api import connect
+    from repro.configs import get_config
+    from repro.core.serialize import NodeUpdate
+    from repro.models import ModelConfig, build_model
+    from repro.serving import ServingNode
+
+    def _cfg_for(n: int) -> ModelConfig:
+        if n <= 10**6:
+            return get_config("pythia-14m").reduced()
+        if n <= 3 * 10**7:
+            return get_config("pythia-14m")
+        return ModelConfig(
+            name="servelm-95m",
+            n_layers=12, d_model=512, n_heads=8, n_kv_heads=8, d_ff=2048,
+            vocab_size=50304, activation="gelu", dtype="float32",
+            source="Pythia-style ~100M (arXiv:2304.01373)")
+
+    sizes = sizes or [10**5, 10**8]
+    B, S, NT = 4, 32, 16
+    results = {}
+    for n in sizes:
+        cfg = _cfg_for(int(n))
+        params = build_model(cfg).init(jax.random.PRNGKey(0))
+        n_params = int(sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params)))
+        uri = f"memory://bench-serve-{uuid.uuid4().hex[:8]}"
+        # delta wire: the pusher re-deposits the same weights under fresh
+        # counters, so every round after the base anchor is a cheap no-change
+        # delta — the bench measures the serving path, not npz encode time
+        pusher = connect(uri, transport="delta")
+        counter = 0
+
+        def push():
+            nonlocal counter
+            pusher.push(NodeUpdate(params=params, num_examples=1,
+                                   node_id="trainer", counter=counter,
+                                   timestamp=time.time()))
+            counter += 1
+
+        push()
+        node = ServingNode(connect(uri), cfg, poll_interval=0.02)
+        node.start()
+        assert node.wait_until_deployed(300.0), "bench store never deployed"
+        rng = np.random.default_rng(0)
+        prompts = rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)
+        node.generate(prompts, new_tokens=NT)  # compile prefill + decode
+
+        # steady phase: no pushes land, pure decode latency
+        steady_ms = []
+        t0 = time.time()
+        for _ in range(max(3, 3 * trials)):
+            _out, meta = node.generate(prompts, new_tokens=NT)
+            steady_ms += [1e3 * (e - s) for s, e in meta["decode_spans"]]
+        steady_s = time.time() - t0
+
+        # swap phase: the pusher deposits fresh rounds while serving goes on
+        n_push = 20
+        pump = threading.Thread(
+            target=lambda: [(push(), time.sleep(0.05)) for _ in range(n_push)])
+        swap_batches = []
+        pump.start()
+        while pump.is_alive():
+            _out, meta = node.generate(prompts, new_tokens=NT)
+            swap_batches.append(meta["decode_spans"])
+        pump.join()
+        deadline = time.time() + 10.0
+        while node.stats()["swaps"] < 2 and time.time() < deadline:
+            time.sleep(0.05)
+
+        intervals = node.swap_log()
+        during_ms, clear_ms = [], []
+        for spans in swap_batches:
+            for s, e in spans:
+                ms = 1e3 * (e - s)
+                if any(s < i1 and e > i0 for i0, i1 in intervals):
+                    during_ms.append(ms)
+                else:
+                    clear_ms.append(ms)
+        stats = node.stats()
+        node.stop()
+
+        p99_steady = float(np.percentile(steady_ms, 99)) if steady_ms else 0.0
+        p99_during = float(np.percentile(during_ms, 99)) if during_ms else p99_steady
+        results[str(n_params)] = {
+            "arch": cfg.name,
+            "params": n_params,
+            "tokens_per_sec": stats["tokens_per_sec"],
+            "swaps": stats["swaps"],
+            "swap_ms_p50": stats["swap_ms_p50"],
+            "swap_ms_p99": stats["swap_ms_p99"],
+            "staleness_mean": stats["staleness_mean"],
+            "staleness_max": stats["staleness_max"],
+            "decode_ms_p50_steady": round(float(np.percentile(steady_ms, 50)), 3),
+            "decode_ms_p99_steady": round(p99_steady, 3),
+            "decode_ms_p99_during_swap": round(p99_during, 3),
+            "during_swap_samples": len(during_ms),
+            "during_over_steady_p99": round(p99_during / max(p99_steady, 1e-9), 3),
+        }
+        _report(f"serve/N{n_params}/steady", steady_s,
+                f"tok/s={stats['tokens_per_sec']} swap_p99={stats['swap_ms_p99']}ms "
+                f"p99_during/steady={results[str(n_params)]['during_over_steady_p99']}")
+
+    from ._schema import write_bench
+
+    biggest = str(max(int(k) for k in results))
+    ratio = results[biggest]["during_over_steady_p99"]
+    payload = write_bench("BENCH_serve.json", {
+        "batch": B, "prompt_len": S, "new_tokens": NT,
+        "results": results,
+        "acceptance": {
+            "criterion": ("p99 per-token decode latency during hot swaps "
+                          "<= 2x steady-state p99 at the largest size "
+                          "(zero-downtime double buffering, measured)"),
+            "at_params": int(biggest),
+            "during_over_steady_p99": ratio,
+            "passed": ratio <= 2.0,
+        },
+    }, benchmark="serving tier SLOs (throughput, swap latency, staleness)",
+        sizes=sizes)
+    _report("serve/BENCH_serve.json", 0.0,
+            f"acceptance_passed={payload['acceptance']['passed']}")
+
+
 def _timed(fn) -> float:
     t0 = time.time()
     fn()
@@ -1036,6 +1171,7 @@ TABLES = {
     "llm": bench_llm,
     "soak": bench_soak,
     "obs": bench_obs,
+    "serve": bench_serve,
 }
 
 
@@ -1074,6 +1210,10 @@ def main(argv=None) -> None:
                     help="comma-separated param counts for --only obs "
                          "(default 1e6,1e7); e.g. --obs-sizes 200000 for a "
                          "CI smoke run")
+    ap.add_argument("--serve-sizes", default=None,
+                    help="comma-separated param-scale targets for --only "
+                         "serve (default 1e5,1e8 -> smoke + ~95M archs); "
+                         "e.g. --serve-sizes 100000 for a CI smoke run")
     ap.add_argument("--churn", action="store_true",
                     help="with --only soak: also run an elastic-membership "
                          "soak per size (one of three workers killed whole, "
@@ -1102,6 +1242,10 @@ def main(argv=None) -> None:
         elif name == "obs" and args.obs_sizes:
             bench_obs(args.trials,
                       sizes=[int(float(s)) for s in args.obs_sizes.split(",")])
+        elif name == "serve" and args.serve_sizes:
+            bench_serve(args.trials,
+                        sizes=[int(float(s))
+                               for s in args.serve_sizes.split(",")])
         else:
             TABLES[name](args.trials)
 

@@ -10,7 +10,8 @@ import tempfile
 
 import jax
 
-from repro.core import AsyncFederatedNode, FederatedCallback, make_folder, run_threaded
+from repro.api import connect
+from repro.core import AsyncFederatedNode, FederatedCallback, run_threaded
 from repro.core.partition import partition_dataset
 from repro.core.strategies import FedAvg
 from repro.data import batch_iterator, make_synthetic_mnist
@@ -36,7 +37,7 @@ def client(i: int):
         name=f"client{i}",
     )
     # --- the paper's three-line federation setup -------------------------
-    node = AsyncFederatedNode(strategy=FedAvg(), shared_folder=make_folder(shared_dir),
+    node = AsyncFederatedNode(strategy=FedAvg(), store=connect(shared_dir),
                               node_id=f"client{i}")
     callback = FederatedCallback(node, num_examples_per_epoch=STEPS * BATCH)
     # ----------------------------------------------------------------------

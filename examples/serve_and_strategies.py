@@ -12,8 +12,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import connect
 from repro.configs import get_config
-from repro.core import AsyncFederatedNode, InMemoryFolder
+from repro.core import AsyncFederatedNode
 from repro.core.strategies import FedAsync, FedAvg, FedAvgM
 from repro.launch.serve import serve_batch
 from repro.models import build_model
@@ -29,12 +30,14 @@ print(f"  served batch of {out.shape[0]}, {out.shape[1]} new tokens each")
 print(f"  sample continuation: {np.asarray(out)[0].tolist()}")
 
 print("== heterogeneous per-client strategies ==")
-folder = InMemoryFolder()
+# named memory:// URIs share one in-process folder, so each client can open
+# its own store through the facade — same shape as a disk/S3 deployment
+uri = "memory://strategies-demo"
 weights = {"w": np.zeros((4,), np.float32)}
 nodes = {
-    "avg": AsyncFederatedNode(strategy=FedAvg(), shared_folder=folder, node_id="avg"),
-    "asy": AsyncFederatedNode(strategy=FedAsync(alpha=0.5), shared_folder=folder, node_id="asy"),
-    "mom": AsyncFederatedNode(strategy=FedAvgM(momentum=0.5), shared_folder=folder, node_id="mom"),
+    "avg": AsyncFederatedNode(strategy=FedAvg(), store=connect(uri), node_id="avg"),
+    "asy": AsyncFederatedNode(strategy=FedAsync(alpha=0.5), store=connect(uri), node_id="asy"),
+    "mom": AsyncFederatedNode(strategy=FedAvgM(momentum=0.5), store=connect(uri), node_id="mom"),
 }
 vals = {"avg": 0.0, "asy": 3.0, "mom": 6.0}
 for round_ in range(3):

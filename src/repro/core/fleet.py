@@ -75,7 +75,7 @@ from repro.logs import get_logger
 from .node import AsyncFederatedNode
 from .serialize import deserialize_fleet_blob, serialize_fleet_blob
 from .simulation import ProcessSupervisor
-from .store import SharedFolder, WeightStore, make_folder
+from .store import SharedFolder, make_folder
 from .strategies import STRATEGIES, get_strategy
 from .telemetry import Telemetry, collect_obs, telemetry_rollups
 from .transport import normalize_transport, parse_folder_uri
@@ -187,6 +187,16 @@ class FleetSpec:
                              f"options: {sorted(STRATEGIES)}")
         if self.transport is not None:
             normalize_transport(self.transport)
+
+    # -- store access --------------------------------------------------------
+    def connect(self, **kwargs):
+        """Open this spec's data-plane store through the ``repro.api`` facade
+        (the spec's transport is the default; any ``connect()`` kwarg can
+        override or extend it)."""
+        from repro.api import connect  # late: repro.api imports this module
+
+        kwargs.setdefault("transport", self.transport)
+        return connect(self.store_uri, **kwargs)
 
     # -- node naming ---------------------------------------------------------
     def node_id(self, slot: int) -> str:
@@ -816,12 +826,9 @@ def fleet_state_hash(spec_or_uri: "FleetSpec | str") -> str:
     hash exactly what their nodes federate through (fleet/ and state/ control
     blobs excluded)."""
     uri = spec_or_uri.store_uri if isinstance(spec_or_uri, FleetSpec) else spec_or_uri
-    folder = make_folder(uri)
-    from .gossip import ShardedFolders, ShardedWeightStore  # circular-import guard
+    from repro.api import connect  # late: repro.api imports this module
 
-    if isinstance(folder, ShardedFolders):
-        return ShardedWeightStore(folder).state_hash()
-    return WeightStore(folder).state_hash()
+    return connect(uri).state_hash()
 
 
 def wait_all_results(control: SharedFolder, spec: FleetSpec, *,

@@ -341,10 +341,11 @@ def _append_group(uri: str, group: int) -> str:
         return "cache+" + _append_group(uri[len("cache+"):], group)
     if uri.startswith("retry+"):
         return "retry+" + _append_group(uri[len("retry+"):], group)
-    if uri.startswith("memory://"):
-        # memory:// mints a fresh in-process folder per make_folder call;
-        # ShardedFolders caches one instance per group, which is the identity
-        # that matters.
+    if uri == "memory://":
+        # anonymous memory:// mints a fresh in-process folder per make_folder
+        # call; ShardedFolders caches one instance per group, which is the
+        # identity that matters. Named memory://<name> URIs fall through to
+        # the path-suffix branch so each group shares one registry entry.
         return "memory://"
     return uri.rstrip("/") + f"/group{group:04d}"
 
@@ -638,7 +639,10 @@ class ShardedWeightStore:
                         from .transport import parse_folder_uri
 
                         _wrappers, base = parse_folder_uri(uri)
-                        if not base.startswith("memory://"):
+                        # anonymous memory:// has no cross-store identity to
+                        # anchor a roster; named memory://<name> does (shared
+                        # registry), as do disk/s3 bases.
+                        if base != "memory://":
                             self._roster_folder = make_folder(base)
         return self._roster_folder
 

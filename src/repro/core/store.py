@@ -561,6 +561,10 @@ TRANSPORTS = ("full", "quantized", "delta", "delta_q", "topk")
 class WeightStore:
     """Typed view over a SharedFolder: one latest NodeUpdate per node.
 
+    .. note:: New code should open stores through :func:`repro.api.connect`,
+       which validates the full URI/transport grammar in one place and picks
+       the right store kind per URI. This constructor keeps working unchanged.
+
     Implements the push / state-hash-check / pull triad from Algorithm 1.
     ``keep_history`` additionally retains per-counter blobs so experiments can
     audit the full federation trace.
@@ -909,12 +913,22 @@ class WeightStore:
         self._decoded_latest.clear()
 
 
+_MEMORY_REGISTRY: dict[str, "InMemoryFolder"] = {}
+_MEMORY_REGISTRY_LOCK = threading.Lock()
+
+
 def make_folder(uri: str):
     """Folder factory: 'memory://', 's3://bucket/prefix', a local path, or any
     of those behind a read-through cache via a 'cache+' prefix
     (e.g. 'cache+/mnt/shared/exp1', 'cache+s3://bucket/exp1') and/or a
     transient-I/O retry layer via a 'retry+' prefix
     (e.g. 'retry+/mnt/flaky-nfs/exp1', 'cache+retry+s3://bucket/exp1').
+
+    Bare 'memory://' mints a fresh anonymous folder per call; a named
+    'memory://<name>' resolves through a process-global registry, so every
+    store connected to the same name shares one folder — the in-process
+    analogue of a shared mount (what the serving tier and multi-store tests
+    rely on).
 
     A 'shard<G>+<uri>' prefix returns a ``ShardedFolders`` handle — G
     per-group folders of the inner kind (e.g. 'shard16+/mnt/shared/exp1',
@@ -927,6 +941,10 @@ def make_folder(uri: str):
     The URI grammar is the folder-side half of the transport spec grammar;
     ``transport.parse_folder_uri`` owns the parse. Wrappers apply
     outermost-first: 'cache+retry+<base>' caches over the retrying folder.
+
+    .. note:: Most callers want :func:`repro.api.connect`, which wraps this
+       factory and returns a ready store for any URI. ``make_folder`` stays
+       for code that needs the raw folder handle.
     """
     wrappers, base = parse_folder_uri(uri)
     for i, (name, _args) in enumerate(wrappers):
@@ -934,11 +952,20 @@ def make_folder(uri: str):
             if i != 0:
                 raise ValueError(
                     f"shard<G>+ must be the outermost wrapper in {uri!r}")
+            if any(n == "shard" for n, _ in wrappers[1:]):
+                raise ValueError(
+                    f"shard<G>+ may appear only once in {uri!r}")
             from .gossip import ShardedFolders  # circular-import guard
 
             return ShardedFolders.from_uri(uri)
     if base.startswith("memory://"):
-        folder: SharedFolder = InMemoryFolder()
+        name = base[len("memory://"):].strip("/")
+        if name:
+            with _MEMORY_REGISTRY_LOCK:
+                folder: SharedFolder = _MEMORY_REGISTRY.setdefault(
+                    name, InMemoryFolder())
+        else:
+            folder = InMemoryFolder()
     elif base.startswith("s3://"):
         folder = S3Folder(base[len("s3://"):])
     else:

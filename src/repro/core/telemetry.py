@@ -408,6 +408,10 @@ def telemetry_rollups(obs_by_node: dict[str, list[dict[str, Any]]]) -> dict[str,
         transport = last.get("transport") or {}
         counters = last.get("counters") or {}
         nodes[node_id] = {
+            # Serving nodes enrich their payloads with a "serve" dict (SLOs:
+            # swap latency, rounds-behind-store staleness, throughput); its
+            # presence is what distinguishes the serving tier in rollups.
+            "role": "serve" if last.get("serve") else "train",
             "rounds": last.get("rounds", 0),
             # Elastic-fleet churn markers: a node counts node.adopted once
             # when a surviving worker resumes it from a lapsed lease.
@@ -428,6 +432,8 @@ def telemetry_rollups(obs_by_node: dict[str, list[dict[str, Any]]]) -> dict[str,
             ),
             "dropped_spans": last.get("dropped_spans", 0),
         }
+        if last.get("serve"):
+            nodes[node_id]["serve"] = last["serve"]
     fleet: dict[str, Any] = {"nodes_reporting": len(nodes)}
     if nodes:
         vals = list(nodes.values())
@@ -438,6 +444,7 @@ def telemetry_rollups(obs_by_node: dict[str, list[dict[str, Any]]]) -> dict[str,
         fleet["staleness_p90_max"] = max(v["staleness_p90"] for v in vals)
         fleet["bytes_written"] = sum(v["bytes_written"] for v in vals)
         fleet["adoptions"] = sum(1 for v in vals if v["adopted"])
+        fleet["serving_nodes"] = sum(1 for v in vals if v["role"] == "serve")
         phase_names = sorted({name for v in vals for name in v["phase_ms"]})
         fleet["phase_ms"] = {
             name: round(

@@ -65,10 +65,15 @@ class LeafSpec:
         leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
         paths, shapes, dtypes = [], [], []
         for path, leaf in leaves_with_paths:
-            arr = np.asarray(leaf)
+            # shape/dtype attributes cover arrays AND abstract values
+            # (jax.eval_shape output) without forcing a device transfer
+            shape, dtype = getattr(leaf, "shape", None), getattr(leaf, "dtype", None)
+            if shape is None or dtype is None:
+                arr = np.asarray(leaf)
+                shape, dtype = arr.shape, arr.dtype
             paths.append(path_str(path))
-            shapes.append(arr.shape)
-            dtypes.append(arr.dtype)
+            shapes.append(shape)
+            dtypes.append(dtype)
         return cls(paths, shapes, dtypes, treedef)
 
     def compatible(self, other: "LeafSpec | None") -> bool:

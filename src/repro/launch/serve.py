@@ -16,13 +16,44 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch.steps import make_serve_step
+from repro.launch.steps import make_bulk_prefill_step, make_serve_step
 from repro.models import build_model
 from repro.models.frontends import stub_audio_frames, stub_patch_embeddings
 
 
 def serve_batch(cfg, params, prompts, *, new_tokens: int, frames=None, embeds=None):
-    """prompts: (B, S) int32 → (B, new_tokens) greedy continuations."""
+    """prompts: (B, S) int32 → (B, new_tokens) greedy continuations.
+
+    One jitted ``bulk_prefill_step`` fills the decode cache from the whole
+    prompt (its argmax IS the first generated token), then ``serve_step``
+    extends one token at a time. ``embeds`` (VLM prefix) shifts decode
+    positions past the prefix.
+    """
+    model = build_model(cfg)
+    B, S = prompts.shape
+    n_prefix = 0 if embeds is None else embeds.shape[1]
+    capacity = n_prefix + S + new_tokens
+    if cfg.is_encdec:
+        cache = model.init_cache(params, frames, capacity=capacity)
+    else:
+        cache = model.init_cache(B, capacity=capacity)
+    prefill = jax.jit(make_bulk_prefill_step(cfg))
+    serve_step = jax.jit(make_serve_step(cfg))
+
+    tok, cache = prefill(params, prompts, cache) if embeds is None else prefill(
+        params, prompts, cache, embeds
+    )
+    out = [tok]
+    for t in range(1, new_tokens):
+        tok, cache = serve_step(params, tok, cache, jnp.int32(n_prefix + S - 1 + t))
+        out.append(tok)
+    return jnp.stack(out, axis=1)
+
+
+def serve_batch_loop(cfg, params, prompts, *, new_tokens: int, frames=None):
+    """Token-at-a-time reference: the prompt is pushed through ``serve_step``
+    one position at a time. Kept as the equivalence oracle for ``serve_batch``
+    (tests assert identical continuations) and for archs mid-bringup."""
     model = build_model(cfg)
     B, S = prompts.shape
     capacity = S + new_tokens
@@ -32,9 +63,6 @@ def serve_batch(cfg, params, prompts, *, new_tokens: int, frames=None, embeds=No
         cache = model.init_cache(B, capacity=capacity)
     serve_step = jax.jit(make_serve_step(cfg))
 
-    # prefill via repeated decode (single-token prefill keeps one code path
-    # for every arch family; the bulk prefill_step exists for the dry-run)
-    tok = prompts[:, 0]
     for t in range(1, S):
         _, cache = serve_step(params, prompts[:, t - 1], cache, jnp.int32(t - 1))
     out = []

@@ -83,6 +83,27 @@ def make_prefill_step(cfg: ModelConfig) -> Callable:
     return prefill_step
 
 
+def make_bulk_prefill_step(cfg: ModelConfig, *, window_override: int | None = None) -> Callable:
+    """Cache-filling bulk prefill for serving: one full-sequence pass fills a
+    fresh decode cache (``model.prefill``) and returns the greedy next token —
+    the fused replacement for feeding a prompt through ``serve_step`` one
+    token at a time. (``make_prefill_step`` is the cache-less dry-run probe.)
+    """
+    model = build_model(cfg)
+
+    def bulk_prefill_step(params, tokens, cache, extra_embeds=None):
+        if cfg.is_encdec:
+            logits, cache = model.prefill(params, tokens, cache, window_override=window_override)
+        else:
+            logits, cache = model.prefill(
+                params, tokens, cache, extra_embeds, window_override=window_override
+            )
+        next_token = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+        return next_token, cache
+
+    return bulk_prefill_step
+
+
 def make_serve_step(cfg: ModelConfig, *, window_override: int | None = None) -> Callable:
     model = build_model(cfg)
 

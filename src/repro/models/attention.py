@@ -167,6 +167,20 @@ def _project_qkv(p: dict, cfg: ModelConfig, x: jnp.ndarray, positions: jnp.ndarr
     return q, k, v
 
 
+def _full_causal_out(cfg: ModelConfig, qg, k, v, *, window: int, use_flash: bool):
+    """Full-sequence causal dispatch shared by attn_full / attn_prefill."""
+    S = qg.shape[1]
+    if use_flash and cfg.attn_logit_softcap == 0:
+        from repro.kernels.flash_attention import ops as flash_ops
+
+        return flash_ops.flash_attention(qg, k, v, window=window)
+    if S > CHUNKED_THRESHOLD:
+        return chunked_sdpa(qg, k, v, causal=True, window=window,
+                            softcap=cfg.attn_logit_softcap, qblock=cfg.attn_qblock,
+                            probs_bf16=cfg.attn_probs_bf16)
+    return _sdpa(qg, k, v, causal_mask(S, window), cfg.attn_logit_softcap)
+
+
 def attn_full(
     p: dict, cfg: ModelConfig, x: jnp.ndarray, *, window: int | None = None,
     use_flash: bool = False,
@@ -178,19 +192,28 @@ def attn_full(
     q, k, v = _project_qkv(p, cfg, x, positions)
     G = cfg.n_heads // cfg.n_kv_heads
     qg = q.reshape(B, S, cfg.n_kv_heads, G, cfg.head_dim_)
-    if use_flash and cfg.attn_logit_softcap == 0:
-        from repro.kernels.flash_attention import ops as flash_ops
-
-        out = flash_ops.flash_attention(qg, k, v, window=window)
-    elif S > CHUNKED_THRESHOLD:
-        out = chunked_sdpa(qg, k, v, causal=True, window=window,
-                           softcap=cfg.attn_logit_softcap, qblock=cfg.attn_qblock,
-                           probs_bf16=cfg.attn_probs_bf16)
-    else:
-        mask = causal_mask(S, window)
-        out = _sdpa(qg, k, v, mask, cfg.attn_logit_softcap)
+    out = _full_causal_out(cfg, qg, k, v, window=window, use_flash=use_flash)
     out = out.reshape(B, S, cfg.n_heads * cfg.head_dim_)
     return dense_apply(p["wo"], out)
+
+
+def fill_ring(cache: dict, entries: dict, seq: int) -> dict:
+    """Scatter a length-``seq`` prefix (positions 0..seq-1) into a ring cache.
+
+    Only the last min(seq, capacity) positions survive — exactly the state a
+    token-at-a-time decode loop would have left behind after wrapping.
+    Restricting the scatter to those positions keeps slot indices unique, so
+    the update never depends on duplicate-index ordering.
+    """
+    capacity = cache["slot_pos"].shape[0]
+    keep = min(seq, capacity)
+    pos = jnp.arange(seq - keep, seq, dtype=jnp.int32)
+    slots = pos % capacity
+    out = dict(cache)
+    for name, val in entries.items():
+        out[name] = cache[name].at[:, slots].set(val[:, seq - keep:].astype(cache[name].dtype))
+    out["slot_pos"] = cache["slot_pos"].at[slots].set(pos)
+    return out
 
 
 def init_attn_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=None) -> dict:
@@ -236,6 +259,26 @@ def attn_decode(
         out = _sdpa(qg, cache["k"], cache["v"], valid[None, None, :], cfg.attn_logit_softcap)
     out = out.reshape(B, 1, cfg.n_heads * hd)
     return dense_apply(p["wo"], out), cache
+
+
+def attn_prefill(
+    p: dict, cfg: ModelConfig, x: jnp.ndarray, cache: dict,
+    *, window: int | None = None, use_flash: bool = False,
+) -> tuple[jnp.ndarray, dict]:
+    """``attn_full`` that also fills the decode ring cache — serving's bulk
+    prefill. Equivalent to pushing the prompt through ``attn_decode`` one
+    token at a time (same projections, same rope positions, same ring
+    occupancy) at full-sequence matmul cost. ``cache`` must be fresh
+    (``init_attn_cache``); positions start at 0."""
+    B, S, _ = x.shape
+    window = cfg.sliding_window if window is None else window
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    G = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, S, cfg.n_kv_heads, G, cfg.head_dim_)
+    out = _full_causal_out(cfg, qg, k, v, window=window, use_flash=use_flash)
+    out = dense_apply(p["wo"], out.reshape(B, S, cfg.n_heads * cfg.head_dim_))
+    return out, fill_ring(cache, {"k": k, "v": v}, S)
 
 
 # ---------------------------------------------------------------------------
@@ -412,3 +455,16 @@ def mla_decode(
         out = jnp.einsum("bhsc,bchd->bshd", probs, v.astype(jnp.float32))
     out = out.astype(x.dtype).reshape(B, 1, H * cfg.v_head_dim)
     return dense_apply(p["wo"], out), cache
+
+
+def mla_prefill(
+    p: dict, cfg: ModelConfig, x: jnp.ndarray, cache: dict,
+    *, window: int | None = None,
+) -> tuple[jnp.ndarray, dict]:
+    """``mla_full`` that also fills the latent decode cache. The latent
+    projection is recomputed for the ring fill — two thin matmuls
+    (d_model → kv_rank / rope_dim), noise next to the attention itself."""
+    out = mla_full(p, cfg, x, window=window)
+    positions = jnp.arange(x.shape[1])[None, :]
+    c_kv, k_rope = _mla_latent(p, cfg, x, positions)
+    return out, fill_ring(cache, {"c_kv": c_kv, "k_rope": k_rope}, x.shape[1])

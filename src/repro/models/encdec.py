@@ -190,3 +190,28 @@ class EncDecLM:
         x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
         logits = unembed_apply(params["embed"], x[:, 0])
         return logits, {**cache, "self": new_self}
+
+    def prefill(self, params, tokens, cache, *, window_override: int | None = None):
+        """Bulk decoder prefill against the precomputed encoder memory: one
+        full-sequence pass fills a fresh self-attention ring cache →
+        (last-position logits, cache)."""
+        cfg = self.cfg
+        x = embedding_apply(params["embed"], tokens) * jnp.asarray(cfg.d_model**0.5, cfg.jdtype)
+
+        def body(x, scanned):
+            p, self_cache, ck, cv = scanned
+            h = rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
+            a, self_cache = attn_mod.attn_prefill(p["self_attn"], cfg, h, self_cache,
+                                                  window=window_override)
+            x = x + a
+            h = rmsnorm_apply(p["norm_x"], x, cfg.norm_eps)
+            x = x + _cross_attend(p["cross"], cfg, h, ck, cv)
+            h = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
+            return x + mlp_apply(p["mlp"], h, cfg.activation), self_cache
+
+        x, new_self = jax.lax.scan(
+            body, x, (params["dec_layers"], cache["self"], cache["cross_k"], cache["cross_v"])
+        )
+        x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+        logits = unembed_apply(params["embed"], x[:, -1])
+        return logits, {**cache, "self": new_self}

@@ -94,3 +94,21 @@ def rglru_decode(p: dict, cfg: ModelConfig, x: jnp.ndarray, cache: dict) -> tupl
     h = a[:, 0] * cache["h"] + b[:, 0]
     out = dense_apply(p["w_out"], h[:, None].astype(x.dtype) * gate)
     return out, {"conv": window[:, 1:], "h": h}
+
+
+def rglru_prefill(p: dict, cfg: ModelConfig, x: jnp.ndarray, cache: dict) -> tuple[jnp.ndarray, dict]:
+    """``rglru_full`` that also produces the decode cache — serving's bulk
+    prefill: associative scan seeded with the cached h, depthwise conv over
+    the cached raw-u window (zeros == fresh). x: (B,S,D)."""
+    B, S, _ = x.shape
+    gate = jax.nn.gelu(dense_apply(p["w_gate"], x), approximate=True)
+    u = dense_apply(p["w_rec"], x)
+    K = cfg.conv1d_width
+    window = jnp.concatenate([cache["conv"].astype(u.dtype), u], axis=1)  # (B,K-1+S,dr)
+    conv_out = jax.nn.silu(
+        sum(window[:, i : i + S] * p["conv_w"][i] for i in range(K)) + p["conv_b"]
+    )
+    a, b = _gates(p, cfg, conv_out)
+    h = rglru_scan(a, b, h0=cache["h"])
+    out = dense_apply(p["w_out"], h.astype(x.dtype) * gate)
+    return out, {"conv": window[:, S:], "h": h[:, -1]}

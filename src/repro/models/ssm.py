@@ -219,3 +219,32 @@ def mamba2_decode(p: dict, cfg: ModelConfig, x: jnp.ndarray, cache: dict) -> tup
     y = y.reshape(B, 1, d_inner).astype(x.dtype)
     y = rmsnorm_apply(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
     return dense_apply(p["out_proj"], y), {"conv": new_conv, "ssm": h}
+
+
+def mamba2_prefill(p: dict, cfg: ModelConfig, x: jnp.ndarray, cache: dict) -> tuple[jnp.ndarray, dict]:
+    """``mamba2_full`` that also produces the decode cache — serving's bulk
+    prefill. ``ssd_chunked`` already tracks the final SSM state (the full
+    path discards it); the conv cache is the trailing (ssm_conv-1) raw xBC
+    rows. Seeds from ``cache`` (zeros == fresh), so the result matches the
+    recurrence ``mamba2_decode`` would have run token by token."""
+    B, S, _ = x.shape
+    d_inner, H, N = _dims(cfg)
+    z, xBC, dt_raw = _project_in(p, cfg, x)
+    K = cfg.ssm_conv
+    window = jnp.concatenate([cache["conv"].astype(xBC.dtype), xBC], axis=1)  # (B,K-1+S,C)
+    conv_out = jax.nn.silu(
+        sum(window[:, i : i + S] * p["conv_w"][i] for i in range(K)) + p["conv_b"]
+    )
+    xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, S, H, cfg.ssm_head_dim)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+    dA = dt * A
+    Bh = jnp.broadcast_to(Bm[:, :, None, :], (B, S, H, N))
+    Ch = jnp.broadcast_to(Cm[:, :, None, :], (B, S, H, N))
+    y, final_state = ssd_chunked(xdt, dA, Bh, Ch, cfg.ssm_chunk, initial_state=cache["ssm"])
+    y = y + xh * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm_apply(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return dense_apply(p["out_proj"], y), {"conv": window[:, S:], "ssm": final_state}

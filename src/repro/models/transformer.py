@@ -146,6 +146,36 @@ def _apply_block_decode(p, cfg: ModelConfig, kind: str, x, cache, pos, *, window
     raise ValueError(kind)
 
 
+def _apply_block_prefill(p, cfg: ModelConfig, kind: str, x, cache, *, window_override=None):
+    """Full-sequence forward that also fills the block's decode cache —
+    ``_apply_block_decode``'s contract ((x, cache) in/out) at
+    ``_apply_block_full``'s cost. ``cache`` must be fresh."""
+    if kind in ("attn", "moe_attn"):
+        h = rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
+        if cfg.attention == "mla" and kind == "attn":
+            a, cache = attn_mod.mla_prefill(p["attn"], cfg, h, cache, window=window_override)
+        else:
+            a, cache = attn_mod.attn_prefill(p["attn"], cfg, h, cache, window=window_override)
+        x = x + a
+        h = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
+        if kind == "moe_attn":
+            out, _ = moe_mod.moe_apply(p["moe"], cfg, h)
+        else:
+            out = mlp_apply(p["mlp"], h, cfg.activation)
+        return x + out, cache
+    if kind == "ssm":
+        h = rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
+        out, cache = ssm_mod.mamba2_prefill(p["ssm"], cfg, h, cache)
+        return x + out, cache
+    if kind == "rglru":
+        h = rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
+        out, cache = rglru_mod.rglru_prefill(p["rglru"], cfg, h, cache)
+        x = x + out
+        h = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
+        return x + mlp_apply(p["mlp"], h, cfg.activation), cache
+    raise ValueError(kind)
+
+
 # ---------------------------------------------------------------------------
 # Model
 # ---------------------------------------------------------------------------
@@ -287,4 +317,41 @@ class DecoderLM:
             new_cache["tail"] = new_tail
         x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
         logits = unembed_apply(params.get("unembed", params["embed"]), x[:, 0])
+        return logits, new_cache
+
+    def prefill(self, params, tokens, cache, extra_embeds=None, *, window_override=None):
+        """Bulk prefill: one full-sequence pass that fills a *fresh* decode
+        cache (``init_cache``) and returns the last position's logits — the
+        serving replacement for feeding a prompt through ``decode_step`` one
+        token at a time. Positions start at 0 (the VLM prefix, if any,
+        occupies positions 0..P-1). → (logits (B, padded_vocab), cache)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, extra_embeds)
+
+        def group_body(x, scanned):
+            group_params, group_cache = scanned
+            new_cache = {}
+            for u, kind in enumerate(self.pattern):
+                key = f"u{u}_{kind}"
+                x, new_cache[key] = _apply_block_prefill(
+                    group_params[key], cfg, kind, x, group_cache[key],
+                    window_override=window_override,
+                )
+            return x, new_cache
+
+        tail_cache = cache.get("tail") if isinstance(cache, dict) else None
+        scan_cache = {k: v for k, v in cache.items() if k != "tail"}
+        x, new_cache = jax.lax.scan(group_body, x, (params["blocks"], scan_cache))
+        new_cache = dict(new_cache)
+        if self.tail:
+            new_tail = {}
+            for i, kind in enumerate(self.tail):
+                key = f"t{i}_{kind}"
+                x, new_tail[key] = _apply_block_prefill(
+                    params["tail"][key], cfg, kind, x, tail_cache[key],
+                    window_override=window_override,
+                )
+            new_cache["tail"] = new_tail
+        x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+        logits = unembed_apply(params.get("unembed", params["embed"]), x[:, -1])
         return logits, new_cache

@@ -11,7 +11,9 @@ and adding nothing to the data path::
 
 ``watch`` prints a per-node table: round rate, update staleness (the FedAsync
 signal), bytes moved, round-phase latencies, and flags stragglers (round rate
-under half the fleet median). ``trace`` merges every node's span ring into
+under half the fleet median). Serving-tier nodes (``repro.api.serve``) show up
+in their own SERVE table — deploys, tokens/sec, rounds-behind-store staleness,
+swap-latency percentiles — fed purely from the same store blobs. ``trace`` merges every node's span ring into
 one Chrome trace-event JSON — open it at https://ui.perfetto.dev (or
 chrome://tracing) to see the fleet's pull/decode/aggregate/encode/push/train
 phases on a single timeline.
@@ -36,19 +38,24 @@ def render_dashboard(obs_by_node: dict, *, printer=print) -> dict:
         printer("[obs] no obs/ blobs found — is telemetry enabled? "
                 "(REPRO_OBS=1 or telemetry=True on the node)")
         return rollups
-    rates = sorted(v["rounds_per_sec"] for v in nodes.values())
+    # Serving nodes report SLOs, not training rounds — split them out so they
+    # get their own table and don't drag the straggler median down.
+    serving = {n: v for n, v in nodes.items() if v.get("role") == "serve"}
+    trainers = {n: v for n, v in nodes.items() if n not in serving}
+    rates = sorted(v["rounds_per_sec"] for v in trainers.values()) or [0.0]
     median_rate = rates[len(rates) // 2]
     churn = fleet.get("adoptions", 0)
     printer(f"[obs] {fleet['nodes_reporting']} nodes reporting, "
             f"{fleet.get('rounds_total', 0)} rounds total, "
             f"fleet staleness mean {fleet.get('staleness_mean', 0.0):.2f}"
-            + (f", {churn} adopted" if churn else ""))
+            + (f", {churn} adopted" if churn else "")
+            + (f", {len(serving)} serving" if serving else ""))
     header = (f"{'node':<14} {'rounds':>6} {'r/s':>6} {'stale(mean/p90)':>16} "
               f"{'MB w/r':>12} {'pull':>8} {'push':>8} {'agg':>8} {'train':>8} "
               f"{'churn':>6} flags")
     printer(header)
     stragglers = []
-    for node_id, v in nodes.items():
+    for node_id, v in trainers.items():
         phase = v["phase_ms"]
         flags = []
         if median_rate > 0 and v["rounds_per_sec"] < 0.5 * median_rate:
@@ -71,6 +78,22 @@ def render_dashboard(obs_by_node: dict, *, printer=print) -> dict:
     if stragglers:
         printer(f"stragglers (< 0.5x median {median_rate:.2f} r/s): "
                 + ", ".join(stragglers))
+    if serving:
+        printer(f"{'node':<14} {'deploys':>7} {'tok/s':>8} {'stale(mean/max)':>16} "
+                f"{'swap p50/p99 ms':>16} flags")
+        for node_id, v in serving.items():
+            s = v["serve"]
+            flags = ["SERVE"]
+            if not s.get("deployed"):
+                flags.append("WAITING")
+            if s.get("skipped_incompatible"):
+                flags.append(f"skipped={s['skipped_incompatible']}")
+            printer(
+                f"{node_id:<14} {s.get('swaps', 0):>7} "
+                f"{s.get('tokens_per_sec', 0.0):>8.1f} "
+                f"{s.get('staleness_mean', 0.0):>8.2f}/{s.get('staleness_max', 0.0):<7.2f} "
+                f"{s.get('swap_ms_p50', 0.0):>7.1f}/{s.get('swap_ms_p99', 0.0):<8.1f} "
+                f"{' '.join(flags)}")
     return rollups
 
 

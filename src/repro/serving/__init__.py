@@ -1,0 +1,18 @@
+"""Serving tier: continuous deployment from the federation store to live
+batched inference.
+
+The store is the only coordination primitive here, exactly as in training:
+a :class:`StoreWatcher` polls the store's ``latest/`` listings read-only and
+picks the freshest aggregated weights it can see; a :class:`ServingNode`
+decodes them into a preallocated flat standby buffer, hot-swaps with
+zero-downtime double buffering, and serves batched greedy decode through the
+same jitted ``serve_step`` the launch layer uses. SLOs (staleness in rounds,
+swap latency) flow back into the store as ``obs/`` blobs, so
+``python -m repro.obs watch`` shows the serving fleet next to the trainers.
+
+Public entry points: ``repro.api.serve`` and ``python -m repro.serve``.
+"""
+from .node import ServingNode
+from .watcher import Deployment, StoreWatcher
+
+__all__ = ["Deployment", "ServingNode", "StoreWatcher"]
